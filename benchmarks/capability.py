@@ -1,0 +1,33 @@
+"""Fig 11 (a, b): Units of Work and execution latency vs number of
+continuous queries, for the four systems.  The memory wall reproduces
+Replicated's collapse at high |Q| (paper: >16M; scaled here)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import CFG, SYSTEMS, emit, run_system
+
+QUERY_COUNTS = (1000, 2000, 4000, 8000, 16000)
+
+
+def run() -> dict:
+    out = {}
+    for q in QUERY_COUNTS:
+        for name in SYSTEMS:
+            m, wall = run_system(name, "none", ticks=60, preload=q,
+                                 query_burst=0)
+            a = m.asarrays()
+            uow = float(a["units_of_work"].mean()) if not m.infeasible else 0.0
+            lat = float(np.mean(a["latency"])) if not m.infeasible else np.inf
+            out[(name, q)] = (uow, lat, m.infeasible)
+            emit(f"fig11a/{name}/q={q}", wall / 60 * 1e6,
+                 f"uow={uow:.3e} infeasible={m.infeasible}")
+            emit(f"fig11b/{name}/q={q}", wall / 60 * 1e6, f"lat={lat:.3f}")
+    # headline: SWARM vs history grid over |Q| where both are feasible
+    ratios = [out[("swarm", q)][0] / out[("static_history", q)][0]
+              for q in QUERY_COUNTS
+              if not out[("swarm", q)][2] and not out[("static_history", q)][2]
+              and out[("static_history", q)][0] > 0]
+    emit("fig11/summary/swarm_vs_history", 0.0,
+         f"mean_uow_ratio={np.mean(ratios):.2f}x over {len(ratios)} feasible |Q|")
+    return out

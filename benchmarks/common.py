@@ -1,0 +1,45 @@
+"""Shared benchmark scaffolding: the four systems of §6 at simulation
+scale, plus CSV emission helpers."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.streaming import (EngineConfig, ReplicatedRouter,
+                             StaticHistoryRouter, StaticUniformRouter,
+                             SwarmRouter, TwitterLikeSource, run_experiment,
+                             scenario)
+
+G, M = 64, 8
+CFG = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20_000,
+                   mem_queries=12_000)
+SYSTEMS = ("replicated", "static_uniform", "static_history", "swarm")
+
+
+def make_router(name: str, *, beta: int = 8, seed: int = 1):
+    if name == "replicated":
+        return ReplicatedRouter(M, G)
+    if name == "static_uniform":
+        return StaticUniformRouter(G, M)
+    if name == "static_history":
+        base = TwitterLikeSource(seed=seed)
+        return StaticHistoryRouter(G, M, base.sample_points(4000),
+                                   base.sample_queries(2000), rounds=20)
+    if name == "swarm":
+        return SwarmRouter(G, M, beta=beta)
+    raise ValueError(name)
+
+
+def run_system(name: str, scen: str, *, ticks: int = 90, preload: int = 3000,
+               query_burst: int = 500, cfg: EngineConfig = CFG, seed: int = 0):
+    src = scenario(scen, seed=seed, horizon=ticks, query_burst=query_burst)
+    t0 = time.perf_counter()
+    metrics = run_experiment(make_router(name), src, ticks=ticks,
+                             preload_queries=preload, config=cfg, seed=seed)
+    wall = time.perf_counter() - t0
+    return metrics, wall
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

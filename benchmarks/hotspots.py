@@ -1,0 +1,32 @@
+"""Figs 12–16: the five hotspot scenarios.  Reports mean Units of Work
+over the full timeline and inside the hotspot window, per system."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import SYSTEMS, emit, run_system
+
+SCENARIOS = {
+    "fig12_uniform_normal": "uniform_normal",
+    "fig13_normal_normal": "normal_normal",
+    "fig14_uniform_step": "uniform_step",
+    "fig15_two_overlapping": "two_overlapping",
+    "fig16_two_consecutive": "two_consecutive",
+}
+TICKS = 90
+
+
+def run() -> dict:
+    out = {}
+    lo, hi = TICKS // 3, 2 * TICKS // 3   # hotspot occupies middle third
+    for fig, scen in SCENARIOS.items():
+        for name in SYSTEMS:
+            m, wall = run_system(name, scen, ticks=TICKS)
+            uow = np.asarray(m.units_of_work, float)
+            out[(fig, name)] = uow
+            emit(f"{fig}/{name}", wall / TICKS * 1e6,
+                 f"uow_mean={uow.mean():.3e} uow_hotspot={uow[lo:hi].mean():.3e}")
+        ratio = (out[(fig, 'swarm')][lo:hi].mean()
+                 / max(out[(fig, 'static_history')][lo:hi].mean(), 1e-9))
+        emit(f"{fig}/summary", 0.0, f"swarm_vs_history_hotspot={ratio:.2f}x")
+    return out

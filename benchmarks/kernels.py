@@ -1,0 +1,59 @@
+"""Kernel benchmarks: jitted-oracle throughput on this host (the Pallas
+kernels themselves are TPU-targeted; interpret mode is correctness-only
+and its timing is reported separately for completeness)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import attention_ref
+from repro.kernels.moe_histogram import moe_histogram_ref
+from repro.kernels.spatial_match import spatial_match, spatial_match_ref
+from repro.kernels.stats_update import close_round_ref
+
+from .common import emit
+
+
+def _time(fn, n=10):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+
+    pts = jnp.asarray(rng.uniform(0, 1, (4096, 2)), jnp.float32)
+    c = rng.uniform(0, 0.9, (2048, 2))
+    rects = jnp.asarray(np.concatenate([c, c + 0.02], 1), jnp.float32)
+    ref = jax.jit(spatial_match_ref)
+    t = _time(lambda: ref(pts, rects))
+    emit("kernels/spatial_match_ref_4k_x_2k", t,
+         f"checks_per_us={4096 * 2048 / t:.0f}")
+    t_i = _time(lambda: spatial_match(pts[:256], rects[:256], interpret=True), 2)
+    emit("kernels/spatial_match_interpret_256", t_i, "correctness-mode")
+
+    bank = jnp.asarray(rng.uniform(0, 5, (8, 64, 1024)), jnp.float32)
+    refc = jax.jit(lambda b: close_round_ref(b, 0.5))
+    emit("kernels/stats_update_ref_64x1024", _time(lambda: refc(bank)),
+         "Algorithm 2, 64 partitions")
+
+    q = jnp.asarray(rng.normal(0, 1, (1, 8, 512, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 512, 64)), jnp.bfloat16)
+    refa = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    t = _time(lambda: refa(q, k, k))
+    emit("kernels/flash_attention_ref_512", t,
+         f"flops_per_us={2 * 2 * 8 * 512 * 512 * 64 / t:.0f}")
+
+    idx = jnp.asarray(rng.integers(0, 64, (8192, 6)), jnp.int32)
+    gates = jnp.asarray(rng.uniform(0, 1, (8192, 6)), jnp.float32)
+    refm = jax.jit(lambda i, g: moe_histogram_ref(i, g, 64))
+    emit("kernels/moe_histogram_ref_8k", _time(lambda: refm(idx, gates)),
+         "SWARM N' collector for experts")
+    return out

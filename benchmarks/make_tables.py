@@ -1,0 +1,111 @@
+"""Render EXPERIMENTS.md tables from dry-run artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.make_tables [baseline_dir] [final_dir]
+"""
+import glob
+import json
+import os
+import sys
+
+
+def load(d):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_row(r):
+    if r["status"] == "skip":
+        return None
+    if r["status"] != "ok":
+        return f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | | | | | |"
+    rl = r["roofline"]
+    m = r["memory"]
+    return ("| {a} | {s} | {mesh} | {tc:.3g} | {tm:.3g} | {tl:.3g} | {dom} "
+            "| {frac:.2f} | {peak:.1f} |").format(
+        a=r["arch"], s=r["shape"], mesh=r["mesh"], tc=rl["t_compute"],
+        tm=rl["t_memory"], tl=rl["t_collective"],
+        dom=rl["dominant"], frac=rl.get("achievable_flops_frac", 0),
+        peak=m["peak_hbm_bytes"] / 2**30)
+
+
+def table(recs, mesh_filter=None):
+    head = ("| arch | shape | mesh | t_compute (s) | t_memory (s) | "
+            "t_collective (s) | dominant | flops-frac | peak GiB/dev |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    rows = [head]
+    skips = []
+    for key in sorted(recs):
+        r = recs[key]
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        row = fmt_row(r)
+        if row is None:
+            skips.append(f"* {r['arch']} × {r['shape']}: {r['reason']}")
+        else:
+            rows.append(row)
+    return "\n".join(rows), sorted(set(skips))
+
+
+def dryrun_table(recs, mesh):
+    head = ("| arch | shape | compile s | peak GiB/dev | collective ops | "
+            "collective GiB/dev/step | useful-flops frac |\n"
+            "|---|---|---|---|---|---|---|")
+    rows = [head]
+    for key in sorted(recs):
+        r = recs[key]
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('compile_s', 0)} "
+            f"| {r['memory']['peak_hbm_bytes'] / 2**30:.1f} "
+            f"| {rl['collective_op_count']} "
+            f"| {rl['collective_bytes_per_device'] / 2**30:.2f} "
+            f"| {r['model']['useful_fraction']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    base_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    final_dir = sys.argv[2] if len(sys.argv) > 2 else "artifacts/dryrun_final"
+    base = load(base_dir)
+    final = load(final_dir)
+    print("### Dry-run (single-pod 16×16) — optimized configuration\n")
+    print(dryrun_table(final, "16x16"))
+    print("\n### Dry-run (multi-pod 2×16×16 = 512 chips)\n")
+    print(dryrun_table(final, "2x16x16"))
+    print("\n### Roofline — paper-faithful baseline (16×16)\n")
+    t, skips = table(base, "16x16")
+    print(t)
+    print("\nSkips:\n" + "\n".join(skips))
+    print("\n### Roofline — optimized (16×16)\n")
+    t, _ = table(final, "16x16")
+    print(t)
+    print("\n### Roofline — optimized (2×16×16)\n")
+    t, _ = table(final, "2x16x16")
+    print(t)
+    # before/after deltas
+    print("\n### Baseline → optimized deltas (16×16)\n")
+    print("| arch | shape | peak GiB | t_dominant (s) | dominant |")
+    print("|---|---|---|---|---|")
+    for key in sorted(base):
+        a, s, mesh = key
+        if mesh != "16x16" or base[key]["status"] != "ok":
+            continue
+        b, f = base[key], final.get(key)
+        if not f or f["status"] != "ok":
+            continue
+        bd = b["roofline"]["step_time_bound_s"]
+        fd = f["roofline"]["step_time_bound_s"]
+        print(f"| {a} | {s} "
+              f"| {b['memory']['peak_hbm_bytes']/2**30:.1f} → "
+              f"{f['memory']['peak_hbm_bytes']/2**30:.1f} "
+              f"| {bd:.3g} → {fd:.3g} "
+              f"| {b['roofline']['dominant']} → {f['roofline']['dominant']} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Figs 18–19: per-operation overheads of SWARM's own machinery,
+measured as µs/op on this host (relative magnitudes mirror the paper:
+routing ≪ stats update ≪ reduction search ≪ plan install)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Swarm, balancer, cost_model
+from repro.core import statistics as S
+
+from .common import emit
+
+
+def _time(fn, n=20):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    sw = Swarm(grid_size=256, num_machines=22, decay=1.0, beta=2)
+    pts = rng.uniform(0, 1, (10_000, 2)).astype(np.float32)
+    qc = rng.uniform(0, 0.9, (500, 2)).astype(np.float32)
+    rects = np.concatenate([qc, qc + 0.02], 1)
+    out = {}
+
+    # Fig 18-(1): GlobalIndex routing (per object)
+    t = _time(lambda: sw.ingest_points(pts))
+    out["route_point"] = t / len(pts)
+    emit("fig18_1/route_point", out["route_point"], "per-object route+collect")
+
+    t = _time(lambda: sw.ingest_queries(rects), n=5)
+    emit("fig18_1/route_query", t / len(rects), "per-query route+collect")
+
+    # Fig 19-(2): close round + cost + report (executor side)
+    def round_close():
+        st = sw.stats.copy()
+        S.close_round(st, 0.5)
+    emit("fig19_2/stats_close_round", _time(round_close, 10), "Algorithm 2")
+
+    # Fig 18-(3): Coordinator rank machines from 2-scalar reports
+    reports = [cost_model.CostReport(m, float(rng.uniform(1, 100)),
+                                     float(rng.uniform(1, 100)))
+               for m in range(22)]
+    emit("fig18_3/coordinator_rank", _time(
+        lambda: cost_model.rank_machines(reports), 200), "rank 22 machines")
+
+    # Fig 19-(3): find workload reduction (subset + split search)
+    sw2 = Swarm(grid_size=256, num_machines=4, decay=1.0, beta=2)
+    sw2.ingest_points(rng.uniform(0, 0.3, (20000, 2)).astype(np.float32))
+    qc2 = rng.uniform(0, 0.3, (400, 2)).astype(np.float32)
+    sw2.ingest_queries(np.concatenate([qc2, qc2 + 0.02], 1))
+    S.close_round(sw2.stats, 1.0)
+    p = sw2.index.parts
+    live = p.live_ids()
+    n = sw2.stats.rows[S.N, live, p.r1[live]]
+    q = sw2.stats.rows[S.Q, live, p.r1[live]]
+    r = sw2.stats.rows[S.R, live, p.r1[live]]
+    costs = n * q * r
+    boxes = {int(k): (int(p.r0[k]), int(p.c0[k]), int(p.r1[k]), int(p.c1[k]))
+             for k in live}
+    emit("fig19_3/find_reduction_vectorized", _time(
+        lambda: balancer.find_workload_reduction(
+            sw2.stats, live, costs, boxes, float(costs.max()), 0.0, 1.0), 50),
+        "subset+split search (vectorized argmin)")
+    emit("fig19_3/find_reduction_binary", _time(
+        lambda: balancer.find_workload_reduction(
+            sw2.stats, live, costs, boxes, float(costs.max()), 0.0, 1.0,
+            use_binary_search=True), 50),
+        "subset+split search (paper binary search)")
+
+    # Fig 18-(2): index update after a move (latch-free repaint)
+    pid = int(live[0])
+    emit("fig18_2/index_update", _time(
+        lambda: sw2.index.apply_changes([pid]), 50), "grid repaint, G=256")
+    return out

@@ -1,0 +1,58 @@
+"""§Roofline table: read the dry-run artifacts and print the three terms
+per (arch × shape × mesh), the dominant bottleneck, and the cells most
+in need of hillclimbing."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+
+def load_records(art_dir: str = ART):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        r = json.load(open(f))
+        if not r.get("tag"):
+            recs.append(r)
+    return recs
+
+
+def run() -> dict:
+    recs = load_records()
+    if not recs:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all --both-meshes` first")
+        return {}
+    worst = None
+    most_coll = None
+    for r in recs:
+        key = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skip":
+            emit(f"roofline/{key}", 0.0, f"skip: {r['reason']}")
+            continue
+        if r["status"] != "ok":
+            emit(f"roofline/{key}", 0.0, f"FAIL {r.get('error', '')[:80]}")
+            continue
+        rl = r["roofline"]
+        frac = rl.get("achievable_flops_frac", 0.0)
+        emit(f"roofline/{key}", rl["step_time_bound_s"] * 1e6,
+             f"compute={rl['t_compute']:.3e}s memory={rl['t_memory']:.3e}s "
+             f"collective={rl['t_collective']:.3e}s dominant={rl['dominant']} "
+             f"flops_frac={frac:.3f} "
+             f"useful={r['model']['useful_fraction']:.2f} "
+             f"peakGiB={r['memory']['peak_hbm_bytes'] / 2**30:.1f}")
+        if r["mesh"] == "16x16":
+            if worst is None or frac < worst[1]:
+                worst = (key, frac)
+            share = rl["t_collective"] / max(rl["step_time_bound_s"], 1e-30)
+            if most_coll is None or share > most_coll[1]:
+                most_coll = (key, share)
+    if worst:
+        emit("roofline/worst_fraction", 0.0, f"{worst[0]} frac={worst[1]:.3f}")
+        emit("roofline/most_collective_bound", 0.0,
+             f"{most_coll[0]} coll_share={most_coll[1]:.3f}")
+    return {"worst": worst, "most_collective": most_coll}

@@ -1,0 +1,40 @@
+"""Benchmark driver — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+
+  fig11  capability + latency vs #queries     (benchmarks/capability.py)
+  fig12–16 hotspot scenarios                  (benchmarks/hotspots.py)
+  fig17  machine utilization spread           (benchmarks/utilization.py)
+  fig18/19 SWARM operation overheads          (benchmarks/overheads.py)
+  fig20  statistics network traffic           (benchmarks/stats_network.py)
+  kernels  Pallas-oracle throughput           (benchmarks/kernels.py)
+  roofline per-cell three-term analysis       (benchmarks/roofline.py)
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: capability,hotspots,utilization,"
+                         "overheads,stats_network,kernels,roofline")
+    args = ap.parse_args()
+    from . import (capability, hotspots, kernels, overheads, roofline,
+                   stats_network, utilization)
+    sections = {
+        "capability": capability.run,
+        "hotspots": hotspots.run,
+        "utilization": utilization.run,
+        "overheads": overheads.run,
+        "stats_network": stats_network.run,
+        "kernels": kernels.run,
+        "roofline": roofline.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(sections))
+    print("name,us_per_call,derived")
+    for name in chosen:
+        sections[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Fig 20: Coordinator network traffic — SWARM's decentralized 2-scalar
+reports vs an AQWA-style centralized scheme (5 stats per grid cell)."""
+from __future__ import annotations
+
+from repro.core.cost_model import CostReport
+
+from .common import emit
+
+GRIDS = (100, 316, 1000)      # 1000×1000 is the paper's setting
+MACHINES = (8, 22, 64)
+
+
+def run() -> dict:
+    out = {}
+    for g in GRIDS:
+        centralized = g * g * 5 * 8          # 5 float64 per cell
+        for m in MACHINES:
+            swarm = m * CostReport.WIRE_BYTES
+            out[(g, m)] = (swarm, centralized)
+            emit(f"fig20/g={g}/m={m}", 0.0,
+                 f"swarm_bytes={swarm} centralized_bytes={centralized} "
+                 f"ratio={centralized / swarm:.0f}x")
+    return out

@@ -1,0 +1,24 @@
+"""Fig 17: per-machine utilization — mean and min/max spread during the
+Fig-12 hotspot run (SWARM closes the gap; static grids bottleneck)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import SYSTEMS, emit, run_system
+
+
+def run() -> dict:
+    out = {}
+    for name in SYSTEMS:
+        m, wall = run_system(name, "uniform_normal", ticks=90)
+        u = np.stack(m.utilization)          # (ticks, M)
+        per_machine = u.mean(0)
+        out[name] = per_machine
+        emit(f"fig17a/{name}", wall / 90 * 1e6,
+             f"util_mean={u.mean():.3f} util_min={per_machine.min():.3f} "
+             f"util_max={per_machine.max():.3f} "
+             f"gap={per_machine.max() - per_machine.min():.3f}")
+    emit("fig17a/summary", 0.0,
+         f"swarm_gap={out['swarm'].max() - out['swarm'].min():.3f} "
+         f"history_gap={out['static_history'].max() - out['static_history'].min():.3f}")
+    return out

@@ -1,0 +1,35 @@
+"""Quickstart: SWARM adaptively balancing a spatial hotspot.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import Swarm
+
+rng = np.random.default_rng(0)
+swarm = Swarm(grid_size=64, num_machines=8, beta=6, decay=0.5)
+
+print("initial partitions:", len(swarm.index.parts.live_ids()),
+      "(one equal-area partition per machine)")
+
+for rnd in range(25):
+    # background traffic + a hotspot in the lower-left corner
+    pts = np.concatenate([
+        rng.uniform(0, 1, (1000, 2)),
+        rng.uniform(0, 0.2, (4000, 2)),
+    ]).astype(np.float32)
+    swarm.ingest_points(pts)
+    qc = rng.uniform(0, 0.25, (150, 2)).astype(np.float32)
+    swarm.ingest_queries(np.concatenate([qc, qc + 0.02], axis=1))
+
+    report = swarm.run_round()          # the Coordinator round (Figs 8–10)
+    loads = swarm.machine_loads()
+    cv = loads.std() / (loads.mean() + 1e-9)
+    print(f"round {report.round_no:2d}  decision={report.decision}  "
+          f"action={report.action:6s}  partitions="
+          f"{len(swarm.index.parts.live_ids()):3d}  load-CV={cv:.3f}")
+
+print("\nfinal machine loads (C(m), normalized):")
+loads = swarm.machine_loads()
+for m, frac in enumerate(loads / loads.sum()):
+    print(f"  machine {m}: {'#' * int(frac * 80)} {frac:.3f}")

@@ -1,0 +1,4 @@
+"""Checkpoint/restart with elastic resharding."""
+from .checkpoint import latest_step, restore, save
+
+__all__ = ["save", "restore", "latest_step"]

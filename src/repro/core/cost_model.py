@@ -1,0 +1,68 @@
+"""SWARM probabilistic cost model (paper §3, Eqns 1–7).
+
+    C(p)   = N(p) · Q(p) · Prob(p),   Prob(p) = R(p) / R(S)
+    C(m)   = Σ_p C(p) = Num(C(m)) / R(S)
+
+The numerator Num(C(m)) = Σ_p N(p)Q(p)R(p) is computable *locally*; the
+Coordinator only ever needs the pair (Num(C(m)), R(m)) from each machine
+— two scalars — to rank every machine by cost (Eqn 7).  That pair is the
+entire per-round wire format (benchmarks/stats_network.py, Fig 20).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CostReport:
+    """What one executor machine sends the Coordinator each round."""
+
+    machine: int
+    num_cost: float  # Num(C(m)) = Σ_p N(p)·Q(p)·R(p)
+    r_m: float       # R(m)      = Σ_p R(p)
+
+    WIRE_BYTES = 16  # two float64 scalars — Fig 20 accounting
+
+
+def partition_cost_numerator(n_p, q_p, r_p):
+    """Num(C(p)) = N(p)·Q(p)·R(p); vectorized."""
+    return np.asarray(n_p) * np.asarray(q_p) * np.asarray(r_p)
+
+
+def machine_reports(part_n, part_q, part_r, part_owner, num_machines: int):
+    """Aggregate per-partition totals into per-machine CostReports.
+
+    part_*: (P,) arrays of partition totals; part_owner: (P,) int machine
+    ids (−1 for dead/retired partitions, excluded).
+    """
+    num = partition_cost_numerator(part_n, part_q, part_r)
+    reports = []
+    for m in range(num_machines):
+        sel = part_owner == m
+        reports.append(CostReport(m, float(num[sel].sum()), float(np.asarray(part_r)[sel].sum())))
+    return reports
+
+
+def total_rate(reports) -> float:
+    """R(S) = Σ_m R(m)  (Eqn 4)."""
+    return float(sum(r.r_m for r in reports))
+
+
+def machine_costs(reports, r_s: float | None = None):
+    """C(m) for every machine (Eqn 7).  Returns (costs array, R(S))."""
+    if r_s is None:
+        r_s = total_rate(reports)
+    denom = r_s if r_s > 0 else 1.0
+    costs = np.array([r.num_cost / denom for r in reports], np.float64)
+    return costs, r_s
+
+
+def rank_machines(reports):
+    """Machines sorted by cost descending → (order, costs, R(S)).
+
+    order[0] is m_H (highest cost), order[-1] is m_L (lowest)."""
+    costs, r_s = machine_costs(reports)
+    order = np.argsort(-costs, kind="stable")
+    return order, costs, r_s

@@ -1,0 +1,300 @@
+"""The SWARM protocol: ties index, statistics, cost model and balancer
+into the per-round control loop of §4.3 (Figs 8–10).
+
+The object here *is* the distributed protocol run as one logical program:
+ingest touches only local collectors (executor-side), `run_round`
+performs the Coordinator exchange — two scalars per machine — then the
+FSM decision, the m_H→m_L reduction, and the latch-free plan install.
+The streaming engine (streaming/engine.py) drives it against a simulated
+cluster; the MoE placement layer (distributed/moe_placement.py) drives
+the very same object over experts instead of spatial partitions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import balancer, cost_model, geometry, integrity
+from . import statistics as S
+from .global_index import GlobalIndex
+
+
+@dataclass
+class RoundReport:
+    round_no: int
+    decision: int
+    r_s: float
+    costs: np.ndarray | None = None
+    m_h: int = -1
+    m_l: int = -1
+    action: str = "none"              # none | subset | split
+    moved_pids: tuple = ()
+    new_pids: tuple = ()
+    wire_bytes: int = 0               # Coordinator traffic this round (Fig 20)
+
+
+class Swarm:
+    """One SWARM deployment over ``num_machines`` executor machines."""
+
+    def __init__(self, grid_size: int, num_machines: int, *, beta: int = 20,
+                 decay: float = 0.5, window_rounds: int = 4,
+                 use_binary_search: bool = False, smoothing: float = 0.0,
+                 cost_fn=None, seed: int = 0):
+        self.g = grid_size
+        self.m = num_machines
+        self.beta = beta
+        self.decay = decay
+        self.window_rounds = window_rounds
+        self.use_binary_search = use_binary_search
+        # Beyond-paper: Laplace-smoothed cost (N+s)(Q+s)(R+s) — the paper's
+        # pure product is blind to partitions with zero queries that still
+        # receive tuples (per-tuple routing/probe work).  smoothing=0
+        # reproduces the paper exactly.
+        self.smoothing = smoothing
+        # Pluggable partition-cost model.  Default: the paper's product
+        # (Eqn 5).  balancer.make_rate_cost() is the beyond-paper model.
+        self.cost_fn = cost_fn or balancer.product_cost
+        self.index = GlobalIndex.initialize(grid_size, num_machines)
+        self.stats = S.StatsState.zeros(self.index.parts.capacity, grid_size)
+        self.decision = balancer.DecisionState()
+        self.round_no = 0
+        self.reports: list[RoundReport] = []
+        self.dead: set[int] = set()   # crash-stop machines (ft layer)
+
+    # ------------------------------------------------------------------
+    # Executor-side ingest (hot path)
+    # ------------------------------------------------------------------
+    def ingest_points(self, xy: np.ndarray) -> np.ndarray:
+        """Route float points and update collectors.  Returns the owning
+        machine per point (for the engine's work accounting)."""
+        row, col = geometry.points_to_cells(xy, self.g)
+        pids, owners = self.index.route_points(row, col)
+        self._sync_capacity()
+        S.ingest_points(self.stats, pids, row, col)
+        return owners
+
+    def ingest_queries(self, rects: np.ndarray):
+        """Route float query rects; update collectors of every overlapped
+        partition with the *clipped* rectangle (§4.2.2).  Returns the
+        list of (pid, owner) per query (a query may hit several)."""
+        r0, c0, r1, c1 = geometry.rects_to_cells(rects, self.g)
+        self._sync_capacity()
+        out = []
+        p = self.index.parts
+        for i in range(len(rects)):
+            pids = self.index.query_overlap_vectorized(int(r0[i]), int(c0[i]),
+                                                       int(r1[i]), int(c1[i]))
+            if len(pids) == 0:
+                out.append([])
+                continue
+            qr0, qc0, qr1, qc1 = geometry.clip_box(
+                r0[i], c0[i], r1[i], c1[i],
+                p.r0[pids], p.c0[pids], p.r1[pids], p.c1[pids])
+            S.ingest_queries(self.stats, pids, qr0, qc0, qr1, qc1)
+            out.append([(int(q), int(p.owner[q])) for q in pids])
+        return out
+
+    # ------------------------------------------------------------------
+    # Coordinator round (Figs 8–10)
+    # ------------------------------------------------------------------
+    def run_round(self) -> RoundReport:
+        self.round_no += 1
+        S.close_round(self.stats, self.decay)
+        reports = self._collect_reports()
+        r_s = cost_model.total_rate(reports)
+        wire = len(reports) * cost_model.CostReport.WIRE_BYTES
+        self.decision, decision = balancer.step_decision(self.decision, r_s, self.beta)
+        rep = RoundReport(self.round_no, decision, r_s, wire_bytes=wire)
+        if decision == balancer.REBALANCE:
+            self._rebalance(reports, r_s, rep)
+        integrity.expire_chains(self.index.parts, self.round_no, self.window_rounds)
+        self.reports.append(rep)
+        return rep
+
+    # ------------------------------------------------------------------
+    def _collect_reports(self):
+        p = self.index.parts
+        live = p.live_ids()
+        s = self.smoothing
+        n = self.stats.rows[S.N, live, p.r1[live]] + s
+        q = self.stats.rows[S.Q, live, p.r1[live]] + s
+        r = self.stats.rows[S.R, live, p.r1[live]] + s
+        area = (geometry.box_area(p.r0[live], p.c0[live], p.r1[live], p.c1[live])
+                .astype(np.float64) / (self.g * self.g))
+        self._live_cache = (live, n, q, r, area)
+        r_s = float(r.sum())
+        part_cost = self.cost_fn(n, q, r, area, r_s)
+        # wire format is unchanged: two scalars per machine — Num(C(m))
+        # (scaled so Num/R(S) = Σ C(p)) and R(m).
+        reports = []
+        for m in range(self.m):
+            sel = p.owner[live] == m
+            reports.append(cost_model.CostReport(
+                m, float(part_cost[sel].sum()) * max(r_s, 1.0),
+                float(r[sel].sum())))
+        return reports
+
+    def mark_dead(self, machine: int) -> None:
+        """Crash-stop: the machine is excluded from m_H/m_L selection."""
+        self.dead.add(int(machine))
+
+    def _rebalance(self, reports, r_s: float, rep: RoundReport) -> None:
+        order, costs, _ = cost_model.rank_machines(reports)
+        rep.costs = costs
+        order = [m for m in map(int, order) if m not in self.dead]
+        if len(order) < 2:
+            return
+        m_l = int(order[-1])
+        live, n, q, r, area = self._live_cache
+        part_cost = np.asarray(self.cost_fn(n, q, r, area, r_s), np.float64)
+        p = self.index.parts
+        for m_h in order[:-1]:
+            if m_h == m_l or costs[m_h] <= costs[m_l]:
+                break
+            sel = p.owner[live] == m_h
+            ids, cst = live[sel], part_cost[sel]
+            if len(ids) == 0:
+                continue
+            boxes = {int(k): (int(p.r0[k]), int(p.c0[k]), int(p.r1[k]), int(p.c1[k]))
+                     for k in ids}
+            plan = balancer.find_workload_reduction(
+                self.stats, ids, cst, boxes, float(costs[m_h]), float(costs[m_l]),
+                r_s, self.use_binary_search, self.cost_fn)
+            if plan.kind == "subset":
+                new = [self._move_partition(pid, m_l) for pid in plan.subset]
+                rep.action, rep.m_h, rep.m_l = "subset", m_h, m_l
+                rep.moved_pids, rep.new_pids = tuple(plan.subset), tuple(new)
+                self.index.apply_changes(new)
+                return
+            if plan.kind == "split":
+                new = self._split_partition(plan.split, m_h, m_l)
+                rep.action, rep.m_h, rep.m_l = "split", m_h, m_l
+                rep.moved_pids, rep.new_pids = (plan.split.pid,), tuple(new)
+                self.index.apply_changes(new)
+                return
+        # every m_H candidate failed → no action this round
+
+    def _move_partition(self, pid: int, m_l: int) -> int:
+        """Whole-partition move: mint a new id owned by m_L, chain to the
+        old one (which keeps the data until expiry, §5.2)."""
+        p = self.index.parts
+        new = p.allocate(int(p.r0[pid]), int(p.c0[pid]), int(p.r1[pid]),
+                         int(p.c1[pid]), owner=m_l, parent=pid,
+                         prev_machine=int(p.owner[pid]), birth_round=self.round_no)
+        p.retire(pid)
+        self._sync_capacity()
+        S.move_partition_stats(self.stats, pid, new)
+        return new
+
+    def _split_partition(self, plan: balancer.SplitPlan, m_h: int, m_l: int):
+        p = self.index.parts
+        pid = plan.pid
+        r0, c0, r1, c1 = (int(p.r0[pid]), int(p.c0[pid]), int(p.r1[pid]), int(p.c1[pid]))
+        own_lo = m_l if plan.move_lo else m_h
+        own_hi = m_h if plan.move_lo else m_l
+        if plan.axis == "row":
+            lo = p.allocate(r0, c0, plan.sp, c1, own_lo, pid, m_h, self.round_no)
+            hi = p.allocate(plan.sp + 1, c0, r1, c1, own_hi, pid, m_h, self.round_no)
+            self._sync_capacity()
+            S.derive_row_split(self.stats, pid, lo, hi, r0, plan.sp, r1, c0, c1)
+        else:
+            lo = p.allocate(r0, c0, r1, plan.sp, own_lo, pid, m_h, self.round_no)
+            hi = p.allocate(r0, plan.sp + 1, r1, c1, own_hi, pid, m_h, self.round_no)
+            self._sync_capacity()
+            S.derive_col_split(self.stats, pid, lo, hi, c0, plan.sp, c1, r0, r1)
+        p.retire(pid)
+        return lo, hi
+
+    # ------------------------------------------------------------------
+    # Background merge of adjacent same-owner partitions (§4.3.1 end)
+    # ------------------------------------------------------------------
+    def merge_adjacent(self) -> int:
+        """Merge any two same-owner partitions forming a rectangle.
+
+        Returns #merges.  Merged stats: exact for N/R along both axes;
+        queries spanning the old boundary are counted once per side
+        (slight overcount that fresh rounds wash out — documented)."""
+        merges = 0
+        p = self.index.parts
+        changed = []
+        done = False
+        while not done:
+            done = True
+            live = p.live_ids()
+            for i in live:
+                for j in live:
+                    if i >= j or p.owner[i] != p.owner[j]:
+                        continue
+                    new = self._try_merge(int(i), int(j))
+                    if new is not None:
+                        changed.append(new)
+                        merges += 1
+                        done = False
+                        break
+                if not done:
+                    break
+        if changed:
+            self.index.apply_changes(changed)
+        return merges
+
+    def _try_merge(self, a: int, b: int):
+        p = self.index.parts
+        ar0, ac0, ar1, ac1 = p.r0[a], p.c0[a], p.r1[a], p.c1[a]
+        br0, bc0, br1, bc1 = p.r0[b], p.c0[b], p.r1[b], p.c1[b]
+        row_adj = (ac0 == bc0 and ac1 == bc1 and (ar1 + 1 == br0 or br1 + 1 == ar0))
+        col_adj = (ar0 == br0 and ar1 == br1 and (ac1 + 1 == bc0 or bc1 + 1 == ac0))
+        if not (row_adj or col_adj):
+            return None
+        new = p.allocate(int(min(ar0, br0)), int(min(ac0, bc0)), int(max(ar1, br1)),
+                         int(max(ac1, bc1)), owner=int(p.owner[a]), parent=a,
+                         prev_machine=int(p.owner[a]), birth_round=self.round_no)
+        self._sync_capacity()
+        st = self.stats
+        if row_adj:
+            lo, hi = (a, b) if ar0 < br0 else (b, a)
+            sp = int(p.r1[lo])
+            for ch in S.MAINTAINED:
+                # cols: same col span → elementwise sum is exact for N/R
+                st.cols[ch, new] = st.cols[ch, lo] + st.cols[ch, hi]
+                # rows: lo prefix, then hi suffix shifted by lo's totals
+                st.rows[ch, new] = 0.0
+                st.rows[ch, new, : sp + 1] = st.rows[ch, lo, : sp + 1]
+                st.rows[ch, new, sp + 1:] = st.rows[ch, hi, sp + 1:] + st.rows[ch, lo, sp]
+            st.rows[S.SPANQ, new, sp + 1] = 0.0
+            st.rows[S.PRESPANQ, new, sp + 1] = 0.0
+        else:
+            lo, hi = (a, b) if ac0 < bc0 else (b, a)
+            sp = int(p.c1[lo])
+            for ch in S.MAINTAINED:
+                st.rows[ch, new] = st.rows[ch, lo] + st.rows[ch, hi]
+                st.cols[ch, new] = 0.0
+                st.cols[ch, new, : sp + 1] = st.cols[ch, lo, : sp + 1]
+                st.cols[ch, new, sp + 1:] = st.cols[ch, hi, sp + 1:] + st.cols[ch, lo, sp]
+            st.cols[S.SPANQ, new, sp + 1] = 0.0
+            st.cols[S.PRESPANQ, new, sp + 1] = 0.0
+        p.retire(a)
+        p.retire(b)
+        return new
+
+    # ------------------------------------------------------------------
+    def _sync_capacity(self) -> None:
+        """Grow the stats bank alongside the partition table."""
+        cap = self.index.parts.capacity
+        if self.stats.rows.shape[1] < cap:
+            pad = cap - self.stats.rows.shape[1]
+            self.stats.rows = np.concatenate(
+                [self.stats.rows, np.zeros((S.NUM_CH, pad, self.g + 1), np.float32)], 1)
+            self.stats.cols = np.concatenate(
+                [self.stats.cols, np.zeros((S.NUM_CH, pad, self.g + 1), np.float32)], 1)
+
+    # Convenience -------------------------------------------------------
+    def machine_loads(self) -> np.ndarray:
+        """Current C(m) per machine (for monitoring/benchmarks)."""
+        reports = self._collect_reports_readonly()
+        costs, _ = cost_model.machine_costs(reports)
+        return costs
+
+    def _collect_reports_readonly(self):
+        reports = self._collect_reports()
+        return reports

@@ -1,0 +1,5 @@
+"""Distribution: mesh-aware sharding rules, SWARM expert placement."""
+from . import sharding
+from .moe_placement import ExpertBalancer
+
+__all__ = ["sharding", "ExpertBalancer"]

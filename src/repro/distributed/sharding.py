@@ -1,0 +1,203 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Weights carry logical axis names in their param spec (models/layers.P);
+activations are annotated through the ``constraint`` callback threaded
+through every layer.  One rules table maps both onto the physical mesh,
+so changing the parallelism layout is a table edit, not a model edit.
+
+Default layout (single-pod 16×16 / multi-pod 2×16×16):
+  batch                →  ("pod", "data")     (DP across pods and data axis)
+  heads / ff / expert  →  "model"             (TP / EP)
+  vocab                →  "model"             (sharded embedding + lm head)
+  layers / head_dim    →  replicated
+Optimizer state can additionally shard its vocab/ff dims over "data"
+(ZeRO-1) — see train/optimizer.py.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+from ..models import layers as L
+from ..models.model import param_spec
+
+# logical → mesh axes (None = replicate).  Entries may be tuples.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "expert": "model",
+    "heads": "heads_or_model",   # resolved to "model"
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "embed": None,
+    "head_dim": None,
+    "layers": None,
+    None: None,
+}
+
+
+def resolve_rules(mesh: Mesh, rules: dict | None = None) -> dict:
+    rules = dict(rules or DEFAULT_RULES)
+    rules["heads"] = "model"
+    # drop axes the mesh does not have (e.g. "pod" on a single pod)
+    def fix(v):
+        if v is None:
+            return None
+        axes = v if isinstance(v, tuple) else (v,)
+        keep = tuple(a for a in axes if a in mesh.axis_names)
+        return keep if len(keep) > 1 else (keep[0] if keep else None)
+    return {k: fix(v) for k, v in rules.items()}
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return False
+    names = axes if isinstance(axes, tuple) else (axes,)
+    size = int(np.prod([mesh.shape[a] for a in names]))
+    return dim % size == 0 and dim >= size
+
+
+def spec_to_pspec(leaf_spec, mesh: Mesh, rules: dict) -> PS:
+    """PartitionSpec for one weight leaf, dropping non-divisible axes and
+    never mapping one mesh axis twice.
+
+    Fallback: when the preferred logical axis is not divisible by the
+    "model" axis (e.g. starcoder2's 36 heads or qwen's 60 experts on a
+    16-way TP axis), the largest divisible remaining dim is TP-sharded
+    instead — big weights never end up replicated."""
+    used: set = set()
+    out = []
+    for dim, logical in zip(leaf_spec["shape"], leaf_spec["axes"]):
+        target = rules.get(logical)
+        names = (target if isinstance(target, tuple)
+                 else ((target,) if target else ()))
+        names = tuple(n for n in names if n not in used)
+        if names and _divisible(dim, mesh, names):
+            used.update(names)
+            out.append(names if len(names) > 1 else names[0])
+        else:
+            out.append(None)
+    if "model" not in used and len(leaf_spec["shape"]) >= 2:
+        # skip the stacked-layers leading dim (axes[0] == "layers")
+        cand = [(dim, i) for i, (dim, lg) in enumerate(
+                    zip(leaf_spec["shape"], leaf_spec["axes"]))
+                if out[i] is None and lg != "layers"
+                and _divisible(dim, mesh, "model")]
+        if cand:
+            _, i = max(cand)
+            out[i] = "model"
+    return PS(*out)
+
+
+def param_shardings(cfg, mesh: Mesh, rules: dict | None = None,
+                    zero3: bool = False):
+    """NamedSharding pytree matching abstract_params(cfg).
+
+    zero3=True additionally shards each master weight's largest
+    still-replicated dim over "data" (ZeRO-3 for the fp32 masters): the
+    per-chip param/grad footprint drops by the DP degree and — crucially
+    — the optimizer update runs fully sharded, so no fp32 weight
+    re-gather appears in the step (the compute-path bf16 casts are
+    gathered instead, at half the bytes)."""
+    rules = resolve_rules(mesh, rules)
+
+    def one(lf):
+        ps = spec_to_pspec(lf, mesh, rules)
+        if zero3 and "data" in mesh.axis_names:
+            spec = list(ps) + [None] * (len(lf["shape"]) - len(ps))
+            dsize = mesh.shape["data"]
+            cand = [(dim, i) for i, (dim, sp) in
+                    enumerate(zip(lf["shape"], spec))
+                    if sp is None and dim % dsize == 0 and dim >= dsize]
+            if cand:
+                _, i = max(cand)
+                spec[i] = "data"
+                ps = PS(*spec)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree.map(one, param_spec(cfg), is_leaf=L.is_leaf)
+
+
+DP_RULES = {
+    # pure data parallelism, weights REPLICATED (the right layout when
+    # the model is small relative to the chip count: grad all-reduce
+    # ≪ TP activation collectives) — see EXPERIMENTS §Perf (xlstm).
+    "batch": ("pod", "data", "model"),
+    "expert": None, "heads": None, "kv_heads": None, "ff": None,
+    "vocab": None, "embed": None, "head_dim": None, "layers": None,
+    None: None,
+}
+
+
+def param_shardings_replicated(cfg, mesh: Mesh):
+    return jax.tree.map(lambda lf: NamedSharding(mesh, PS()),
+                        param_spec(cfg), is_leaf=L.is_leaf)
+
+
+FSDP_RULES = {
+    # pure data parallelism over the whole chip grid; weights fully
+    # sharded (gathered in bf16 per use).  Right layout when activation
+    # volume ≫ weight volume (small models, big batches) — see §Perf.
+    "batch": ("pod", "data", "model"),
+    "expert": None, "heads": None, "kv_heads": None, "ff": None,
+    "vocab": None, "embed": None, "head_dim": None, "layers": None,
+    None: None,
+}
+
+
+def param_shardings_fsdp(cfg, mesh: Mesh):
+    """Every weight's largest divisible dim sharded over all mesh axes."""
+    axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def one(lf):
+        spec = [None] * len(lf["shape"])
+        cand = [(dim, i) for i, (dim, lg) in
+                enumerate(zip(lf["shape"], lf["axes"])) if lg != "layers"]
+        # prefer a dim divisible by the full axis product, else by "data"
+        for need, ax in ((size, axes), (mesh.shape.get("data", 1), ("data",))):
+            ok = [(d, i) for d, i in cand if d % need == 0 and d >= need]
+            if ok:
+                _, i = max(ok)
+                spec[i] = ax if len(ax) > 1 else ax[0]
+                return NamedSharding(mesh, PS(*spec))
+        return NamedSharding(mesh, PS())
+
+    return jax.tree.map(one, param_spec(cfg), is_leaf=L.is_leaf)
+
+
+def make_constraint(mesh: Mesh, rules: dict | None = None):
+    """Activation-annotation callback: constraint(x, logical_axes)."""
+    rules = resolve_rules(mesh, rules)
+
+    def constraint(x, logical_axes):
+        used: set = set()
+        out = []
+        for dim, logical in zip(x.shape, logical_axes):
+            target = rules.get(logical)
+            names = (target if isinstance(target, tuple)
+                     else ((target,) if target else ()))
+            names = tuple(n for n in names if n not in used)
+            if names and _divisible(dim, mesh, names):
+                used.update(names)
+                out.append(names if len(names) > 1 else names[0])
+            else:
+                out.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PS(*out)))
+
+    return constraint
+
+
+def batch_sharding(mesh: Mesh, ndim: int, rules: dict | None = None):
+    """Sharding for input batches: dim0 = batch over (pod, data)."""
+    rules = resolve_rules(mesh, rules)
+    axes = rules["batch"]
+    spec = [axes] + [None] * (ndim - 1)
+    return NamedSharding(mesh, PS(*spec))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PS())

@@ -1,0 +1,6 @@
+"""Fault tolerance: failure detection, Coordinator failover, straggler
+mitigation — the paper's §4.1.1/§5 guarantees for the training fleet."""
+from .coordinator import CoordinatorGroup
+from .straggler import StragglerMitigator
+
+__all__ = ["CoordinatorGroup", "StragglerMitigator"]

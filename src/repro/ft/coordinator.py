@@ -1,0 +1,40 @@
+"""Coordinator failover (paper §4.1.1: "If the Coordinator fails, another
+GlobalIndex machine takes over").
+
+The paper elects via Byzantine agreement; on a single-tenant pod with
+crash-stop failures we use deterministic rank-order failover (documented
+deviation, DESIGN.md §3): every member observes the same heartbeat table,
+so the lowest-ranked live member is a consistent choice without a vote.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class CoordinatorGroup:
+    num_members: int
+    heartbeat_timeout: int = 3          # missed beats before declared dead
+    last_beat: dict = field(default_factory=dict)
+    clock: int = 0
+
+    def __post_init__(self):
+        for m in range(self.num_members):
+            self.last_beat[m] = 0
+
+    def beat(self, member: int) -> None:
+        self.last_beat[member] = self.clock
+
+    def tick(self) -> None:
+        self.clock += 1
+
+    def live_members(self) -> list[int]:
+        return [m for m in range(self.num_members)
+                if self.clock - self.last_beat[m] < self.heartbeat_timeout]
+
+    def coordinator(self) -> int:
+        """Lowest-ranked live member.  Raises if the whole group is dead."""
+        live = self.live_members()
+        if not live:
+            raise RuntimeError("no live GlobalIndex machines")
+        return live[0]

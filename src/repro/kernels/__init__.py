@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as <name>/{<name>.py (pallas_call + BlockSpec),
+ops.py (jit'd public wrapper), ref.py (pure-jnp oracle)} and is
+validated shape/dtype-swept against its oracle in interpret mode
+(tests/test_kernels.py).
+"""

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: blocked flash attention (fwd) with GQA, causal and
+sliding-window masks.
+
+Grid (B, H, S/BQ, Skv/BK), kv innermost; the online-softmax state
+(m, l, acc) lives in VMEM scratch and survives across the kv sweep —
+one HBM pass over K/V per query block.  Q·Kᵀ and P·V hit the MXU with
+(BQ, D)·(D, BK) and (BQ, BK)·(BK, D) tiles, D = head_dim (128-aligned
+for the assigned architectures; gemma's 256 splits into two lanes-major
+registers transparently).
+
+Sliding-window support makes this the sub-quadratic path for
+h2o-danube (SWA) and the attention layers of jamba at long_500k.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int | None, bq: int, bk: int,
+            n_kv: int, q_offset: int):
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (BQ, BK)
+
+    rows = (pl.program_id(2) * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            + q_offset)
+    cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * alpha + p.sum(axis=1)
+    acc_new = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "q_offset", "interpret"))
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           window: int | None = None, bq: int = DEFAULT_BQ,
+                           bk: int = DEFAULT_BK, q_offset: int = 0,
+                           interpret: bool = False):
+    """q (B, H, S, D); k, v (B, Hkv, Skv, D); S % bq == Skv % bk == 0."""
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = h // hkv
+    n_kv = skv // bk
+    scale = 1.0 / (d ** 0.5)
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             window=window, bq=bq, bk=bk, n_kv=n_kv,
+                             q_offset=q_offset)
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, i, j, g=group: (b_, h_ // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, i, j, g=group: (b_, h_ // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

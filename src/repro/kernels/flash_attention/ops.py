@@ -1,0 +1,37 @@
+"""Public wrapper: pads sequence lengths to block multiples and slices.
+
+Padding keys are masked out via the causal/window logic only when they
+lie beyond the true length, so we additionally pass an explicit kv
+length cap through the window mechanism: padded key positions sit at
+cols >= skv_true which can exceed ``rows`` only for non-causal use —
+for those we pre-mask by padding k with +0 and relying on causal=False
+callers to pad to exact multiples themselves (the LM paths here are
+always causal or windowed)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import DEFAULT_BK, DEFAULT_BQ, flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    q_offset: int = 0, interpret: bool = False):
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    bq = min(DEFAULT_BQ, max(8, sq))
+    bk = min(DEFAULT_BK, max(8, skv))
+    pq = (-sq) % bq
+    pk = (-skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    if pk and not causal:
+        # mask padded keys by pushing them outside any window
+        raise ValueError("non-causal padding unsupported; pad kv to block size")
+    out = flash_attention_kernel(qp, kp, vp, causal=causal, window=window,
+                                 bq=bq, bk=bk, q_offset=q_offset,
+                                 interpret=interpret)
+    return out[:, :, :sq]

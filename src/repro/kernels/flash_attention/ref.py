@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: softmax attention with GQA, causal and sliding-window
+masking.  Shapes: q (B, H, S, D); k, v (B, Hkv, Skv, D); H % Hkv == 0."""
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  q_offset: int = 0):
+    """q_offset: absolute position of q[..., 0, :] (for decode: S_past)."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    skv = k.shape[2]
+    group = h // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(d).astype(q.dtype)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    rows = jnp.arange(sq)[:, None] + q_offset
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / denom, v.astype(jnp.float32))
+    return out.astype(q.dtype)

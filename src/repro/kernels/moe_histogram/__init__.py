@@ -1,0 +1,4 @@
+from .ops import moe_histogram
+from .ref import moe_histogram_ref
+
+__all__ = ["moe_histogram", "moe_histogram_ref"]

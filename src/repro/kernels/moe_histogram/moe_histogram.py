@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: expert-assignment histogram (counts + gated load).
+
+Grid over token tiles (1-D, so the (E,)-shaped accumulators are
+revisited on consecutive steps — the safe accumulation pattern).  Each
+step expands a (TT·K,) index tile against the expert id lane vector into
+a (TT·K, E) one-hot tile in VMEM and reduces it on the VPU; E is padded
+to a lane multiple by the wrapper.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+T_TILE = 256
+
+
+def _kernel(idx_ref, gate_ref, cnt_ref, load_ref, *, num_experts: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        load_ref[...] = jnp.zeros_like(load_ref)
+
+    idx = idx_ref[...].reshape(-1)          # (TT·K,)
+    gates = gate_ref[...].reshape(-1)
+    experts = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], num_experts), 1)
+    oh = (idx[:, None] == experts).astype(jnp.float32)
+    cnt_ref[...] += oh.sum(axis=0)
+    load_ref[...] += (oh * gates[:, None]).sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_experts", "interpret"))
+def moe_histogram_kernel(idx, gates, *, num_experts: int,
+                         interpret: bool = False):
+    """idx, gates: (T, K) with T % T_TILE == 0; num_experts % 128 == 0."""
+    t, k = idx.shape
+    kern = functools.partial(_kernel, num_experts=num_experts)
+    return pl.pallas_call(
+        kern,
+        grid=(t // T_TILE,),
+        in_specs=[
+            pl.BlockSpec((T_TILE, k), lambda i: (i, 0)),
+            pl.BlockSpec((T_TILE, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((num_experts,), lambda i: (0,)),
+            pl.BlockSpec((num_experts,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_experts,), jnp.float32),
+            jax.ShapeDtypeStruct((num_experts,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, gates)

@@ -1,0 +1,23 @@
+"""Public wrapper: pad tokens/experts, run the kernel, slice."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .moe_histogram import T_TILE, moe_histogram_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("num_experts", "interpret"))
+def moe_histogram(idx, gates, *, num_experts: int, interpret: bool = False):
+    """idx (T, K) int32, gates (T, K) f32 → (counts (E,), load (E,)).
+
+    Padded tokens use expert id −1 (matches nothing)."""
+    t, k = idx.shape
+    pt = (-t) % T_TILE
+    e_pad = (-num_experts) % 128
+    idx_p = jnp.pad(idx, ((0, pt), (0, 0)), constant_values=-1)
+    gates_p = jnp.pad(gates, ((0, pt), (0, 0)))
+    cnt, load = moe_histogram_kernel(idx_p, gates_p,
+                                     num_experts=num_experts + e_pad,
+                                     interpret=interpret)
+    return cnt[:num_experts], load[:num_experts]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: expert-assignment histogram.
+
+Counts tokens routed to each expert (and the gate-weighted load).  This
+is SWARM's N' Statistics Collector with experts as partitions: the MoE
+placement layer feeds these per-round counts to the SWARM cost model.
+"""
+import jax.numpy as jnp
+
+
+def moe_histogram_ref(idx, gates, num_experts: int):
+    """idx (T, K) int32, gates (T, K) f32 → (counts (E,), load (E,))."""
+    oh = (idx[..., None] == jnp.arange(num_experts)[None, None, :])
+    counts = oh.sum((0, 1)).astype(jnp.float32)
+    load = (oh * gates[..., None]).sum((0, 1)).astype(jnp.float32)
+    return counts, load

@@ -1,0 +1,4 @@
+from .ops import spatial_match
+from .ref import spatial_match_ref
+
+__all__ = ["spatial_match", "spatial_match_ref"]

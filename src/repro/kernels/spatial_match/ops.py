@@ -1,0 +1,36 @@
+"""Public jit'd wrapper for the spatial-match kernel: padding, layout
+transform (entity-major → coordinate-major), and output slicing."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .spatial_match import TN, TQ, spatial_match_kernel
+
+
+def _pad_to(x, mult, axis, fill):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spatial_match(points, rects, *, interpret: bool = False):
+    """points: (N, 2) f32; rects: (Q, 4) f32 (x0, y0, x1, y1).
+
+    Returns (point_counts (N,) int32, query_counts (Q,) int32).
+    Padding points at +inf and rects as empty boxes keeps the counts
+    exact for the real entries."""
+    n, q = points.shape[0], rects.shape[0]
+    pts_t = _pad_to(points.T.astype(jnp.float32), TN, 1, jnp.inf)
+    # empty padded rects: x0 = +inf, x1 = -inf never contain anything
+    rect_pad = jnp.array([jnp.inf, jnp.inf, -jnp.inf, -jnp.inf], jnp.float32)
+    rt = rects.T.astype(jnp.float32)
+    pad = (-q) % TQ
+    if pad:
+        rt = jnp.concatenate([rt, jnp.tile(rect_pad[:, None], (1, pad))], 1)
+    pcnt, qcnt = spatial_match_kernel(pts_t, rt, interpret=interpret)
+    return pcnt[:n].astype(jnp.int32), qcnt[:q].astype(jnp.int32)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the spatial publish/subscribe join.
+
+Given points (N, 2) and query rectangles (Q, 4) = (x0, y0, x1, y1),
+count for each point the queries containing it, and for each query the
+points it matched.  This is the data-plane hot loop of the paper's
+location-aware pub/sub application (§2): every geotagged tweet is
+checked against the continuous queries of its partition.
+"""
+import jax.numpy as jnp
+
+
+def match_matrix(points, rects):
+    """(N, Q) bool containment matrix."""
+    px = points[:, 0][:, None]
+    py = points[:, 1][:, None]
+    x0, y0, x1, y1 = (rects[:, 0][None, :], rects[:, 1][None, :],
+                      rects[:, 2][None, :], rects[:, 3][None, :])
+    return (px >= x0) & (px <= x1) & (py >= y0) & (py <= y1)
+
+
+def spatial_match_ref(points, rects):
+    """Returns (point_counts (N,) int32, query_counts (Q,) int32)."""
+    m = match_matrix(points, rects)
+    return m.sum(1, dtype=jnp.int32), m.sum(0, dtype=jnp.int32)

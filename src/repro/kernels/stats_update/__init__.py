@@ -1,0 +1,4 @@
+from .ops import close_round
+from .ref import close_round_ref
+
+__all__ = ["close_round", "close_round_ref"]

@@ -1,0 +1,19 @@
+"""Public wrapper: pad (P, G1) to tile multiples, run the kernel, slice."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import NUM_CH
+from .stats_update import P_TILE, stats_update_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("decay", "interpret"))
+def close_round(bank, *, decay: float = 0.5, interpret: bool = False):
+    """Algorithm 2 for one stats bank (NUM_CH, P, G1); any P/G1."""
+    _, p, g1 = bank.shape
+    pp = (-p) % P_TILE
+    pg = (-g1) % 128
+    padded = jnp.pad(bank.astype(jnp.float32), ((0, 0), (0, pp), (0, pg)))
+    out = stats_update_kernel(padded, decay=decay, interpret=interpret)
+    return out[:, :p, :g1]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the Algorithm-2 round close on one stats bank.
+
+Mirrors repro.core.statistics.close_round for a single (NUM_CH, P, G1)
+bank (rows or cols): fold collectors into maintained statistics via
+prefix sums, reset collectors.
+"""
+import jax.numpy as jnp
+
+# channel order must match repro.core.statistics
+N, Q, R, SPANQ, PRESPANQ, C_N, C_Q, C_SPAN = range(8)
+NUM_CH = 8
+
+
+def close_round_ref(bank, decay: float = 0.5):
+    """bank: (NUM_CH, P, G1) float32 → updated bank (same shape)."""
+    cum_n = jnp.cumsum(bank[C_N], axis=-1)
+    cum_q = jnp.cumsum(bank[C_Q], axis=-1)
+    span_new = jnp.cumsum(bank[C_SPAN], axis=-1)
+    zeros = jnp.zeros_like(bank[C_N])
+    return jnp.stack([
+        bank[N] * decay + cum_n,
+        bank[Q] + cum_q,
+        cum_n + cum_q,
+        bank[SPANQ] + span_new,
+        span_new,
+        zeros, zeros, zeros,
+    ])

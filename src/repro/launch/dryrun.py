@@ -1,0 +1,141 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init); DRYRUN_XLA_FLAGS lets tests use a small
+host-device mesh.
+
+For each cell:  jit(step).lower(*abstract_args).compile()  under the
+production mesh, then record memory_analysis / cost_analysis /
+collective schedule into a JSON artifact (read by EXPERIMENTS.md and
+benchmarks/roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma_7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from .. import configs
+from . import roofline as RL
+from .mesh import make_mesh, make_production_mesh
+from .specs import build_cell, lower_cell
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
+            mesh_override=None, remat: str = "nothing", zero1: bool = True,
+            microbatches: int = 2, layout: str = "tp", tag: str = "") -> dict:
+    t0 = time.time()
+    mesh = mesh_override or make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "chips": chips,
+           "multi_pod": multi_pod, "remat": remat, "zero1": zero1, "tag": tag}
+    try:
+        ok, why = configs.shape_supported(configs.get_config(arch), shape)
+        if not ok:
+            rec.update(status="skip", reason=why)
+            return _emit(rec, out_dir)
+        cfg = configs.get_config(arch)
+        kind, seq, batch = configs.SHAPES[shape]
+        mb = microbatches if kind == "train" else 1
+        cell = build_cell(arch, shape, mesh, remat=remat, zero1=zero1,
+                          microbatches=mb, layout=layout)
+        rec["microbatches"] = mb
+        rec["layout"] = layout
+        lowered = lower_cell(cell, mesh)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        rec["memory"] = RL.memory_stats(compiled)
+        from ..models.model import num_periods
+        from .analytic import analytic_cost
+        ana = analytic_cost(cfg, cell.kind, batch, seq, remat=remat)
+        rec["analytic"] = ana
+        rec["roofline"] = RL.roofline_terms(compiled, chips, analytic=ana,
+                                            scan_trip_hint=num_periods(cfg))
+        rec["model"] = RL.model_flops(cfg, cell.kind, cell.tokens_per_step)
+        rec["model"]["useful_fraction"] = (
+            rec["model"]["model_flops"] / ana["flops"]
+            if ana["flops"] else 0.0)
+        rec["tokens_per_step"] = cell.tokens_per_step
+        rec["kind"] = cell.kind
+        rec["status"] = "ok"
+        print(f"[dryrun] {arch} × {shape} × {mesh_name}: OK "
+              f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s, "
+              f"peak {rec['memory']['peak_hbm_bytes']/2**30:.2f} GiB/dev, "
+              f"dominant={rec['roofline']['dominant']})")
+    except Exception as e:  # noqa: BLE001 — a failing cell is a finding
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {arch} × {shape} × {mesh_name}: FAIL {e}")
+    return _emit(rec, out_dir)
+
+
+def _emit(rec: dict, out_dir: str) -> dict:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"_{rec['tag']}" if rec.get("tag") else ""
+        path = os.path.join(
+            out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--remat", default="nothing", choices=["none", "dots",
+                                                        "dots_no_batch",
+                                                        "nothing"])
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--layout", default="tp", choices=["tp", "tp_zero3", "fsdp", "dp", "tp_unroll"])
+    ap.add_argument("--mesh-shape", default=None,
+                    help="debug mesh, e.g. 2x4 (axes data,model) or 2x2x2")
+    args = ap.parse_args()
+
+    mesh_override = None
+    if args.mesh_shape:
+        dims = tuple(int(x) for x in args.mesh_shape.split("x"))
+        axes = (("data", "model") if len(dims) == 2
+                else ("pod", "data", "model"))
+        mesh_override = make_mesh(dims, axes)
+
+    archs = configs.ARCH_IDS if args.arch in (None, "all") else [args.arch]
+    shapes = list(configs.SHAPES) if args.shape in (None, "all") else [args.shape]
+    cells = ([(a, s) for a in configs.ARCH_IDS for s in configs.SHAPES]
+             if args.all else [(a, s) for a in archs for s in shapes])
+    pods = [False, True] if args.both_meshes else [args.multi_pod]
+    n_ok = n_fail = n_skip = 0
+    for arch, shape in cells:
+        for mp in pods:
+            rec = run_one(arch, shape, multi_pod=mp, out_dir=args.out,
+                          mesh_override=mesh_override, remat=args.remat,
+                          zero1=not args.no_zero1, tag=args.tag,
+                          microbatches=args.microbatches, layout=args.layout)
+            n_ok += rec["status"] == "ok"
+            n_fail += rec["status"] == "fail"
+            n_skip += rec["status"] == "skip"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

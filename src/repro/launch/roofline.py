@@ -1,0 +1,170 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs_total / (chips × 197e12)        # bf16 peak
+  memory     = HLO_bytes_total / (chips × 819e9)         # HBM bw
+  collective = collective_bytes_total / (chips × 50e9)   # ICI per link
+
+`compiled.cost_analysis()` reports the *per-device* (SPMD-partitioned)
+module; we multiply by chip count to get totals (verified by the
+calibration check in tests/test_dryrun_small.py: sharding a matmul K
+ways divides reported flops by K).  collective_bytes sums the operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction in the partitioned HLO.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12      # TPU v5e bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str, scan_trip_hint: int = 1) -> dict:
+    """Sum transferred bytes per collective kind from partitioned HLO.
+
+    The optimized HLO writes operands as value references (`%dot`), so we
+    size each collective by its *result* shape(s) — for all-reduce /
+    all-to-all / collective-permute the result equals the operand; for a
+    ring all-gather the result size is exactly the bytes a device
+    receives; reduce-scatter is under-counted by the group size (noted —
+    it is also the rarest op in these programs).  Collectives inside a
+    `while` body execute once per trip; callers multiply by the known
+    trip count via ``scan_trip_hint`` when the op sits in the layer scan.
+    """
+    out: dict[str, int] = {}
+    count: dict[str, int] = {}
+    in_body = False
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # computation headers look like:  %name (args) -> type {
+        if stripped.endswith("{") and "(" in stripped and "=" not in stripped:
+            name = stripped.split("(")[0].strip().lstrip("%")
+            in_body = "body" in name
+            continue
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        result_part = line.split("=", 1)[1].split(kind)[0]
+        nbytes = sum(_shape_bytes(dt, dims)
+                     for dt, dims in _SHAPE_RE.findall(result_part))
+        mult = scan_trip_hint if in_body else 1
+        out[kind] = out.get(kind, 0) + nbytes * mult
+        count[kind] = count.get(kind, 0) + 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["ops"] = sum(count.values())
+    out["by_count"] = count
+    return out
+
+
+def roofline_terms(compiled, num_chips: int, analytic: dict | None = None,
+                   scan_trip_hint: int = 1) -> dict:
+    """Three-term roofline.  compute/memory use the analytic model when
+    provided (XLA cost_analysis undercounts scanned bodies — the raw
+    numbers and the undercount ratio are still recorded); the collective
+    term always comes from the compiled HLO schedule."""
+    cost = compiled.cost_analysis()
+    flops_dev_xla = float(cost.get("flops", 0.0))
+    bytes_dev_xla = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text(), scan_trip_hint)
+    coll_total = float(coll["total"])   # per-device partitioned module
+    if analytic is not None:
+        flops_dev = analytic["flops"] / num_chips
+        bytes_dev = analytic["bytes"] / num_chips
+    else:
+        flops_dev, bytes_dev = flops_dev_xla, bytes_dev_xla
+    terms = {
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "xla_flops_per_device": flops_dev_xla,
+        "xla_bytes_per_device": bytes_dev_xla,
+        "xla_flops_undercount": (flops_dev / flops_dev_xla
+                                 if flops_dev_xla else 0.0),
+        "collective_bytes_per_device": coll_total,
+        "collectives": {k: v for k, v in coll.items()
+                        if k not in ("total", "ops", "by_count")},
+        "collective_op_count": coll["ops"],
+        "t_compute": flops_dev / PEAK_FLOPS,
+        "t_memory": bytes_dev / HBM_BW,
+        "t_collective": coll_total / ICI_BW,
+    }
+    dominant = max(("t_compute", "t_memory", "t_collective"),
+                   key=lambda k: terms[k])
+    terms["dominant"] = dominant.replace("t_", "")
+    # roofline fraction: useful model flops over the bound implied by the
+    # dominant term (what fraction of peak the step could reach)
+    t_star = max(terms[dominant], 1e-30)
+    terms["step_time_bound_s"] = t_star
+    terms["achievable_flops_frac"] = min(
+        1.0, terms["t_compute"] / t_star)
+    return terms
+
+
+def memory_stats(compiled) -> dict:
+    m = compiled.memory_analysis()
+    return {
+        "argument_bytes": int(m.argument_size_in_bytes),
+        "output_bytes": int(m.output_size_in_bytes),
+        "temp_bytes": int(m.temp_size_in_bytes),
+        "alias_bytes": int(m.alias_size_in_bytes),
+        "code_bytes": int(m.generated_code_size_in_bytes),
+        "peak_hbm_bytes": int(m.argument_size_in_bytes
+                              + m.output_size_in_bytes
+                              - m.alias_size_in_bytes
+                              + m.temp_size_in_bytes),
+    }
+
+
+def model_flops(cfg, kind: str, tokens: int) -> dict:
+    """MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference)."""
+    n_total = cfg.param_count()
+    n_active = active_param_count(cfg)
+    factor = 6 if kind == "train" else 2
+    return {
+        "params_total": n_total,
+        "params_active": n_active,
+        "model_flops": factor * n_active * tokens,
+        "factor": factor,
+    }
+
+
+def active_param_count(cfg) -> int:
+    """Parameter count with routed experts scaled by top_k/num_experts."""
+    import jax
+    import numpy as np
+    from ..models import model as M
+    from ..models import layers as L
+    spec = M.param_spec(cfg)
+    total = 0
+    for path, lf in jax.tree.flatten_with_path(spec, is_leaf=L.is_leaf)[0]:
+        n = int(np.prod(lf["shape"]))
+        keypath = jax.tree_util.keystr(path)
+        if (cfg.moe is not None and L.P.EXPERT in lf["axes"]
+                and "router" not in keypath):
+            n = int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        total += n
+    return total

@@ -1,0 +1,85 @@
+"""Serving launcher: prefill + decode loop with SWARM request routing.
+
+Admits a stream of sessions, routes them across replica groups with the
+SWARM protocol (sessions = continuous queries over hash space), runs
+batched prefill + decode on the local replica, and rebalances every
+round — the serving-side integration of DESIGN.md §4.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b \
+      --smoke --sessions 64 --steps 16 [--replicas 4]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import configs
+from ..models import init_params
+from ..models.model import decode_step, prefill
+from ..serve import SwarmRequestRouter
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2_1_8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sessions", type=int, default=64)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    if not cfg.has_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only — no decode path")
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    router = SwarmRequestRouter(num_replicas=args.replicas, beta=4)
+    sessions = np.arange(args.sessions)
+    assignment = router.admit(sessions)
+    print(f"[serve] {cfg.name}: {args.sessions} sessions across "
+          f"{args.replicas} replicas "
+          f"(initial spread: {np.bincount(assignment, minlength=args.replicas).tolist()})")
+
+    # local replica executes the batch assigned to replica 0
+    local = sessions[assignment == 0]
+    if len(local) == 0:
+        local = sessions[:1]
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (len(local), args.prompt_len)),
+        jnp.int32)
+    t0 = time.time()
+    logits, cache, _ = prefill(params, cfg, token_ids=prompts,
+                               max_seq=args.prompt_len + args.steps)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    print(f"[serve] prefill {prompts.shape} in {time.time() - t0:.2f}s")
+
+    t0 = time.time()
+    out = [tok]
+    for step in range(args.steps - 1):
+        logits, cache, _ = decode_step(params, cfg, cache, tok)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out.append(tok)
+        router.step_tokens(local)           # SWARM decode-load accounting
+        rep = router.rebalance()
+        if rep.action != "none":
+            print(f"[serve]   round {step}: SWARM {rep.action} "
+                  f"(m_H={rep.m_h} → m_L={rep.m_l})")
+    toks = jnp.concatenate(out, axis=1)
+    dt = time.time() - t0
+    print(f"[serve] decoded {toks.shape[0]}×{toks.shape[1]} tokens in "
+          f"{dt:.2f}s ({toks.size / dt:.0f} tok/s on this host)")
+    loads = router.replica_loads()
+    print(f"[serve] replica load CV = {loads.std() / (loads.mean() + 1e-9):.3f}")
+
+
+if __name__ == "__main__":
+    main()

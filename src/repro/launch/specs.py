@@ -1,0 +1,153 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+`build_cell(arch, shape_name, mesh)` returns everything the dry-run
+needs to lower one cell: the step function (positional args only), the
+abstract arguments, and explicit in/out shardings — weak-type-correct,
+shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+from .. import configs
+from ..distributed import sharding as SH
+from ..models import abstract_cache, abstract_params
+from ..models import model as MODEL
+from ..models.config import ModelConfig
+from ..serve.engine import cache_shardings
+from ..train import (AdamWConfig, abstract_opt_state, make_train_step,
+                     opt_state_shardings)
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                  # train | prefill | decode
+    fn: object                 # step function (positional args)
+    args: tuple                # abstract args
+    in_shardings: tuple
+    out_shardings: object      # pytree or None (auto)
+    tokens_per_step: int
+
+
+def _batch_abstract(cfg: ModelConfig, batch: int, seq: int, mesh,
+                    *, labels: bool):
+    bsh2 = SH.batch_sharding(mesh, 2)
+    bsh3 = SH.batch_sharding(mesh, 3)
+    if cfg.frontend is not None:
+        args = {"embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                               jnp.bfloat16)}
+        shard = {"embeds": bsh3}
+    else:
+        args = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        shard = {"tokens": bsh2}
+    if labels:
+        args["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        shard["labels"] = bsh2
+    return args, shard
+
+
+def _model_inputs(batch_dict):
+    if "embeds" in batch_dict:
+        return {"embeds": batch_dict["embeds"]}
+    return {"token_ids": batch_dict["tokens"]}
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, remat: str = "nothing",
+               zero1: bool = True, microbatches: int = 1,
+               layout: str = "tp") -> Cell:
+    """layout: "tp" (default TP+DP), "tp_zero3" (TP + fully-sharded fp32
+    masters), "fsdp" (pure DP, weights gathered per use)."""
+    cfg = configs.get_config(arch)
+    kind, seq, batch = configs.SHAPES[shape_name]
+    ok, why = configs.shape_supported(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"skip {arch}×{shape_name}: {why}")
+    if layout == "fsdp":
+        constraint = SH.make_constraint(mesh, SH.FSDP_RULES)
+        p_sh = SH.param_shardings_fsdp(cfg, mesh)
+    elif layout == "dp":
+        constraint = SH.make_constraint(mesh, SH.DP_RULES)
+        p_sh = SH.param_shardings_replicated(cfg, mesh)
+    else:
+        constraint = SH.make_constraint(mesh)
+        p_sh = SH.param_shardings(cfg, mesh, zero3=(layout == "tp_zero3"))
+    p_abs = abstract_params(cfg)
+
+    if kind == "train":
+        o_abs = abstract_opt_state(p_abs)
+        o_sh = (jax.tree.map(lambda x: x, p_sh)
+                if layout in ("fsdp", "tp_zero3")
+                else opt_state_shardings(p_abs, p_sh, mesh, zero1=zero1))
+        if layout in ("fsdp", "tp_zero3"):
+            from jax.sharding import PartitionSpec as _PS
+            o_sh = {"m": o_sh, "v": jax.tree.map(lambda x: x, o_sh),
+                    "count": NamedSharding(mesh, _PS())}
+        b_abs, b_sh = _batch_abstract(cfg, batch, seq, mesh, labels=True)
+        step = make_train_step(cfg, AdamWConfig(), constraint=constraint,
+                               remat=remat, microbatches=microbatches)
+        return Cell(arch, shape_name, kind, step,
+                    (p_abs, o_abs, b_abs), (p_sh, o_sh, b_sh),
+                    (p_sh, o_sh, None), batch * seq)
+
+    if kind == "prefill":
+        b_abs, b_sh = _batch_abstract(cfg, batch, seq, mesh, labels=False)
+        if cfg.encoder_only:
+            def prefill_step(params, batch_dict):
+                logits, _ = MODEL.forward(params, cfg, constraint=constraint,
+                                          **_model_inputs(batch_dict))
+                return logits
+            out_sh = None
+        else:
+            c_sh = cache_shardings(cfg, mesh, batch, seq)
+
+            def prefill_step(params, batch_dict):
+                logits, cache, _ = MODEL.prefill(params, cfg, max_seq=seq,
+                                                 constraint=constraint,
+                                                 **_model_inputs(batch_dict))
+                return logits, cache
+            out_sh = (None, c_sh)
+        return Cell(arch, shape_name, kind, prefill_step,
+                    (p_abs, b_abs), (p_sh, b_sh), out_sh, batch * seq)
+
+    # decode: one new token against a seq-long cache
+    c_abs = abstract_cache(cfg, batch, seq)
+    c_sh = cache_shardings(cfg, mesh, batch, seq)
+    tok_abs = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    tok_sh = (SH.batch_sharding(mesh, 2) if batch > 1
+              else NamedSharding(mesh, PS()))
+
+    unroll = (layout == "tp_unroll")
+
+    def serve_step(params, cache, token_ids):
+        logits, new_cache, _ = MODEL.decode_step(params, cfg, cache,
+                                                 token_ids,
+                                                 constraint=constraint,
+                                                 unroll=unroll)
+        return logits, new_cache
+
+    return Cell(arch, shape_name, kind, serve_step,
+                (p_abs, c_abs, tok_abs), (p_sh, c_sh, tok_sh),
+                (None, c_sh), batch)
+
+
+def lower_cell(cell: Cell, mesh, donate: bool = True):
+    """Donation: train steps donate (params, opt) — the update is in
+    place; decode donates the cache — the KV buffers are reused, halving
+    decode HBM.  Prefill allocates its cache fresh (nothing to donate)."""
+    donate_argnums = ()
+    if donate and cell.kind == "train":
+        donate_argnums = (0, 1)
+    elif donate and cell.kind == "decode":
+        donate_argnums = (1,)
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=donate_argnums)
+        return jitted.lower(*cell.args)

@@ -1,0 +1,11 @@
+"""Model zoo: the ten assigned architectures on shared layer substrate."""
+from .config import MambaConfig, ModelConfig, MoEConfig, XLSTMConfig
+from .model import (abstract_cache, abstract_params, cache_spec, decode_step,
+                    forward, init_cache, init_params, loss_fn, param_spec,
+                    prefill)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MambaConfig", "XLSTMConfig",
+    "param_spec", "abstract_params", "init_params", "forward", "prefill",
+    "decode_step", "loss_fn", "cache_spec", "abstract_cache", "init_cache",
+]

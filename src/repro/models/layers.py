@@ -1,0 +1,314 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, gated MLPs.
+
+Functional style: params are nested dicts of jnp arrays; every layer has
+``<layer>_spec`` (shapes — the single source of truth, used both by
+init and by the dry-run's ShapeDtypeStruct lowering) and ``<layer>``
+(apply).  Logical sharding axes are annotated via
+distributed.sharding.logical_constraint on activations and by the spec's
+axis names on weights.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Param-spec helpers.  A spec leaf is (shape, logical_axes) — logical axis
+# names map to mesh axes in distributed/sharding.py.
+# ---------------------------------------------------------------------------
+
+class P:  # logical axis names
+    VOCAB = "vocab"
+    EMBED = "embed"
+    HEADS = "heads"
+    KV_HEADS = "kv_heads"
+    HEAD_DIM = "head_dim"
+    FF = "ff"
+    EXPERT = "expert"
+    LAYERS = "layers"
+    NONE = None
+
+
+def leaf(shape, axes):
+    assert len(shape) == len(axes), (shape, axes)
+    return {"shape": tuple(int(s) for s in shape), "axes": tuple(axes)}
+
+
+def is_leaf(x):
+    return isinstance(x, dict) and "shape" in x and "axes" in x
+
+
+# ---------------------------------------------------------------------------
+# Segmented recurrence scan (memory-bounded backward for SSM/LSTM layers)
+# ---------------------------------------------------------------------------
+
+RECURRENCE_SEGMENT = 256
+
+
+def segmented_scan(step, carry, xs, seg_len: int = RECURRENCE_SEGMENT):
+    """`lax.scan(step, carry, xs)` with chunked rematerialization.
+
+    A plain differentiated scan saves every per-step carry for the
+    backward pass — for recurrent mixers (mamba/mLSTM/sLSTM) that is
+    O(S × state) HBM and dominates training memory at seq 4k+.  Splitting
+    the sequence into segments and checkpointing each segment keeps only
+    the segment-boundary carries (S/seg_len × state) and recomputes
+    inside segments — the classic sqrt-style remat for recurrences.
+    """
+    leaves = jax.tree.leaves(xs)
+    length = leaves[0].shape[0]
+    if length % seg_len != 0 or length <= seg_len:
+        return jax.lax.scan(step, carry, xs)
+    n_seg = length // seg_len
+
+    def reshape(x):
+        return x.reshape(n_seg, seg_len, *x.shape[1:])
+
+    xs_seg = jax.tree.map(reshape, xs)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def one_segment(c, seg_xs):
+        return jax.lax.scan(step, c, seg_xs)
+
+    carry, ys_seg = jax.lax.scan(one_segment, carry, xs_seg)
+    ys = jax.tree.map(
+        lambda y: y.reshape(length, *y.shape[2:]), ys_seg)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d):
+    return {"scale": leaf((d,), (P.EMBED,))}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float, positions):
+    """positions: (...,) int32 → (cos, sin) each (..., head_dim/2) f32."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, Dh); cos/sin: (S, Dh/2) or (B, S, Dh/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) → broadcast over batch and heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:              # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attention_spec(cfg: ModelConfig):
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "wq": leaf((d, h, dh), (P.EMBED, P.HEADS, P.HEAD_DIM)),
+        "wk": leaf((d, hkv, dh), (P.EMBED, P.KV_HEADS, P.HEAD_DIM)),
+        "wv": leaf((d, hkv, dh), (P.EMBED, P.KV_HEADS, P.HEAD_DIM)),
+        "wo": leaf((h, dh, d), (P.HEADS, P.HEAD_DIM, P.EMBED)),
+    }
+
+
+SDPA_CHUNK = 512           # query-block size for the chunked path
+SDPA_DIRECT_MAX = 1024     # use the direct path when s_q ≤ this
+
+
+def _mask(sq, skv, q_base, q_offset, causal, window):
+    rows = jnp.arange(sq)[:, None] + q_base + q_offset
+    cols = jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= cols <= rows
+    if window is not None:
+        m &= cols > rows - window
+    return m
+
+
+def _sdpa_direct(q, k, v, *, causal, window, q_offset, q_base=0):
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, sq, hkv, group, dh)
+    scale = 1.0 / np.sqrt(dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    m = _mask(sq, skv, q_base, q_offset, causal, window)
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, dh)
+
+
+def _sdpa_chunked(q, k, v, *, causal, window, q_offset):
+    """Query-chunked attention (flash-style): scans over query blocks so
+    the (S, S) score matrix never materializes — the XLA analogue of
+    kernels/flash_attention (which is the real-TPU execution path).
+    Each chunk is rematerialized in the backward pass (flash-backward
+    semantics): residuals are just q/k/v, never the score matrices.
+    Memory: O(chunk × S_kv) transient per device."""
+    b, sq, h, dh = q.shape
+    n_chunks = sq // SDPA_CHUNK
+    qc = q.reshape(b, n_chunks, SDPA_CHUNK, h, dh)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk(qi, k, v, base):
+        return _sdpa_direct(qi, k, v, causal=causal, window=window,
+                            q_offset=q_offset, q_base=base)
+
+    def one(carry, xs):
+        i, qi = xs
+        return carry, chunk(qi, k, v, i * SDPA_CHUNK)
+
+    _, outs = jax.lax.scan(one, 0, (jnp.arange(n_chunks),
+                                    jnp.moveaxis(qc, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dh)
+
+
+def _sdpa(q, k, v, *, causal, window, q_offset, constraint=None):
+    """q (B,S,H,Dh), k/v (B,Skv,Hkv,Dh) → (B,S,H,Dh).  Dispatches to the
+    direct path for short queries and the chunked flash-style path for
+    long ones (the Pallas kernel in kernels/flash_attention is the
+    TPU-executed equivalent, validated against the same oracle)."""
+    sq = q.shape[1]
+    if sq <= SDPA_DIRECT_MAX or sq % SDPA_CHUNK != 0:
+        return _sdpa_direct(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset)
+    return _sdpa_chunked(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset)
+
+
+def attention(p, x, cfg: ModelConfig, *, positions, kv_cache=None,
+              cache_offset=None, constraint=None):
+    """Returns (out, new_kv) — new_kv is (k, v) for cache-less prefill or
+    the updated cache when kv_cache=(k_cache, v_cache) is given."""
+    cons = constraint or (lambda t, axes: t)
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    q = cons(q, ("batch", None, "heads", None))
+    k = cons(k, ("batch", None, "kv_heads", None))
+    if not cfg.encoder_only:
+        cos, sin = rope_frequencies(cfg.resolved_head_dim, cfg.rope_theta,
+                                    positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if kv_cache is not None:
+        kc, vc = kv_cache
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, cache_offset, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, cache_offset, 0, 0))
+        k_all, v_all = kc, vc
+        new_kv = (kc, vc)
+        q_offset = cache_offset
+    else:
+        k_all, v_all = k, v
+        new_kv = (k, v)
+        q_offset = 0
+    o = _sdpa(q, k_all, v_all, causal=not cfg.encoder_only,
+              window=cfg.sliding_window, q_offset=q_offset)
+    o = cons(o, ("batch", None, "heads", None))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dtype))
+    return cons(out, ("batch", None, "embed")), new_kv
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_spec(cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act in ("silu", "gelu_glu"):
+        return {
+            "w_gate": leaf((d, f), (P.EMBED, P.FF)),
+            "w_up": leaf((d, f), (P.EMBED, P.FF)),
+            "w_down": leaf((f, d), (P.FF, P.EMBED)),
+        }
+    return {  # plain 2-layer MLP (starcoder2)
+        "w_up": leaf((d, f), (P.EMBED, P.FF)),
+        "w_down": leaf((f, d), (P.FF, P.EMBED)),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig, constraint=None):
+    cons = constraint or (lambda t, axes: t)
+    dtype = x.dtype
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dtype))
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dtype)))
+    h = cons(h, ("batch", None, "ff"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dtype))
+    return cons(out, ("batch", None, "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embedding_spec(cfg: ModelConfig):
+    spec = {"tok": leaf((cfg.vocab_size, cfg.d_model), (P.VOCAB, P.EMBED))}
+    if cfg.frontend is not None:
+        # modality frontend STUB: linear projection of precomputed
+        # patch/frame embeddings into the backbone width
+        spec["frontend_proj"] = leaf((cfg.d_model, cfg.d_model),
+                                     (P.EMBED, P.EMBED))
+    return spec
+
+
+def embed_tokens(p, token_ids, cfg: ModelConfig):
+    return jnp.take(p["tok"], token_ids, axis=0).astype(_dt(cfg))
+
+
+def embed_frontend(p, feats, cfg: ModelConfig):
+    return jnp.einsum("bsd,de->bse", feats.astype(_dt(cfg)),
+                      p["frontend_proj"].astype(_dt(cfg)))
+
+
+def lm_head_spec(cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": leaf((cfg.d_model, cfg.vocab_size), (P.EMBED, P.VOCAB))}
+
+
+def lm_head(params, x, cfg: ModelConfig):
+    w = (params["embed"]["tok"].T if cfg.tie_embeddings
+         else params["lm_head"]["w"])
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32

@@ -1,0 +1,116 @@
+"""Mamba (selective SSM) block — the SSM mixer of the jamba hybrid.
+
+Selective scan over the sequence runs as ``lax.scan`` with the (B,
+d_inner, d_state) state as carry: HLO stays O(1) in sequence length and
+*no* (S, d_inner, d_state) tensor is ever materialized (the naive
+associative-scan form needs terabytes at jamba scale).  The sequential
+dependency is intrinsic to the recurrence; see EXPERIMENTS.md §Perf for
+the chunked state-space-dual variant evaluated during hillclimbing.
+
+Decode is the O(1) single-step state update — this is what makes the
+hybrid family eligible for long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import MambaConfig, ModelConfig
+from .layers import P, leaf
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or (cfg.d_model + 15) // 16
+    return m, d_inner, dt_rank
+
+
+def mamba_spec(cfg: ModelConfig):
+    m, d_inner, dt_rank = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "in_proj": leaf((d, 2 * d_inner), (P.EMBED, P.FF)),
+        "conv_w": leaf((m.d_conv, d_inner), (None, P.FF)),
+        "conv_b": leaf((d_inner,), (P.FF,)),
+        "x_proj": leaf((d_inner, dt_rank + 2 * m.d_state), (P.FF, None)),
+        "dt_proj_w": leaf((dt_rank, d_inner), (None, P.FF)),
+        "dt_proj_b": leaf((d_inner,), (P.FF,)),
+        "a_log": leaf((d_inner, m.d_state), (P.FF, None)),
+        "d_skip": leaf((d_inner,), (P.FF,)),
+        "out_proj": leaf((d_inner, d), (P.FF, P.EMBED)),
+    }
+
+
+def _ssm_inputs(p, xz, cfg: ModelConfig):
+    """Shared pre-scan computation.  xz (B, S, d_inner) post-conv/silu."""
+    m, d_inner, dt_rank = _dims(cfg)
+    proj = jnp.einsum("bsc,cr->bsr", xz, p["x_proj"].astype(xz.dtype))
+    dt_in = proj[..., :dt_rank]
+    b_t = proj[..., dt_rank:dt_rank + m.d_state].astype(jnp.float32)
+    c_t = proj[..., dt_rank + m.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rc->bsc", dt_in, p["dt_proj_w"].astype(xz.dtype))
+        .astype(jnp.float32) + p["dt_proj_b"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (d_inner, d_state)
+    return dt, a, b_t, c_t
+
+
+def _conv1d(p, x, d_conv: int, state=None):
+    """Causal depthwise conv.  x (B, S, C).  With ``state`` (B, d_conv−1,
+    C) runs incrementally and returns (y, new_state)."""
+    if state is not None:
+        window = jnp.concatenate([state, x], axis=1)       # (B, d_conv-1+S, C)
+        new_state = window[:, -(d_conv - 1):]
+    else:
+        window = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+        new_state = window[:, -(d_conv - 1):]
+    w = p["conv_w"].astype(x.dtype)                        # (d_conv, C)
+    y = sum(window[:, i:i + x.shape[1]] * w[i] for i in range(d_conv))
+    return y + p["conv_b"].astype(x.dtype), new_state
+
+
+def mamba_block(p, x, cfg: ModelConfig, state=None, constraint=None):
+    """x (B, S, d_model) → (out, new_state).
+
+    state = (ssm_h (B, d_inner, d_state) f32, conv (B, d_conv−1, d_inner))
+    for incremental decode; None for full-sequence processing."""
+    cons = constraint or (lambda t, axes: t)
+    m, d_inner, _ = _dims(cfg)
+    dtype = x.dtype
+    xi, z = jnp.split(jnp.einsum("bsd,dc->bsc", x, p["in_proj"].astype(dtype)),
+                      2, axis=-1)
+    xi = cons(xi, ("batch", None, "ff"))
+    conv_state = state[1] if state is not None else None
+    xi, new_conv = _conv1d(p, xi, m.d_conv, conv_state)
+    xi = jax.nn.silu(xi)
+    dt, a, b_t, c_t = _ssm_inputs(p, xi, cfg)
+
+    h0 = (state[0] if state is not None
+          else jnp.zeros((x.shape[0], d_inner, m.d_state), jnp.float32))
+
+    def step(h, inp):
+        # xs ride in bf16 (half the saved-residual memory and half the
+        # activation-grad collective bytes); state math stays f32
+        dt_t, b_tt, c_tt, x_tt = (t.astype(jnp.float32) for t in inp)
+        da = jnp.exp(dt_t[..., None] * a)                  # (B, C, N)
+        h = da * h + (dt_t * x_tt)[..., None] * b_tt[:, None, :]
+        y = jnp.einsum("bcn,bn->bc", h, c_tt)
+        return h, y.astype(dtype)
+
+    xs = (jnp.moveaxis(dt.astype(dtype), 1, 0),
+          jnp.moveaxis(b_t.astype(dtype), 1, 0),
+          jnp.moveaxis(c_t.astype(dtype), 1, 0),
+          jnp.moveaxis(xi, 1, 0))
+    from .layers import segmented_scan
+    h_last, ys = segmented_scan(step, h0, xs)
+    y = (jnp.moveaxis(ys, 0, 1).astype(jnp.float32)
+         + xi.astype(jnp.float32) * p["d_skip"].astype(jnp.float32))
+    y = (y.astype(dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"].astype(dtype))
+    return cons(out, ("batch", None, "embed")), (h_last, new_conv)
+
+
+def mamba_state_spec(cfg: ModelConfig, batch: int):
+    m, d_inner, _ = _dims(cfg)
+    return ((batch, d_inner, m.d_state), (batch, m.d_conv - 1, d_inner))

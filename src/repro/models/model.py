@@ -1,0 +1,452 @@
+"""Model assembly for all ten assigned architectures.
+
+Layers are grouped into *periods* — the repeating heterogeneous unit
+(jamba: 1 attention + 7 mamba per 8 layers; xlstm: 1 sLSTM + 7 mLSTM;
+homogeneous families: period = 1 layer) — and the model scans over
+stacked period parameters (compact HLO, fast multi-pod compiles).
+
+Three entry points, all pure functions of (params, inputs):
+  forward(...)      — full-sequence logits (+ MoE aux) — training
+  prefill(...)      — forward + cache construction — serving prefill
+  decode_step(...)  — one-token incremental step over the cache
+
+`param_spec` is the single source of truth for parameter shapes and
+logical sharding axes; `abstract_params` turns it into ShapeDtypeStructs
+for allocation-free dry-run lowering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import mamba as M
+from . import moe as MOE
+from . import xlstm as X
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Period patterns
+# ---------------------------------------------------------------------------
+
+def period_pattern(cfg: ModelConfig):
+    """List of (mixer, ffn) per position in one period."""
+    if cfg.family == "hybrid":
+        pat = []
+        for pos in range(cfg.attn_layer_period):
+            mixer = "attn" if pos == 0 else "mamba"
+            ffn = "moe" if (cfg.moe and pos % cfg.moe.layer_period == 1) else "mlp"
+            pat.append((mixer, ffn))
+        return pat
+    if cfg.family == "ssm":
+        period = cfg.xlstm.slstm_period
+        return [("slstm" if pos == 0 else "mlstm", None) for pos in range(period)]
+    ffn = "moe" if cfg.moe is not None else "mlp"
+    return [("attn", ffn)]
+
+
+def num_periods(cfg: ModelConfig) -> int:
+    plen = len(period_pattern(cfg))
+    assert cfg.num_layers % plen == 0, (cfg.name, cfg.num_layers, plen)
+    return cfg.num_layers // plen
+
+
+# ---------------------------------------------------------------------------
+# Param spec / init
+# ---------------------------------------------------------------------------
+
+def _block_spec(cfg: ModelConfig, mixer: str, ffn: str | None):
+    d = cfg.d_model
+    spec = {"norm1": L.rmsnorm_spec(d)}
+    if mixer == "attn":
+        spec["attn"] = L.attention_spec(cfg)
+    elif mixer == "mamba":
+        spec["mamba"] = M.mamba_spec(cfg)
+    elif mixer == "mlstm":
+        spec["mlstm"] = X.mlstm_spec(cfg)
+    elif mixer == "slstm":
+        spec["slstm"] = X.slstm_spec(cfg)
+    if ffn is not None:
+        spec["norm2"] = L.rmsnorm_spec(d)
+        spec["ffn"] = MOE.moe_spec(cfg) if ffn == "moe" else L.mlp_spec(cfg)
+    return spec
+
+
+def param_spec(cfg: ModelConfig):
+    period = {f"pos{i}": _block_spec(cfg, mixer, ffn)
+              for i, (mixer, ffn) in enumerate(period_pattern(cfg))}
+    n_per = num_periods(cfg)
+    stacked = jax.tree.map(
+        lambda lf: L.leaf((n_per, *lf["shape"]), (L.P.LAYERS, *lf["axes"])),
+        period, is_leaf=L.is_leaf)
+    spec = {
+        "embed": L.embedding_spec(cfg),
+        "blocks": stacked,
+        "final_norm": L.rmsnorm_spec(cfg.d_model),
+    }
+    spec.update({"lm_head": L.lm_head_spec(cfg)} if not cfg.tie_embeddings else {})
+    return spec
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    return jax.tree.map(lambda lf: jax.ShapeDtypeStruct(lf["shape"], dtype),
+                        param_spec(cfg), is_leaf=L.is_leaf)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    spec = param_spec(cfg)
+    flat, treedef = jax.tree.flatten_with_path(spec, is_leaf=L.is_leaf)
+
+    def init_one(path, lf, k):
+        shape = lf["shape"]
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if "norm" in str(path) and name == "scale":
+            return jnp.zeros(shape, dtype)
+        if name in ("conv_b", "dt_proj_b", "b_z", "b_i", "b_o"):
+            return jnp.zeros(shape, dtype)
+        if name == "b_f":
+            return jnp.full(shape, 1.0, dtype)          # forget-gate bias
+        if name == "a_log":
+            n = shape[-1]
+            base = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+            return jnp.broadcast_to(base, shape).astype(dtype)
+        if name == "d_skip":
+            return jnp.ones(shape, dtype)
+        fan_in = shape[0] if len(shape) == 1 else int(np.prod(shape[:-1]))
+        scale = 0.02 if "embed" in str(path) else 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    keys = jax.random.split(key, len(flat))
+    leaves = [init_one(path, lf, k) for (path, lf), k in zip(flat, keys)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Cache spec
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    """Shapes of the incremental-decode cache, stacked per period."""
+    n_per = num_periods(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    spec: dict = {"offset": ((), jnp.int32)}
+    pat = period_pattern(cfg)
+    n_attn = sum(1 for m, _ in pat if m == "attn")
+    if n_attn:
+        kv = (n_per, n_attn, batch, max_seq, cfg.num_kv_heads,
+              cfg.resolved_head_dim)
+        spec["kv_k"] = (kv, dt)
+        spec["kv_v"] = (kv, dt)
+    n_mamba = sum(1 for m, _ in pat if m == "mamba")
+    if n_mamba:
+        hs, cs = M.mamba_state_spec(cfg, batch)
+        spec["mamba_h"] = ((n_per, n_mamba, *hs), jnp.float32)
+        spec["mamba_conv"] = ((n_per, n_mamba, *cs), dt)
+    n_mlstm = sum(1 for m, _ in pat if m == "mlstm")
+    if n_mlstm:
+        c, n, m = X.mlstm_state_spec(cfg, batch)
+        spec["mlstm_c"] = ((n_per, n_mlstm, *c), jnp.float32)
+        spec["mlstm_n"] = ((n_per, n_mlstm, *n), jnp.float32)
+        spec["mlstm_m"] = ((n_per, n_mlstm, *m), jnp.float32)
+    n_slstm = sum(1 for m, _ in pat if m == "slstm")
+    if n_slstm:
+        shapes = X.slstm_state_spec(cfg, batch)
+        for nm, sh in zip(("slstm_c", "slstm_n", "slstm_h", "slstm_m"), shapes):
+            spec[nm] = ((n_per, n_slstm, *sh), jnp.float32)
+    return spec
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return {k: jax.ShapeDtypeStruct(sh, dt)
+            for k, (sh, dt) in cache_spec(cfg, batch, max_seq).items()}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    out = {}
+    for k, (sh, dt) in cache_spec(cfg, batch, max_seq).items():
+        fill = -1e30 if k in ("mlstm_m", "slstm_m") else 0
+        out[k] = jnp.full(sh, fill, dt) if k != "offset" else jnp.zeros(sh, dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, token_ids=None, embeds=None):
+    if embeds is not None:
+        return L.embed_frontend(params["embed"], embeds, cfg)
+    return L.embed_tokens(params["embed"], token_ids, cfg)
+
+
+def _apply_block(pp, x, mixer, ffn, cfg, *, positions, cache_in, offset,
+                 placement, constraint, aux):
+    cons = constraint or (lambda t, axes: t)
+    cache_out = {}
+    h = L.rmsnorm(pp["norm1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        kv = None if cache_in is None else (cache_in["k"], cache_in["v"])
+        o, new_kv = L.attention(pp["attn"], h, cfg, positions=positions,
+                                kv_cache=kv, cache_offset=offset,
+                                constraint=constraint)
+        cache_out = {"k": new_kv[0], "v": new_kv[1]}
+    elif mixer == "mamba":
+        st = None if cache_in is None else (cache_in["h"], cache_in["conv"])
+        o, new_st = M.mamba_block(pp["mamba"], h, cfg, state=st,
+                                  constraint=constraint)
+        cache_out = {"h": new_st[0], "conv": new_st[1]}
+    elif mixer == "mlstm":
+        st = None if cache_in is None else cache_in
+        o, new_st = X.mlstm_block(pp["mlstm"], h, cfg, state=st,
+                                  constraint=constraint)
+        cache_out = new_st
+    else:  # slstm
+        st = None if cache_in is None else cache_in
+        o, new_st = X.slstm_block(pp["slstm"], h, cfg, state=st,
+                                  constraint=constraint)
+        cache_out = new_st
+    x = x + o
+    if ffn is not None:
+        h2 = L.rmsnorm(pp["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            o2, moe_aux = MOE.moe_ffn(pp["ffn"], h2, cfg, placement=placement,
+                                      constraint=constraint)
+            aux["expert_counts"] = aux.get("expert_counts", 0.0) + moe_aux["expert_counts"]
+            aux["aux_loss"] = aux.get("aux_loss", 0.0) + moe_aux["aux_loss"]
+        else:
+            o2 = L.mlp(pp["ffn"], h2, cfg, constraint=constraint)
+        x = x + o2
+    return x, cache_out
+
+
+def _scan_blocks(params, x, cfg, *, positions, cache=None, offset=None,
+                 placement=None, constraint=None, remat=None,
+                 collect_kv=False, unroll=False):
+    """Scan over periods.  cache: dict of stacked state arrays (or None).
+    Returns (x, new_cache (stacked) or collected kv, aux).
+
+    ``remat``: checkpoint-policy name applied to the scan *body* — the
+    memory-correct placement for scan-over-layers (a whole-loss wrap
+    cannot stop the scan from stacking per-layer residuals)."""
+    pat = period_pattern(cfg)
+    cons = constraint or (lambda t, axes: t)
+
+    def body(carry, scanned):
+        x, aux_c, aux_l = carry
+        pp, pc = scanned
+        aux = {"expert_counts": aux_c, "aux_loss": aux_l}
+        attn_i = mamba_i = mlstm_i = slstm_i = 0
+        new_pc: dict = {k: [] for k in (pc or {})} if pc else {}
+        collected_kv = []
+        for i, (mixer, ffn) in enumerate(pat):
+            cache_in = None
+            if pc is not None:
+                if mixer == "attn":
+                    cache_in = {"k": pc["kv_k"][attn_i], "v": pc["kv_v"][attn_i]}
+                elif mixer == "mamba":
+                    cache_in = {"h": pc["mamba_h"][mamba_i],
+                                "conv": pc["mamba_conv"][mamba_i]}
+                elif mixer == "mlstm":
+                    cache_in = (pc["mlstm_c"][mlstm_i], pc["mlstm_n"][mlstm_i],
+                                pc["mlstm_m"][mlstm_i])
+                else:
+                    cache_in = (pc["slstm_c"][slstm_i], pc["slstm_n"][slstm_i],
+                                pc["slstm_h"][slstm_i], pc["slstm_m"][slstm_i])
+            x, cache_out = _apply_block(
+                pp[f"pos{i}"], x, mixer, ffn, cfg, positions=positions,
+                cache_in=cache_in, offset=offset, placement=placement,
+                constraint=constraint, aux=aux)
+            if pc is not None:
+                if mixer == "attn":
+                    new_pc.setdefault("kv_k", []).append(cache_out["k"])
+                    new_pc.setdefault("kv_v", []).append(cache_out["v"])
+                    attn_i += 1
+                elif mixer == "mamba":
+                    new_pc.setdefault("mamba_h", []).append(cache_out["h"])
+                    new_pc.setdefault("mamba_conv", []).append(cache_out["conv"])
+                    mamba_i += 1
+                elif mixer == "mlstm":
+                    for nm, v in zip(("mlstm_c", "mlstm_n", "mlstm_m"), cache_out):
+                        new_pc.setdefault(nm, []).append(v)
+                    mlstm_i += 1
+                else:
+                    for nm, v in zip(("slstm_c", "slstm_n", "slstm_h", "slstm_m"),
+                                     cache_out):
+                        new_pc.setdefault(nm, []).append(v)
+                    slstm_i += 1
+            elif mixer == "attn" and collect_kv:
+                collected_kv.append(cache_out)
+        ys = ({k: jnp.stack(v) for k, v in new_pc.items()} if pc is not None
+              else ({"kv_k": jnp.stack([c["k"] for c in collected_kv]),
+                     "kv_v": jnp.stack([c["v"] for c in collected_kv])}
+                    if collected_kv else {}))
+        return (x, aux["expert_counts"], aux["aux_loss"]), ys
+
+    n_exp = cfg.moe.num_experts if cfg.moe else 1
+    carry0 = (x, jnp.zeros((n_exp,), jnp.float32), jnp.zeros((), jnp.float32))
+    scan_cache = None
+    if cache is not None:
+        scan_cache = {k: v for k, v in cache.items() if k != "offset"}
+    if remat is not None and remat != "none":
+        from ..train.train_step import REMAT_POLICIES
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat])
+    if unroll:
+        # Python loop over periods: the decode cache is indexed in place
+        # instead of being routed through scan xs/ys (which costs two
+        # extra full-cache copies in temp — see EXPERIMENTS §Perf A3).
+        n_per = num_periods(cfg)
+        carry = carry0
+        ys_list = []
+        for i in range(n_per):
+            pp_i = jax.tree.map(lambda a: a[i], params["blocks"])
+            pc_i = (jax.tree.map(lambda a: a[i], scan_cache)
+                    if scan_cache is not None else None)
+            carry, y_i = body(carry, (pp_i, pc_i))
+            ys_list.append(y_i)
+        x, counts, aux_loss = carry
+        ys = (jax.tree.map(lambda *ts: jnp.stack(ts), *ys_list)
+              if ys_list and ys_list[0] else {})
+        return x, ys, {"expert_counts": counts, "aux_loss": aux_loss}
+    (x, counts, aux_loss), ys = jax.lax.scan(
+        body, carry0, (params["blocks"], scan_cache))
+    return x, ys, {"expert_counts": counts, "aux_loss": aux_loss}
+
+
+def forward(params, cfg: ModelConfig, *, token_ids=None, embeds=None,
+            placement=None, constraint=None, remat=None):
+    """Full-sequence logits (B, S, V) + aux.  For frontend archs pass
+    ``embeds`` (precomputed patch/frame features)."""
+    x = _embed(params, cfg, token_ids, embeds)
+    cons = constraint or (lambda t, axes: t)
+    x = cons(x, ("batch", None, "embed"))
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, _, aux = _scan_blocks(params, x, cfg, positions=positions,
+                             placement=placement, constraint=constraint,
+                             remat=remat)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(params, x, cfg)
+    return cons(logits, ("batch", None, "vocab")), aux
+
+
+def prefill(params, cfg: ModelConfig, *, token_ids=None, embeds=None,
+            max_seq: int | None = None, placement=None, constraint=None):
+    """Forward + cache construction for serving."""
+    x = _embed(params, cfg, token_ids, embeds)
+    cons = constraint or (lambda t, axes: t)
+    x = cons(x, ("batch", None, "embed"))
+    b, s = x.shape[0], x.shape[1]
+    max_seq = max_seq or s
+    cache = init_cache(cfg, b, max_seq)
+    cache["offset"] = jnp.zeros((), jnp.int32)
+    positions = jnp.arange(s)
+    x, ys, aux = _scan_blocks(params, x, cfg, positions=positions,
+                              cache=cache, offset=0, placement=placement,
+                              constraint=constraint)
+    new_cache = dict(ys)
+    new_cache["offset"] = jnp.asarray(s, jnp.int32)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(params, x[:, -1:], cfg)
+    return logits, new_cache, aux
+
+
+def decode_step(params, cfg: ModelConfig, cache, token_ids,
+                placement=None, constraint=None, unroll=False):
+    """One incremental token: token_ids (B, 1) → logits (B, 1, V).
+
+    ``unroll=True`` runs the periods as a Python loop — same math, no
+    scan xs/ys cache round-trip (serving-path memory optimization)."""
+    x = _embed(params, cfg, token_ids=token_ids)
+    cons = constraint or (lambda t, axes: t)
+    x = cons(x, ("batch", None, "embed"))
+    offset = cache["offset"]
+    positions = offset + jnp.arange(1)[None, :].repeat(x.shape[0], 0)
+    x, ys, aux = _scan_blocks(params, x, cfg, positions=positions,
+                              cache=cache, offset=offset, placement=placement,
+                              constraint=constraint, unroll=unroll)
+    new_cache = dict(ys)
+    new_cache["offset"] = offset + 1
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(params, x, cfg)
+    return cons(logits, ("batch", None, "vocab")), new_cache, aux
+
+
+def forward_hidden(params, cfg: ModelConfig, *, token_ids=None, embeds=None,
+                   placement=None, constraint=None, remat=None):
+    """Final-norm hidden states (B, S, D) + aux — the lm_head is applied
+    downstream (chunked in the loss so full fp32 logits never exist)."""
+    x = _embed(params, cfg, token_ids, embeds)
+    cons = constraint or (lambda t, axes: t)
+    x = cons(x, ("batch", None, "embed"))
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = _scan_blocks(params, x, cfg, positions=positions,
+                             placement=placement, constraint=constraint,
+                             remat=remat)
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+CE_CHUNK = 512
+
+
+def _chunked_ce(params, cfg, x, labels, mask, constraint=None):
+    """Cross-entropy scanned over sequence chunks: per-chunk logits are
+    computed, reduced and *recomputed in backward* (nothing_saveable), so
+    the (B, S, V) fp32 logits tensor never materializes."""
+    cons = constraint or (lambda t, axes: t)
+    b, s, d = x.shape
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_loss(x_c, y_c, m_c):
+        logits = L.lm_head(params, x_c, cfg)
+        logits = cons(logits, ("batch", None, "vocab"))
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        ll = picked - lse
+        return -(ll * m_c).sum(), m_c.sum()
+
+    if s % CE_CHUNK != 0 or s <= CE_CHUNK:
+        num, den = chunk_loss(x, labels, mask)
+        return num / jnp.maximum(den, 1.0)
+
+    n = s // CE_CHUNK
+    xs = (x.reshape(b, n, CE_CHUNK, d).swapaxes(0, 1),
+          labels.reshape(b, n, CE_CHUNK).swapaxes(0, 1),
+          mask.reshape(b, n, CE_CHUNK).swapaxes(0, 1))
+
+    def body(carry, inp):
+        num, den = carry
+        dn, dd = chunk_loss(*inp)
+        return (num + dn, den + dd), None
+
+    (num, den), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), xs)
+    return num / jnp.maximum(den, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, placement=None, constraint=None,
+            remat=None):
+    """Next-token (causal) or per-frame (encoder) cross-entropy, with the
+    vocab projection chunked over the sequence."""
+    x, aux = forward_hidden(params, cfg,
+                            token_ids=batch.get("tokens"),
+                            embeds=batch.get("embeds"),
+                            placement=placement, constraint=constraint,
+                            remat=remat)
+    labels = batch["labels"]
+    if cfg.encoder_only:
+        mask = (labels >= 0).astype(jnp.float32)
+        tgt = jnp.maximum(labels, 0)
+    else:  # next-token: predict labels[t+1] from x[t]; last position void
+        tgt = jnp.concatenate([labels[:, 1:], labels[:, :1]], axis=1)
+        mask = jnp.concatenate(
+            [(labels[:, 1:] >= 0).astype(jnp.float32),
+             jnp.zeros((labels.shape[0], 1), jnp.float32)], axis=1)
+        tgt = jnp.maximum(tgt, 0)
+    loss = _chunked_ce(params, cfg, x, tgt, mask, constraint)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux["aux_loss"]
+    return loss, aux

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer with SWARM-driven expert placement.
+
+Dispatch is sort-based *within each batch row* (group) so no cross-group
+data movement is required: top-k slots are sorted by expert id, packed
+into a capacity-bounded (E, C, D) buffer, run through the expert FFNs as
+one batched einsum (E sharded over the "model"/EP mesh axis), and
+scattered back gate-weighted.  Tokens over capacity are dropped
+(capacity_factor controls head-room), the standard TPU MoE contract.
+
+SWARM integration: ``placement`` is an (E,) permutation mapping logical
+expert → physical expert slot.  Physical slots are what the mesh shards,
+so changing the permutation *moves experts between devices* without
+recompiling — the MoE analogue of the paper's "move the partition,
+not the data".  The expert-assignment histogram (kernels/moe_histogram)
+is the N' collector feeding the SWARM cost model
+(distributed/moe_placement.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MoEConfig
+from .layers import P, leaf, mlp, mlp_spec
+
+
+def moe_spec(cfg: ModelConfig):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    spec = {
+        "router": leaf((d, e), (P.EMBED, P.EXPERT)),
+        "w_gate": leaf((e, d, f), (P.EXPERT, P.EMBED, P.FF)),
+        "w_up": leaf((e, d, f), (P.EXPERT, P.EMBED, P.FF)),
+        "w_down": leaf((e, f, d), (P.EXPERT, P.FF, P.EMBED)),
+    }
+    if m.num_shared:
+        fs = m.shared_ff
+        spec["shared"] = {
+            "w_gate": leaf((d, m.num_shared * fs), (P.EMBED, P.FF)),
+            "w_up": leaf((d, m.num_shared * fs), (P.EMBED, P.FF)),
+            "w_down": leaf((m.num_shared * fs, d), (P.FF, P.EMBED)),
+        }
+    return spec
+
+
+def _capacity(m: MoEConfig, seq: int) -> int:
+    cap = int(seq * m.top_k * m.capacity_factor / m.num_experts) + 1
+    return max(8, min(cap, seq * m.top_k))
+
+
+def _dispatch_one_group(x, idx, gate, num_experts: int, capacity: int):
+    """x (S, D); idx/gate (S, K).  Returns (expert_in (E, C, D),
+    e_ids (S·K,), pos (S·K,), gate_flat (S·K,))."""
+    s, k = idx.shape
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e)                       # stable sort by expert
+    sorted_e = flat_e[order]
+    # position within expert = rank − start(expert)
+    starts = jnp.searchsorted(sorted_e, jnp.arange(num_experts))
+    pos_sorted = jnp.arange(s * k) - starts[sorted_e]
+    # unsort the positions back to slot order
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    tok_of_slot = jnp.arange(s * k) // k
+    expert_in = jnp.zeros((num_experts, capacity, x.shape[-1]), x.dtype)
+    keep = pos < capacity
+    expert_in = expert_in.at[flat_e, jnp.minimum(pos, capacity - 1)].add(
+        jnp.where(keep[:, None], x[tok_of_slot], 0))
+    return expert_in, flat_e, pos, gate.reshape(-1), keep
+
+
+def _combine_one_group(expert_out, flat_e, pos, gate_flat, keep, s, k):
+    """expert_out (E, C, D) → (S, D) gate-weighted combine."""
+    capacity = expert_out.shape[1]
+    slot_out = expert_out[flat_e, jnp.minimum(pos, capacity - 1)]
+    slot_out = jnp.where(keep[:, None], slot_out, 0) * gate_flat[:, None]
+    return slot_out.reshape(s, k, -1).sum(axis=1)
+
+
+def moe_ffn(p, x, cfg: ModelConfig, placement=None, constraint=None):
+    """x (B, S, D) → (out (B, S, D), aux) — aux carries the router
+    histogram (SWARM collector input) and the load-balancing loss."""
+    cons = constraint or (lambda t, axes: t)
+    m = cfg.moe
+    b, s, d = x.shape
+    dtype = x.dtype
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, m.top_k)                # (B, S, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    gate = gate.astype(dtype)
+
+    if placement is not None:  # logical → physical expert slots (SWARM-EP)
+        idx = placement[idx]
+
+    capacity = _capacity(m, s)
+
+    def one_group(xg, idxg, gateg):
+        ein, fe, pos, gf, keep = _dispatch_one_group(xg, idxg, gateg,
+                                                     m.num_experts, capacity)
+        return ein, (fe, pos, gf, keep)
+
+    expert_in, meta = jax.vmap(one_group)(x, idx, gate)       # (B, E, C, D)
+    expert_in = cons(expert_in, ("batch", "expert", None, None))
+    # batched expert FFN — E on the EP ("model") axis
+    g = jnp.einsum("becd,edf->becf", expert_in, p["w_gate"].astype(dtype))
+    u = jnp.einsum("becd,edf->becf", expert_in, p["w_up"].astype(dtype))
+    h = jax.nn.silu(g) * u
+    expert_out = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dtype))
+    expert_out = cons(expert_out, ("batch", "expert", None, None))
+
+    fe, pos, gf, keep = meta
+    out = jax.vmap(_combine_one_group, in_axes=(0, 0, 0, 0, 0, None, None))(
+        expert_out, fe, pos, gf, keep, s, m.top_k)
+    out = cons(out, ("batch", None, "embed"))
+
+    if m.num_shared:
+        sp = p["shared"]
+        gs = jnp.einsum("bsd,df->bsf", x, sp["w_gate"].astype(dtype))
+        us = jnp.einsum("bsd,df->bsf", x, sp["w_up"].astype(dtype))
+        out = out + jnp.einsum("bsf,fd->bsd", jax.nn.silu(gs) * us,
+                               sp["w_down"].astype(dtype))
+
+    # SWARM collector (router histogram) + Switch-style aux loss
+    one_hot = jax.nn.one_hot(idx, m.num_experts, dtype=jnp.float32)
+    counts = one_hot.sum((0, 1, 2))                           # (E,)
+    frac_tokens = counts / jnp.maximum(counts.sum(), 1.0)
+    frac_probs = probs.mean((0, 1))
+    aux_loss = m.num_experts * jnp.sum(frac_tokens * frac_probs)
+    return out, {"expert_counts": counts, "aux_loss": aux_loss}

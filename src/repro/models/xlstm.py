@@ -1,0 +1,167 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrent mixing), per arXiv:2405.04517.
+
+Both recurrences run as ``lax.scan`` over the sequence (compact HLO, no
+per-step state materialization) with exp-gate max-stabilizers.  Decode
+is the O(1) single-step update, so xlstm runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import P, leaf
+
+
+def _dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    h = cfg.num_heads
+    up = int(cfg.d_model * x.proj_factor)   # mLSTM inner width
+    d_qk = int(up * x.qk_dim_factor)
+    d_v = up
+    return x, h, d_qk // h, d_v // h, d_qk, d_v
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_spec(cfg: ModelConfig):
+    x, h, dk, dv, d_qk, d_v = _dims(cfg)
+    d = cfg.d_model
+    up = d_v
+    return {
+        "up_proj": leaf((d, 2 * up), (P.EMBED, P.FF)),
+        "wq": leaf((up, h, dk), (P.FF, P.HEADS, P.HEAD_DIM)),
+        "wk": leaf((up, h, dk), (P.FF, P.HEADS, P.HEAD_DIM)),
+        "wv": leaf((up, h, dv), (P.FF, P.HEADS, P.HEAD_DIM)),
+        "w_i": leaf((up, h), (P.FF, P.HEADS)),
+        "w_f": leaf((up, h), (P.FF, P.HEADS)),
+        "w_o": leaf((up, up), (P.FF, P.FF)),
+        "down_proj": leaf((up, d), (P.FF, P.EMBED)),
+    }
+
+
+def mlstm_block(p, x, cfg: ModelConfig, state=None, constraint=None):
+    """x (B, S, D) → (out, state).  state = (C (B,H,dk,dv), n (B,H,dk),
+    m (B,H)) fp32."""
+    cons = constraint or (lambda t, axes: t)
+    xc, h, dk, dv, _, _ = _dims(cfg)
+    dtype = x.dtype
+    b, s, d = x.shape
+    u, z = jnp.split(jnp.einsum("bsd,dc->bsc", x, p["up_proj"].astype(dtype)),
+                     2, axis=-1)
+    u = cons(u, ("batch", None, "ff"))
+    # q/k/v/gate pre-activations ride in bf16 (see mamba.py note); the
+    # recurrence math upcasts per step
+    q = jnp.einsum("bsc,chk->bshk", u, p["wq"].astype(dtype))
+    k = jnp.einsum("bsc,chk->bshk", u, p["wk"].astype(dtype))
+    k = k / jnp.sqrt(jnp.asarray(dk, dtype))
+    v = jnp.einsum("bsc,chk->bshk", u, p["wv"].astype(dtype))
+    i_pre = jnp.einsum("bsc,ch->bsh", u, p["w_i"].astype(dtype))
+    f_pre = jnp.einsum("bsc,ch->bsh", u, p["w_f"].astype(dtype))
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, inp):
+        c, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = (t.astype(jnp.float32) for t in inp)
+        log_f = -jax.nn.softplus(-f_t)                      # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, i_t)
+        fg = jnp.exp(log_f + m - m_new)
+        ig = jnp.exp(i_t - m_new)
+        c = fg[..., None, None] * c + ig[..., None, None] * (
+            k_t[..., :, None] * v_t[..., None, :])
+        n = fg[..., None] * n + ig[..., None] * k_t
+        num = jnp.einsum("bhkv,bhk->bhv", c, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)),
+                          jnp.exp(-m_new))
+        return (c, n, m_new), num / den[..., None]
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_pre, f_pre))
+    from .layers import segmented_scan
+    state_out, ys = segmented_scan(step, (c0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, -1).astype(dtype)   # (B,S,up)
+    o = jax.nn.sigmoid(jnp.einsum("bsc,cu->bsu", u, p["w_o"].astype(dtype)))
+    out = jnp.einsum("bsc,cd->bsd", y * o, p["down_proj"].astype(dtype))
+    return cons(out, ("batch", None, "embed")), state_out
+
+
+def mlstm_state_spec(cfg: ModelConfig, batch: int):
+    _, h, dk, dv, _, _ = _dims(cfg)
+    return ((batch, h, dk, dv), (batch, h, dk), (batch, h))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w_{g}"] = leaf((d, d), (P.EMBED, P.FF))
+        gates[f"r_{g}"] = leaf((h, dh, dh), (P.HEADS, None, None))
+        gates[f"b_{g}"] = leaf((d,), (P.FF,))
+    gates["out_proj"] = leaf((d, d), (P.FF, P.EMBED))
+    return gates
+
+
+def slstm_block(p, x, cfg: ModelConfig, state=None, constraint=None):
+    """Scalar-memory LSTM with per-head recurrent mixing (block-diagonal
+    R).  state = (c, n, h_prev, m) each (B, D) fp32 (m is (B, D))."""
+    cons = constraint or (lambda t, axes: t)
+    dtype = x.dtype
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    pre = {g: jnp.einsum("bsd,dc->bsc", x, p[f"w_{g}"].astype(dtype))
+           + p[f"b_{g}"].astype(dtype)
+           for g in ("z", "i", "f", "o")}
+    r = {g: p[f"r_{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        c0, n0, h0, m0 = zeros, zeros, zeros, jnp.full((b, d), -1e30, jnp.float32)
+    else:
+        c0, n0, h0, m0 = state
+
+    def mix(h_prev, rg):
+        hh = h_prev.reshape(b, nh, dh)
+        return jnp.einsum("bhk,hkj->bhj", hh, rg).reshape(b, d)
+
+    def step(carry, inp):
+        c, n, h_prev, m = carry
+        inp = {g: v.astype(jnp.float32) for g, v in inp.items()}
+        z_t = jnp.tanh(inp["z"] + mix(h_prev, r["z"]))
+        i_t = inp["i"] + mix(h_prev, r["i"])
+        f_t = inp["f"] + mix(h_prev, r["f"])
+        o_t = jax.nn.sigmoid(inp["o"] + mix(h_prev, r["o"]))
+        log_f = -jax.nn.softplus(-f_t)
+        m_new = jnp.maximum(log_f + m, i_t)
+        fg = jnp.exp(log_f + m - m_new)
+        ig = jnp.exp(i_t - m_new)
+        c = fg * c + ig * z_t
+        n = fg * n + ig
+        h_new = o_t * c / jnp.maximum(n, 1e-6)
+        return (c, n, h_new, m_new), h_new
+
+    xs = {g: jnp.moveaxis(v, 1, 0) for g, v in pre.items()}
+    from .layers import segmented_scan
+    state_out, ys = segmented_scan(step, (c0, n0, h0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(dtype)
+    out = jnp.einsum("bsd,dc->bsc", y, p["out_proj"].astype(dtype))
+    return cons(out, ("batch", None, "embed")), state_out
+
+
+def slstm_state_spec(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return ((batch, d), (batch, d), (batch, d), (batch, d))

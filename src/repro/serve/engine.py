@@ -1,0 +1,104 @@
+"""Serving engine: jit'd prefill/decode step builders with mesh-aware
+shardings, plus a simple batched generation loop for the examples."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as PS
+
+from ..distributed import sharding as SH
+from ..models import model as MODEL
+from ..models.config import ModelConfig
+
+
+def cache_shardings(cfg: ModelConfig, mesh, batch: int, max_seq: int,
+                    *, seq_shard_long: bool = True):
+    """Shardings for the decode cache.  Batch shards over (pod, data);
+    when batch == 1 (long-context) the KV sequence dim shards over
+    "data" instead (flash-decoding style), and recurrent states shard
+    their channel dim."""
+    rules = SH.resolve_rules(mesh)
+    batch_axes = rules["batch"]
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    batch_ok = batch % dp == 0 and batch >= dp
+    seq_axis = "data" if ("data" in mesh.axis_names and not batch_ok
+                          and seq_shard_long) else None
+    out = {}
+    for k, (shape, _dt) in MODEL.cache_spec(cfg, batch, max_seq).items():
+        if k == "offset":
+            out[k] = NamedSharding(mesh, PS())
+            continue
+        spec = [None] * len(shape)
+        # layout: (periods, per_period, batch, ...)
+        if batch_ok:
+            spec[2] = batch_axes
+        if k in ("kv_k", "kv_v"):
+            # (P, n, B, S, Hkv, Dh): heads over model when divisible;
+            # otherwise shard the SEQUENCE over "model" (flash-decoding
+            # layout: per-shard partial attention + LSE combine — the
+            # fix for GQA archs whose 4–8 kv heads cannot split 16 ways)
+            if shape[4] % mesh.shape["model"] == 0:
+                spec[4] = "model"
+            elif shape[3] % mesh.shape["model"] == 0:
+                spec[3] = "model"
+            if seq_axis and spec[3] is None and                     shape[3] % mesh.shape[seq_axis] == 0:
+                spec[3] = seq_axis
+        elif k in ("mamba_h", "mamba_conv"):
+            # channel dim (d_inner) over model
+            ch_dim = 3 if k == "mamba_h" else 4
+            if shape[ch_dim] % mesh.shape["model"] == 0:
+                spec[ch_dim] = "model"
+        elif k.startswith("mlstm"):
+            if len(shape) >= 4 and shape[3] % mesh.shape["model"] == 0:
+                spec[3] = "model"   # heads over model
+        elif k.startswith("slstm"):
+            if shape[-1] % mesh.shape["model"] == 0:
+                spec[-1] = "model"
+        out[k] = NamedSharding(mesh, PS(*spec))
+    return out
+
+
+def make_serve_step(cfg: ModelConfig, mesh):
+    """jit'd decode_step with explicit in/out shardings (the function the
+    decode dry-run shapes lower)."""
+    constraint = SH.make_constraint(mesh)
+
+    def serve_step(params, cache, token_ids):
+        logits, new_cache, _ = MODEL.decode_step(params, cfg, cache,
+                                                 token_ids,
+                                                 constraint=constraint)
+        return logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, max_seq: int | None = None):
+    constraint = SH.make_constraint(mesh)
+
+    def prefill_step(params, **inputs):
+        logits, cache, _ = MODEL.prefill(params, cfg, max_seq=max_seq,
+                                         constraint=constraint, **inputs)
+        return logits, cache
+
+    return prefill_step
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt_tokens, steps: int,
+                    max_seq: int | None = None):
+    """Simple batched greedy decoding (CPU examples / tests)."""
+    max_seq = max_seq or (prompt_tokens.shape[1] + steps)
+    logits, cache, _ = MODEL.prefill(params, cfg, token_ids=prompt_tokens,
+                                     max_seq=max_seq)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for _ in range(steps - 1):
+        logits, cache, _ = MODEL.decode_step(params, cfg, cache, tok)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,13 @@
+"""Streaming substrate: tuple-at-a-time engine simulation, sources and
+the four routing approaches of the paper's evaluation."""
+from .baselines import (ReplicatedRouter, RoundInfo, StaticHistoryRouter,
+                        StaticUniformRouter, SwarmRouter)
+from .engine import EngineConfig, Metrics, StreamingEngine, run_experiment
+from .sources import Hotspot, ScenarioSource, TwitterLikeSource, scenario
+
+__all__ = [
+    "ReplicatedRouter", "StaticUniformRouter", "StaticHistoryRouter",
+    "SwarmRouter", "RoundInfo", "EngineConfig", "Metrics", "StreamingEngine",
+    "run_experiment", "Hotspot", "ScenarioSource", "TwitterLikeSource",
+    "scenario",
+]

@@ -1,0 +1,268 @@
+"""Routing approaches compared in the paper's evaluation (§6):
+
+* ``ReplicatedRouter``      — queries replicated everywhere, points round-robin
+* ``StaticUniformRouter``   — equal-area static grid (kd over area)
+* ``StaticHistoryRouter``   — static grid balanced with SWARM's cost model
+                              over a limited history sample, then frozen
+* ``SwarmRouter``           — the live SWARM protocol
+
+All expose the same interface the engine drives:
+  route_points(xy)   → (owner per point, work units per point)
+  register_queries(rects)
+  on_round(queries)  → RoundInfo (migration + coordinator traffic)
+  resident_counts()  → queries resident per machine (memory accounting)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core import Swarm, balancer, geometry
+from ..core.global_index import GlobalIndex
+
+BYTES_PER_QUERY = 64   # moved-query wire size (rect + id + state header)
+
+
+@dataclass
+class RoundInfo:
+    wire_bytes: int = 0        # coordinator statistics traffic (Fig 20)
+    migration_bytes: int = 0   # moved continuous queries (§5.2: data stays)
+    moved_queries: int = 0
+    action: str = "none"
+
+
+class _Base:
+    """Cost model for processing one tuple on an executor (paper §6: an
+    R*-tree probe over the machine-resident queries, plus reporting every
+    matched query):
+
+        cost = c0 + κ_probe·log2(1 + Q_machine) + κ_match·E[matches]
+
+    E[matches] for a tuple landing in partition p ≈ Qres(p)·a_q/A(p) —
+    the local query density times the query area.  This is what makes a
+    hotspot (points *and* queries concentrated) quadratically expensive
+    for whoever owns it, which is the effect SWARM redistributes.
+    """
+
+    def __init__(self, num_machines: int, kappa_probe: float = 1.0,
+                 kappa_match: float = 1.0, c0: float = 1.0,
+                 query_area: float = 0.02 ** 2, q_cache: int = 1500):
+        self.m = num_machines
+        self.kappa_probe = kappa_probe
+        self.kappa_match = kappa_match
+        self.c0 = c0
+        self.query_area = query_area
+        # Index size beyond which probes pay memory pressure (the paper's
+        # Replicated "fails … due to high memory overhead" at 16M queries;
+        # the soft penalty models cache/RAM thrash before the hard wall).
+        self.q_cache = q_cache
+        self.query_rects = np.zeros((0, 4), np.float32)
+
+    def _probe_cost(self, q_resident):
+        q = np.asarray(q_resident, np.float64)
+        pressure = 1.0 + np.maximum(0.0, (q - self.q_cache) / self.q_cache)
+        return self.kappa_probe * np.log2(1.0 + q) * pressure
+
+    # -- queries ----------------------------------------------------------
+    def register_queries(self, rects: np.ndarray) -> None:
+        if len(rects):
+            self.query_rects = np.concatenate([self.query_rects, rects], 0)
+            self._index_queries(rects)
+
+    @property
+    def q_total(self) -> int:
+        return len(self.query_rects)
+
+    def on_round(self, tick: int) -> RoundInfo:
+        return RoundInfo()
+
+    def on_machine_failed(self, m: int) -> None:
+        pass
+
+    # subclass hooks
+    def _index_queries(self, rects: np.ndarray) -> None: ...
+    def route_points(self, xy: np.ndarray): ...
+    def resident_counts(self) -> np.ndarray: ...
+
+
+class ReplicatedRouter(_Base):
+    """Queries on every machine; points round-robin (perfectly balanced,
+    memory-bound; probes the *full* replicated query index).  A shadow
+    uniform grid estimates local query density for the match term."""
+
+    def __init__(self, num_machines: int, grid_size: int = 64, **kw):
+        super().__init__(num_machines, **kw)
+        self._rr = 0
+        from .sources import QUERY_SIDE  # noqa: F401  (documented default)
+        self._shadow = StaticUniformRouter(grid_size, num_machines,
+                                           query_area=self.query_area)
+
+    def _index_queries(self, rects: np.ndarray) -> None:
+        self._shadow.register_queries(rects)
+
+    def route_points(self, xy: np.ndarray):
+        n = len(xy)
+        owners = (self._rr + np.arange(n)) % self.m
+        self._rr = int((self._rr + n) % self.m)
+        probe = self._probe_cost(self.q_total)
+        _, match = self._shadow._match_costs(xy)
+        costs = (self.c0 + probe + match).astype(np.float32)
+        return owners.astype(np.int32), costs
+
+    def resident_counts(self) -> np.ndarray:
+        return np.full(self.m, self.q_total, np.int64)
+
+
+class _GridRouter(_Base):
+    """Shared machinery for grid-index routers (static and SWARM)."""
+
+    def __init__(self, index: GlobalIndex, num_machines: int, **kw):
+        super().__init__(num_machines, **kw)
+        self.index = index
+        self.qres = np.zeros(index.parts.capacity, np.int64)  # per-partition
+
+    def _ensure_qres(self):
+        cap = self.index.parts.capacity
+        if len(self.qres) < cap:
+            self.qres = np.concatenate(
+                [self.qres, np.zeros(cap - len(self.qres), np.int64)])
+
+    def _index_queries(self, rects: np.ndarray) -> None:
+        self._ensure_qres()
+        r0, c0, r1, c1 = geometry.rects_to_cells(rects, self.index.grid_size)
+        for i in range(len(rects)):
+            pids = self.index.query_overlap_vectorized(
+                int(r0[i]), int(c0[i]), int(r1[i]), int(c1[i]))
+            self.qres[pids] += 1
+
+    def reindex_all_queries(self) -> None:
+        """Rebuild per-partition resident counts after a plan change —
+        vectorized partitions × queries overlap test."""
+        self._ensure_qres()
+        self.qres[:] = 0
+        if not len(self.query_rects):
+            return
+        g = self.index.grid_size
+        p = self.index.parts
+        live = p.live_ids()
+        r0, c0, r1, c1 = geometry.rects_to_cells(self.query_rects, g)
+        hit = geometry.boxes_overlap(
+            r0[:, None], c0[:, None], r1[:, None], c1[:, None],
+            p.r0[live][None, :], p.c0[live][None, :],
+            p.r1[live][None, :], p.c1[live][None, :])
+        self.qres[live] = hit.sum(0)
+
+    def _match_costs(self, xy: np.ndarray):
+        """(pids, match-term work) for each point."""
+        g = self.index.grid_size
+        row, col = geometry.points_to_cells(xy, g)
+        pids, _ = self.index.route_points(row, col)
+        p = self.index.parts
+        area = geometry.box_area(p.r0[pids], p.c0[pids], p.r1[pids],
+                                 p.c1[pids]).astype(np.float64) / (g * g)
+        density = np.minimum(self.query_area / np.maximum(area, 1e-12), 1.0)
+        match = self.kappa_match * self.qres[pids] * density
+        return pids, match
+
+    def route_points(self, xy: np.ndarray):
+        row, col = geometry.points_to_cells(xy, self.index.grid_size)
+        pids, owners = self.index.route_points(row, col)
+        q_machine = self.resident_counts()
+        probe = self._probe_cost(q_machine[owners])
+        _, match = self._match_costs(xy)
+        costs = (self.c0 + probe + match).astype(np.float32)
+        return owners.astype(np.int32), costs
+
+    def resident_counts(self) -> np.ndarray:
+        p = self.index.parts
+        live = p.live_ids()
+        out = np.zeros(self.m, np.int64)
+        np.add.at(out, p.owner[live], self.qres[live])
+        return out
+
+
+class StaticUniformRouter(_GridRouter):
+    def __init__(self, grid_size: int, num_machines: int, **kw):
+        super().__init__(GlobalIndex.initialize(grid_size, num_machines),
+                         num_machines, **kw)
+
+
+class StaticHistoryRouter(_GridRouter):
+    """Paper's 'Static Grid Based on History': SWARM's cost model balances
+    a *limited history* sample offline; the plan is then frozen."""
+
+    def __init__(self, grid_size: int, num_machines: int,
+                 history_points: np.ndarray, history_queries: np.ndarray,
+                 rounds: int = 40, **kw):
+        sw = Swarm(grid_size, num_machines, decay=1.0, beta=2)
+        chunks = max(rounds, 1)
+        pt_chunks = np.array_split(history_points, chunks)
+        q_chunks = np.array_split(history_queries, chunks)
+        for pts, qs in zip(pt_chunks, q_chunks):
+            if len(pts):
+                sw.ingest_points(pts)
+            if len(qs):
+                sw.ingest_queries(qs)
+            force_rebalance_round(sw)
+        super().__init__(sw.index, num_machines, **kw)
+
+
+class SwarmRouter(_GridRouter):
+    """The live protocol.  Points/queries also feed SWARM's collectors;
+    every engine round triggers one load-balancing round."""
+
+    def __init__(self, grid_size: int, num_machines: int, *, beta: int = 20,
+                 decay: float = 0.5, use_binary_search: bool = False, **kw):
+        self.swarm = Swarm(grid_size, num_machines, beta=beta, decay=decay,
+                           use_binary_search=use_binary_search)
+        super().__init__(self.swarm.index, num_machines, **kw)
+
+    def _index_queries(self, rects: np.ndarray) -> None:
+        super()._index_queries(rects)
+        self.swarm.ingest_queries(rects)
+
+    def route_points(self, xy: np.ndarray):
+        self.swarm.ingest_points(xy)  # collectors (N'); then normal routing
+        return super().route_points(xy)
+
+    def on_round(self, tick: int) -> RoundInfo:
+        rep = self.swarm.run_round()
+        info = RoundInfo(wire_bytes=rep.wire_bytes, action=rep.action)
+        if rep.action != "none":
+            # queries move with their partitions; data stays (§5.2)
+            moved = int(self.qres[list(rep.moved_pids)].sum())
+            info.moved_queries = moved
+            info.migration_bytes = moved * BYTES_PER_QUERY
+            self.reindex_all_queries()
+        return info
+
+    def on_machine_failed(self, m: int) -> None:
+        """Crash-stop handling: emergency-move the failed machine's
+        partitions to the current lowest-cost machine (chained, so any
+        surviving replicas of old data can still be consulted)."""
+        self.swarm.mark_dead(m)
+        loads = self.swarm.machine_loads()
+        loads[m] = np.inf
+        target = int(np.argmin(loads))
+        pids = self.swarm.index.machine_partitions(m)
+        new = [self.swarm._move_partition(int(pid), target) for pid in pids]
+        if new:
+            self.swarm.index.apply_changes(new)
+            self.reindex_all_queries()
+
+
+def force_rebalance_round(sw: Swarm):
+    """Run one SWARM round with the decision forced to REBALANCE (used to
+    build the history-balanced static grid and by tests)."""
+    from ..core import statistics as S
+    from ..core import cost_model
+    from ..core.protocol import RoundReport
+    sw.round_no += 1
+    S.close_round(sw.stats, sw.decay)
+    reports = sw._collect_reports()
+    r_s = cost_model.total_rate(reports)
+    rep = RoundReport(sw.round_no, balancer.REBALANCE, r_s)
+    sw._rebalance(reports, r_s, rep)
+    sw.reports.append(rep)
+    return rep

@@ -1,0 +1,162 @@
+"""Discrete-time distributed streaming engine (the Storm stand-in).
+
+Each tick ≈ one load-balancing round (15 s in the paper).  Machines have
+a work capacity per tick; processing a tuple routed to partition p costs
+``c0 + kappa·Qres(p)`` units (the tuple-vs-resident-queries check — the
+very quantity the paper's *Units of Work* metric counts).  Queues build
+on overloaded machines; Storm-style spout backpressure throttles the
+*global* injection rate to the slowest machine (multiplicative decrease,
+slow additive recovery — which produces the sawtooth of Fig 14).
+
+Metrics per tick: units of work (= processed tuples × Q_total, §6.1),
+mean execution latency, per-machine utilization, network bytes.
+Machine failures (crash-stop) can be injected to exercise the
+fault-tolerance path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .baselines import RoundInfo, _Base
+from .sources import ScenarioSource
+
+
+@dataclass
+class EngineConfig:
+    num_machines: int = 22
+    cap_units: float = 4.0e5        # work units per machine per tick
+    lambda_max: float = 6.0e3       # injected tuples/tick ceiling (source rate)
+    mem_queries: int = 50_000       # resident-query capacity per machine
+    bp_high: float = 2.0            # queue > bp_high·cap ⇒ backpressure
+    bp_dec: float = 0.6
+    bp_inc: float = 0.04            # additive recovery, fraction of λmax
+    round_every: int = 1            # ticks per load-balancing round
+    migration_unit_cost: float = 2.0  # work units to install one moved query
+
+
+@dataclass
+class Metrics:
+    units_of_work: list = field(default_factory=list)
+    latency: list = field(default_factory=list)
+    throughput: list = field(default_factory=list)
+    q_total: list = field(default_factory=list)
+    utilization: list = field(default_factory=list)   # (M,) per tick
+    wire_bytes: list = field(default_factory=list)
+    migration_bytes: list = field(default_factory=list)
+    injected: list = field(default_factory=list)
+    infeasible: bool = False
+
+    def asarrays(self) -> dict:
+        return {k: np.asarray(v) for k, v in self.__dict__.items()
+                if isinstance(v, list)}
+
+
+class StreamingEngine:
+    def __init__(self, router: _Base, source: ScenarioSource,
+                 config: EngineConfig | None = None, seed: int = 0):
+        self.router = router
+        self.source = source
+        self.cfg = config or EngineConfig()
+        self.rng = np.random.default_rng(seed)
+        m = self.cfg.num_machines
+        self.queue_units = np.zeros(m)
+        self.queue_tuples = np.zeros(m)
+        self.alive = np.ones(m, bool)
+        self.lam_bp = self.cfg.lambda_max
+        self.metrics = Metrics()
+        self.tick_no = 0
+
+    # ------------------------------------------------------------------
+    def preload_queries(self, rects: np.ndarray) -> None:
+        self.router.register_queries(rects)
+
+    def fail_machine(self, m: int) -> None:
+        self.alive[m] = False
+        self.router.on_machine_failed(m)
+        # queued work on a crashed machine is re-queued via the router's
+        # new plan on subsequent ticks; drop its local queue (data loss is
+        # bounded by one tick of tuples — matches at-most-once spouts).
+        self.queue_units[m] = 0.0
+        self.queue_tuples[m] = 0.0
+
+    # ------------------------------------------------------------------
+    def run(self, ticks: int) -> Metrics:
+        for _ in range(ticks):
+            self.step()
+        return self.metrics
+
+    def step(self) -> None:
+        cfg, mtr = self.cfg, self.metrics
+        t = self.tick_no
+        # 1. new continuous queries (hotspot bursts)
+        new_q = self.source.query_arrivals(t)
+        if len(new_q):
+            self.router.register_queries(new_q)
+        # 2. memory feasibility (Fig 11: Replicated dies at high |Q|)
+        resident = self.router.resident_counts()
+        if resident.max(initial=0) > cfg.mem_queries:
+            mtr.infeasible = True
+        # 3. inject tuples (backpressure-throttled)
+        lam = 0.0 if mtr.infeasible else min(cfg.lambda_max, self.lam_bp)
+        n = int(lam)
+        if n > 0:
+            pts = self.source.sample_points(n, t)
+            owners, costs = self.router.route_points(pts)
+            np.add.at(self.queue_units, owners, costs.astype(np.float64))
+            np.add.at(self.queue_tuples, owners, 1.0)
+        # 4. process
+        cap = cfg.cap_units * self.alive
+        processed_units = np.minimum(self.queue_units, cap)
+        avg_cost = np.where(self.queue_tuples > 0,
+                            self.queue_units / np.maximum(self.queue_tuples, 1e-9),
+                            1.0)
+        processed_tuples = np.minimum(processed_units / np.maximum(avg_cost, 1e-9),
+                                      self.queue_tuples)
+        self.queue_units -= processed_tuples * avg_cost
+        self.queue_tuples -= processed_tuples
+        # 5. latency: queueing delay + service, in tick units
+        with np.errstate(divide="ignore", invalid="ignore"):
+            delay = np.where(cap > 0, self.queue_units / np.maximum(cap, 1e-9)
+                             + avg_cost / np.maximum(cap, 1e-9), 0.0)
+        w = processed_tuples.sum()
+        latency = float((delay * processed_tuples).sum() / w) if w > 0 else 0.0
+        # 6. backpressure (global, slowest-machine driven — §6.2)
+        if (self.queue_units > cfg.bp_high * cfg.cap_units).any():
+            self.lam_bp = max(self.lam_bp * cfg.bp_dec, 1.0)
+        else:
+            self.lam_bp = min(self.lam_bp + cfg.bp_inc * cfg.lambda_max,
+                              cfg.lambda_max)
+        # 7. load-balancing round
+        info = RoundInfo()
+        if t % cfg.round_every == 0:
+            info = self.router.on_round(t)
+            if info.moved_queries:
+                # installing moved queries costs work on the receiver
+                tgt = int(np.argmin(self.queue_units + (~self.alive) * 1e18))
+                self.queue_units[tgt] += info.moved_queries * cfg.migration_unit_cost
+        # 8. record
+        q_total = self.router.q_total
+        mtr.units_of_work.append(float(w) * q_total)
+        mtr.throughput.append(float(w))
+        mtr.latency.append(latency)
+        mtr.q_total.append(q_total)
+        mtr.utilization.append(processed_units / np.maximum(cfg.cap_units, 1e-9))
+        mtr.wire_bytes.append(info.wire_bytes)
+        mtr.migration_bytes.append(info.migration_bytes)
+        mtr.injected.append(n)
+        self.tick_no += 1
+
+
+# ---------------------------------------------------------------------------
+# Convenience: run one (router, scenario) experiment end to end.
+# ---------------------------------------------------------------------------
+
+def run_experiment(router: _Base, source: ScenarioSource, *, ticks: int,
+                   preload_queries: int, config: EngineConfig | None = None,
+                   seed: int = 0) -> Metrics:
+    eng = StreamingEngine(router, source, config, seed)
+    if preload_queries > 0:
+        eng.preload_queries(source.base.sample_queries(preload_queries))
+    return eng.run(ticks)

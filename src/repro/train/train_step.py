@@ -1,0 +1,78 @@
+"""Distributed train step: loss → grad → AdamW, with activation
+checkpointing (remat policy) and optional microbatch gradient
+accumulation (scan over microbatches — constant memory in accum steps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as MODEL
+from ..models.config import ModelConfig
+from .optimizer import AdamWConfig, adamw_update
+
+REMAT_POLICIES = {
+    "none": None,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "everything": jax.checkpoint_policies.everything_saveable,
+}
+
+
+def make_loss_fn(cfg: ModelConfig, constraint=None, remat: str = "dots_no_batch"):
+    """remat is applied to the layer-scan *body* inside the model (the
+    placement that actually bounds per-layer residual memory)."""
+    def loss(params, batch, placement=None):
+        return MODEL.loss_fn(params, cfg, batch, placement=placement,
+                             constraint=constraint, remat=remat)
+
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    constraint=None, remat: str = "dots_no_batch",
+                    microbatches: int = 1, donate: bool = True):
+    """Returns train_step(params, opt_state, batch[, placement]) →
+    (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(cfg, constraint, remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch, placement=None):
+        if microbatches == 1:
+            (loss, aux), grads = grad_fn(params, batch, placement)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc, c_acc = carry
+                (l, aux_i), g = grad_fn(params, mb, placement)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, c_acc + aux_i["expert_counts"]), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            n_exp = cfg.moe.num_experts if cfg.moe else 1
+            (grads, loss, counts), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros(()), jnp.zeros((n_exp,))), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            aux = {"expert_counts": counts}
+        new_params, new_opt, om = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **om,
+                   "expert_counts": aux.get("expert_counts", jnp.zeros((1,)))}
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig, constraint=None):
+    def eval_step(params, batch, placement=None):
+        loss, aux = MODEL.loss_fn(params, cfg, batch, placement=placement,
+                                  constraint=constraint)
+        return {"loss": loss}
+    return eval_step

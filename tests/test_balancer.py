@@ -1,0 +1,145 @@
+"""Tests for the decision FSM, Algorithm 3 and the split search."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import balancer as B
+from repro.core import statistics as S
+
+
+# ---------------------------------------------------------------------------
+# FSM (Fig 9)
+# ---------------------------------------------------------------------------
+
+def test_fsm_flips_after_consistent_degradation():
+    ds = B.DecisionState()
+    # falling throughput → pointer walks left → decision flips at stage 0
+    decisions = []
+    for r_s in [100, 90, 80, 70, 60, 50]:
+        ds, d = B.step_decision(ds, r_s, beta=20)
+        decisions.append(d)
+    assert B.REBALANCE in decisions
+    # initial decision applied until the flip
+    assert decisions[0] == B.DO_NOTHING
+
+
+def test_fsm_keeps_working_decision():
+    ds = B.DecisionState()
+    ds, _ = B.step_decision(ds, 100, beta=20)
+    dec = []
+    for r_s in range(101, 115):   # improving → stay with current decision
+        ds, d = B.step_decision(ds, float(r_s), beta=20)
+        dec.append(d)
+    assert all(d == dec[0] for d in dec)
+
+
+def test_fsm_beta_forced_flip():
+    ds = B.DecisionState()
+    seen = set()
+    r = 100.0
+    for i in range(10):
+        r += 1.0
+        ds, d = B.step_decision(ds, r, beta=4)
+        seen.add(d)
+    assert seen == {B.DO_NOTHING, B.REBALANCE}  # β forced at least one flip
+
+
+def test_fsm_jax_matches_python():
+    import jax.numpy as jnp
+    ds = B.DecisionState()
+    js = (jnp.asarray(ds.stage), jnp.asarray(ds.decision),
+          jnp.asarray(ds.same_count), jnp.asarray(ds.pre_rs))
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        r = float(rng.uniform(0, 100))
+        ds, d = B.step_decision(ds, r, beta=6)
+        js = B.step_decision_jax(*js, r, beta=6)
+        assert int(js[0]) == ds.stage and int(js[1]) == ds.decision
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 (greedy subset-sum)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(0.1, 100), min_size=1, max_size=12),
+       st.floats(0.0, 400.0))
+def test_subset_half_approximation(costs, c_ml):
+    """Greedy-on-sorted achieves ≥ ½ of the optimum subset ≤ C_max."""
+    costs = np.array(costs)
+    c_mh = c_ml + float(costs.sum())
+    c_max = (c_mh - c_ml) / 2.0
+    subset, total, _ = B.find_subset(np.arange(len(costs)), costs, c_mh, c_ml)
+    assert total <= c_max + 1e-9
+    # brute-force optimum (n ≤ 12)
+    best = 0.0
+    for mask in range(1 << len(costs)):
+        s = sum(costs[i] for i in range(len(costs)) if mask >> i & 1)
+        if s <= c_max:
+            best = max(best, s)
+    assert total >= best / 2 - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Split search
+# ---------------------------------------------------------------------------
+
+def _stats_with_workload(g=16, seed=0):
+    rng = np.random.default_rng(seed)
+    st_ = S.StatsState.zeros(2, g)
+    pts = rng.integers(0, g, size=(300, 2))
+    S.ingest_points(st_, np.zeros(300, np.int64), pts[:, 0], pts[:, 1])
+    r0 = rng.integers(0, g - 1, size=40)
+    c0 = rng.integers(0, g - 1, size=40)
+    r1 = np.minimum(r0 + rng.integers(0, 4, 40), g - 1)
+    c1 = np.minimum(c0 + rng.integers(0, 4, 40), g - 1)
+    S.ingest_queries(st_, np.zeros(40, np.int64), r0, c0, r1, c1)
+    S.close_round(st_, 1.0)
+    return st_, g
+
+
+def test_vectorized_split_is_exhaustive_argmin():
+    st_, g = _stats_with_workload()
+    box = (0, 0, g - 1, g - 1)
+    c_p = float(st_.rows[S.N, 0, g - 1] * st_.rows[S.Q, 0, g - 1]
+                * st_.rows[S.R, 0, g - 1])
+    plan = B.find_best_split(st_, 0, box, c_mh=c_p, c_ml=0.0, c_p=c_p, r_s=1.0)
+    assert plan is not None
+    # exhaustive check over every (axis, sp, direction)
+    best = np.inf
+    for axis, a0, a1 in (("row", 0, g - 1), ("col", 0, g - 1)):
+        sp, c_lo, c_hi = B._split_terms(st_, 0, axis, a0, a1, 1.0, box)
+        for move_lo in (True, False):
+            keep, move = (c_hi, c_lo) if move_lo else (c_lo, c_hi)
+            c_diff = (c_p - c_p) - 0.0 + keep - move
+            best = min(best, float(np.abs(c_diff).min()))
+    assert abs(plan.c_diff) == pytest.approx(best, rel=1e-6)
+
+
+def test_binary_search_close_to_vectorized_on_monotone():
+    """On smooth workloads the paper's binary search lands near the true
+    argmin (it is exact when C_diff is monotone)."""
+    st_, g = _stats_with_workload(seed=3)
+    box = (0, 0, g - 1, g - 1)
+    c_p = float(st_.rows[S.N, 0, g - 1] * st_.rows[S.Q, 0, g - 1]
+                * st_.rows[S.R, 0, g - 1])
+    vec = B.find_best_split(st_, 0, box, c_p, 0.0, c_p, 1.0)
+    bin_ = B.split_binary_search(st_, 0, box, c_p, 0.0, c_p, 1.0)
+    assert bin_ is not None
+    assert abs(bin_.c_diff) >= abs(vec.c_diff) - 1e-9  # vec is optimal
+
+
+def test_workload_reduction_prefers_subset_then_split():
+    st_, g = _stats_with_workload()
+    ids = np.array([0])
+    costs = np.array([100.0])
+    boxes = {0: (0, 0, g - 1, g - 1)}
+    # c_max = (100 − 0)/2 = 50 < cost of the only partition → must split
+    plan = B.find_workload_reduction(st_, ids, costs, boxes, 100.0, 0.0, 1.0)
+    assert plan.kind == "split"
+    # two partitions, one small enough to move whole → subset
+    ids2 = np.array([0, 1])
+    costs2 = np.array([80.0, 20.0])
+    boxes2 = {0: boxes[0], 1: (0, 0, 3, 3)}
+    plan2 = B.find_workload_reduction(st_, ids2, costs2, boxes2, 100.0, 0.0, 1.0)
+    assert plan2.kind == "subset" and plan2.subset == (1,)

@@ -1,0 +1,124 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.moe_histogram import moe_histogram, moe_histogram_ref
+from repro.kernels.spatial_match import spatial_match, spatial_match_ref
+from repro.kernels.stats_update import close_round, close_round_ref
+
+rng = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# spatial_match
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,q", [(1, 1), (7, 130), (128, 128), (300, 77),
+                                 (513, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_spatial_match_sweep(n, q, dtype):
+    pts = rng.uniform(0, 1, (n, 2)).astype(dtype)
+    c = rng.uniform(0, 0.9, (q, 2))
+    rects = np.concatenate([c, c + rng.uniform(0.01, 0.3, (q, 2))], 1).astype(dtype)
+    pc, qc = spatial_match(jnp.asarray(pts), jnp.asarray(rects), interpret=True)
+    pr, qr = spatial_match_ref(jnp.asarray(pts), jnp.asarray(rects))
+    np.testing.assert_array_equal(np.asarray(pc), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(qc), np.asarray(qr))
+
+
+def test_spatial_match_boundary_inclusive():
+    pts = jnp.asarray([[0.5, 0.5]], jnp.float32)
+    rects = jnp.asarray([[0.5, 0.5, 0.6, 0.6], [0.4, 0.4, 0.5, 0.5],
+                         [0.51, 0.51, 0.6, 0.6]], jnp.float32)
+    pc, qc = spatial_match(pts, rects, interpret=True)
+    assert int(pc[0]) == 2 and qc.tolist() == [1, 1, 0]
+
+
+# ---------------------------------------------------------------------------
+# stats_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p,g1", [(1, 17), (8, 128), (13, 250), (32, 1001)])
+@pytest.mark.parametrize("decay", [0.5, 1.0])
+def test_stats_update_sweep(p, g1, decay):
+    bank = rng.uniform(0, 10, (8, p, g1)).astype(np.float32)
+    out = close_round(jnp.asarray(bank), decay=decay, interpret=True)
+    ref = close_round_ref(jnp.asarray(bank), decay)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,s,d", [(1, 2, 1, 64, 32), (2, 4, 2, 130, 64),
+                                         (1, 8, 2, 256, 128)])
+def test_flash_attention_causal(b, h, hkv, s, d):
+    q = jnp.asarray(rng.normal(0, 1, (b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, hkv, s, d)), jnp.float32)
+    o = flash_attention(q, k, v, causal=True, interpret=True)
+    r = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 100])
+def test_flash_attention_sliding_window(window):
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 32)), jnp.float32)
+    o = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    r = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+def test_flash_attention_decode_offset():
+    q = jnp.asarray(rng.normal(0, 1, (2, 4, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (2, 2, 96, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (2, 2, 96, 32)), jnp.float32)
+    o = flash_attention(q, k, v, causal=True, q_offset=95, interpret=True)
+    r = attention_ref(q, k, v, causal=True, q_offset=95)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, 64, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (1, 1, 64, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (1, 1, 64, 32)), jnp.bfloat16)
+    o = flash_attention(q, k, v, causal=True, interpret=True)
+    r = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=3e-2)
+
+
+def test_flash_matches_model_sdpa():
+    """The kernel and the model's XLA chunked path share one oracle."""
+    from repro.models import layers as ML
+    q = jnp.asarray(rng.normal(0, 1, (1, 1536, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 1536, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 1536, 2, 32)), jnp.float32)
+    xla = ML._sdpa(q, k, v, causal=True, window=None, q_offset=0)
+    ker = flash_attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                          v.swapaxes(1, 2), causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(xla),
+                               np.asarray(ker.swapaxes(1, 2)), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# moe_histogram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,k,e", [(1, 1, 4), (300, 4, 60), (512, 6, 64),
+                                   (1000, 2, 16)])
+def test_moe_histogram_sweep(t, k, e):
+    idx = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+    gates = jnp.asarray(rng.uniform(0, 1, (t, k)), jnp.float32)
+    c, l = moe_histogram(idx, gates, num_experts=e, interpret=True)
+    cr, lr = moe_histogram_ref(idx, gates, e)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(lr), rtol=1e-5)
+    assert float(c.sum()) == t * k

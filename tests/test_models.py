@@ -1,0 +1,166 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + decode/forward
+consistency + memory-safe loss machinery."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import (decode_step, forward, init_params, loss_fn, prefill)
+from repro.models import layers as ML
+from repro.models import model as MODEL
+
+KEY = jax.random.PRNGKey(0)
+rng = np.random.default_rng(0)
+
+
+def _batch(cfg, b=2, s=32):
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    if cfg.frontend:
+        emb = jnp.asarray(rng.normal(0, 1, (b, s, cfg.d_model)), jnp.float32)
+        return {"embeds": emb, "labels": toks}
+    return {"tokens": toks, "labels": toks}
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_arch_smoke_forward_and_loss(arch):
+    cfg = configs.get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg)
+    loss, aux = loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss)), arch
+    kw = ({"embeds": batch["embeds"]} if cfg.frontend
+          else {"token_ids": batch["tokens"]})
+    logits, _ = forward(params, cfg, **kw)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", [a for a in configs.ARCH_IDS
+                                  if configs.get_config(a).has_decode])
+def test_arch_smoke_decode(arch):
+    cfg = configs.get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg)
+    kw = ({"embeds": batch["embeds"]} if cfg.frontend
+          else {"token_ids": batch["tokens"]})
+    logits, cache, _ = prefill(params, cfg, max_seq=40, **kw)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    logits2, cache2, _ = decode_step(params, cfg, cache, tok)
+    assert logits2.shape == (2, 1, cfg.vocab_size)
+    assert int(cache2["offset"]) == 33
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["internlm2_1_8b", "h2o_danube_1_8b",
+                                  "xlstm_1_3b", "gemma_7b"])
+def test_decode_matches_forward(arch):
+    cfg = configs.get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 12)), jnp.int32)
+    full, _ = forward(params, cfg, token_ids=toks)
+    _, cache, _ = prefill(params, cfg, token_ids=toks[:, :8], max_seq=16)
+    for t in range(8, 12):
+        logits, cache, _ = decode_step(params, cfg, cache, toks[:, t:t + 1])
+    err = float(jnp.max(jnp.abs(logits[:, 0] - full[:, 11])))
+    assert err < 2e-2, (arch, err)
+
+
+def test_decode_matches_forward_jamba_no_drop():
+    cfg = configs.get_smoke_config("jamba_v0_1_52b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(cfg, KEY)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 12)), jnp.int32)
+    full, _ = forward(params, cfg, token_ids=toks)
+    _, cache, _ = prefill(params, cfg, token_ids=toks[:, :8], max_seq=16)
+    for t in range(8, 12):
+        logits, cache, _ = decode_step(params, cfg, cache, toks[:, t:t + 1])
+    assert float(jnp.max(jnp.abs(logits[:, 0] - full[:, 11]))) < 2e-2
+
+
+def test_chunked_ce_matches_naive():
+    cfg = configs.get_smoke_config("internlm2_1_8b")
+    params = init_params(cfg, KEY)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 48)), jnp.int32)
+    loss, _ = loss_fn(params, cfg, {"tokens": toks, "labels": toks})
+    logits, _ = forward(params, cfg, token_ids=toks)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+    ll = jnp.take_along_axis(logp, toks[:, 1:][..., None], -1)[..., 0]
+    assert abs(float(loss) - float(-ll.mean())) < 1e-4
+
+
+def test_chunked_sdpa_matches_direct():
+    b, h, hkv, s, dh = 1, 4, 2, 1536, 32
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, hkv, dh)), jnp.float32)
+    for w in (None, 200):
+        o1 = ML._sdpa_direct(q, k, v, causal=True, window=w, q_offset=0)
+        o2 = ML._sdpa_chunked(q, k, v, causal=True, window=w, q_offset=0)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_sliding_window_limits_context():
+    cfg = dataclasses.replace(configs.get_smoke_config("h2o_danube_1_8b"),
+                              sliding_window=4)
+    params = init_params(cfg, KEY)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 24)), jnp.int32)
+    logits, _ = forward(params, cfg, token_ids=toks)
+    # changing tokens outside the window must not change the last logit
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    logits2, _ = forward(params, cfg, token_ids=toks2)
+    np.testing.assert_allclose(np.asarray(logits[0, -1]),
+                               np.asarray(logits2[0, -1]), atol=1e-5)
+
+
+def test_moe_placement_permutation_is_transparent():
+    """Permuting experts + permuting weights identically must not change
+    outputs (the SWARM-EP migration invariant)."""
+    cfg = configs.get_smoke_config("qwen2_moe_a2_7b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(cfg, KEY)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 16)), jnp.int32)
+    base, _ = forward(params, cfg, token_ids=toks)
+    perm = jnp.asarray(rng.permutation(cfg.moe.num_experts), jnp.int32)
+    # physical slot s must hold the weights of the logical expert l with
+    # placement[l] == s  →  index by the inverse permutation
+    inv = jnp.argsort(perm)
+    p2 = jax.tree.map(lambda x: x, params)
+
+    def permute_expert_weights(blocks):
+        for pos in blocks.values():
+            if "ffn" in pos and "w_gate" in pos["ffn"] and pos["ffn"]["w_gate"].ndim == 4:
+                for k in ("w_gate", "w_up", "w_down"):
+                    pos["ffn"][k] = pos["ffn"][k][:, inv]
+                pos["ffn"]["router"] = pos["ffn"]["router"]  # logical order
+        return blocks
+
+    p2["blocks"] = permute_expert_weights(p2["blocks"])
+    out, _ = forward(p2, cfg, token_ids=toks, placement=perm)
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(out, np.float32), atol=1e-3)
+
+
+def test_param_counts_match_published_scale():
+    """Full configs land near their published parameter counts."""
+    expect = {
+        "internlm2_1_8b": (1.6e9, 2.3e9),
+        "gemma_7b": (7.5e9, 9.5e9),       # 8.5B with embeddings
+        "starcoder2_7b": (6.5e9, 8.0e9),
+        "h2o_danube_1_8b": (1.5e9, 2.2e9),
+        "jamba_v0_1_52b": (45e9, 58e9),
+        "qwen2_moe_a2_7b": (12e9, 16e9),
+        "deepseek_moe_16b": (15e9, 19e9),
+        "pixtral_12b": (11e9, 14e9),
+        "hubert_xlarge": (0.8e9, 1.3e9),
+        # the assigned 48L×2048 xLSTM config with proj_factor 2 implies
+        # ~3.4B params (the "1.3b" name notwithstanding) — see EXPERIMENTS
+        "xlstm_1_3b": (2.8e9, 3.8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)

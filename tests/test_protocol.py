@@ -1,0 +1,145 @@
+"""Integration tests for the full SWARM protocol (§4.3, §5)."""
+import numpy as np
+
+from repro.core import Swarm, balancer, geometry, integrity
+from repro.core import statistics as S
+
+
+def _hotspot_round(sw, rng, n_bg=500, n_hot=2000, n_q=100):
+    pts = np.concatenate([
+        rng.uniform(0, 1, (n_bg, 2)),
+        rng.uniform(0, 0.25, (n_hot, 2)),
+    ]).astype(np.float32)
+    sw.ingest_points(pts)
+    qc = rng.uniform(0, 0.25, (n_q, 2)).astype(np.float32)
+    sw.ingest_queries(np.concatenate([qc, qc + 0.02], 1))
+    return sw.run_round()
+
+
+def test_hotspot_rebalancing_reduces_cost_imbalance():
+    rng = np.random.default_rng(0)
+    sw = Swarm(grid_size=32, num_machines=4, decay=1.0, beta=6)
+    first_cv = None
+    for i in range(20):
+        _hotspot_round(sw, rng)
+        loads = sw.machine_loads()
+        cv = float(np.std(loads) / (np.mean(loads) + 1e-9))
+        if i == 2:
+            first_cv = cv
+    assert cv < first_cv, (cv, first_cv)
+    assert cv < 0.5
+
+
+def test_rebalancing_only_moves_highest_to_lowest():
+    rng = np.random.default_rng(1)
+    sw = Swarm(grid_size=32, num_machines=4, decay=1.0, beta=4)
+    for _ in range(15):
+        rep = _hotspot_round(sw, rng)
+        if rep.action != "none":
+            assert rep.costs is not None
+            order = np.argsort(-rep.costs)
+            # m_L must be the cheapest machine
+            assert rep.m_l == int(order[-1])
+
+
+def test_split_creates_chained_partitions():
+    rng = np.random.default_rng(2)
+    sw = Swarm(grid_size=32, num_machines=2, decay=1.0, beta=2,
+               window_rounds=100)
+    found = None
+    for _ in range(10):
+        rep = _hotspot_round(sw, rng)
+        if rep.action == "split":
+            found = rep
+            break
+    assert found is not None
+    p = sw.index.parts
+    for new in found.new_pids:
+        assert int(p.parent[new]) == found.moved_pids[0]
+        chain = integrity.partition_chain(p, new)
+        assert chain[0] == found.moved_pids[0]
+
+
+def test_chains_expire():
+    rng = np.random.default_rng(3)
+    sw = Swarm(grid_size=32, num_machines=2, decay=1.0, beta=2,
+               window_rounds=3)
+    for _ in range(12):
+        _hotspot_round(sw, rng)
+    p = sw.index.parts
+    live = p.live_ids()
+    # all live partitions older than the window have their chains broken
+    old = live[sw.round_no - p.birth_round[live] >= 3]
+    assert (p.parent[old] == -1).all()
+
+
+def test_merge_adjacent_restores_rectangles():
+    sw = Swarm(grid_size=16, num_machines=2)
+    p = sw.index.parts
+    live = p.live_ids()
+    # force both partitions onto machine 0 then merge
+    for pid in live:
+        p.owner[pid] = 0
+    n_before = len(p.live_ids())
+    merges = sw.merge_adjacent()
+    assert merges == 1
+    live = p.live_ids()
+    assert len(live) == n_before - 1
+    pid = int(live[0])
+    assert (p.r0[pid], p.c0[pid], p.r1[pid], p.c1[pid]) == (0, 0, 15, 15)
+
+
+def test_merge_preserves_point_totals():
+    rng = np.random.default_rng(4)
+    sw = Swarm(grid_size=16, num_machines=2, decay=1.0)
+    pts = rng.uniform(0, 1, (400, 2)).astype(np.float32)
+    sw.ingest_points(pts)
+    sw.run_round()
+    p = sw.index.parts
+    for pid in p.live_ids():
+        p.owner[pid] = 0
+    n_total = sum(S.partition_totals(sw.stats, int(pid), int(p.r1[pid]),
+                                     int(p.c1[pid]))[0]
+                  for pid in p.live_ids())
+    sw.merge_adjacent()
+    pid = int(p.live_ids()[0])
+    n_after = S.partition_totals(sw.stats, pid, int(p.r1[pid]),
+                                 int(p.c1[pid]))[0]
+    assert n_after == n_total == 400
+
+
+def test_exactly_once_during_migration():
+    """§5.1: no tuple lost or double-processed while partitions move."""
+    rng = np.random.default_rng(5)
+    sw = Swarm(grid_size=32, num_machines=4, decay=1.0, beta=2)
+    ledger = integrity.ProcessingLedger()
+    next_id = 0
+    all_ids = []
+    for _ in range(15):
+        pts = rng.uniform(0, 0.3, (500, 2)).astype(np.float32)
+        ids = np.arange(next_id, next_id + len(pts))
+        next_id += len(pts)
+        all_ids.extend(ids.tolist())
+        owners = sw.ingest_points(pts)
+        for m in range(4):
+            ledger.record(ids[owners == m], m)
+        sw.run_round()
+    ledger.assert_exactly_once(all_ids)
+
+
+def test_wire_format_is_two_scalars_per_machine():
+    """Fig 20: the Coordinator receives exactly 2 scalars per executor."""
+    sw = Swarm(grid_size=32, num_machines=8)
+    rep = sw.run_round()
+    from repro.core.cost_model import CostReport
+    assert rep.wire_bytes == 8 * CostReport.WIRE_BYTES
+
+
+def test_rate_cost_model_plugs_in():
+    rng = np.random.default_rng(6)
+    sw = Swarm(grid_size=32, num_machines=4, beta=4,
+               cost_fn=balancer.make_rate_cost())
+    for _ in range(10):
+        _hotspot_round(sw, rng)
+    loads = sw.machine_loads()
+    assert np.isfinite(loads).all()

@@ -1,0 +1,138 @@
+"""Property tests for SWARM's statistics (§4.2.3 correctness proofs).
+
+The paper proves N / Q / R reconstruct exact counts for any split point;
+hypothesis drives random workloads and sub-ranges against brute force.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import statistics as S
+
+G = 16
+PID = 0
+
+
+def _mk_state():
+    return S.StatsState.zeros(4, G)
+
+
+def _brute_points(pts, u, l):
+    return sum(1 for r, c in pts if u <= r <= l)
+
+
+def _brute_queries(rects, u, l, axis=0):
+    if axis == 0:
+        return sum(1 for r0, c0, r1, c1 in rects if r0 <= l and r1 >= u)
+    return sum(1 for r0, c0, r1, c1 in rects if c0 <= l and c1 >= u)
+
+
+points_strat = st.lists(
+    st.tuples(st.integers(0, G - 1), st.integers(0, G - 1)), max_size=60)
+rects_strat = st.lists(
+    st.tuples(st.integers(0, G - 1), st.integers(0, G - 1),
+              st.integers(0, G - 1), st.integers(0, G - 1)).map(
+        lambda t: (min(t[0], t[2]), min(t[1], t[3]),
+                   max(t[0], t[2]), max(t[1], t[3]))), max_size=40)
+
+
+@settings(max_examples=60, deadline=None)
+@given(points_strat, rects_strat, st.integers(0, G - 1), st.integers(0, G - 1))
+def test_counts_reconstruct_exactly(pts, rects, a, b):
+    """Eqn 9 / §4.2.3: any row range [u..l] reconstructs true counts."""
+    u, l = min(a, b), max(a, b)
+    st_ = _mk_state()
+    if pts:
+        arr = np.array(pts, np.int64)
+        S.ingest_points(st_, np.zeros(len(pts), np.int64), arr[:, 0], arr[:, 1])
+    if rects:
+        arr = np.array(rects, np.int64)
+        S.ingest_queries(st_, np.zeros(len(rects), np.int64),
+                         arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3])
+    S.close_round(st_, decay=1.0)
+    assert S.count_points_rows(st_, PID, 0, u, l) == _brute_points(pts, u, l)
+    assert S.count_queries_rows(st_, PID, 0, u, l) == _brute_queries(rects, u, l)
+    # R counts new points + new queries of the last round = all of them here
+    assert S.count_recent_rows(st_, PID, 0, u, l) == (
+        _brute_points(pts, u, l) + _brute_queries(rects, u, l))
+
+
+@settings(max_examples=40, deadline=None)
+@given(points_strat, rects_strat, st.integers(0, G - 2))
+def test_row_split_derivation_exact(pts, rects, sp):
+    """derive_row_split's split-axis stats equal brute-force counts."""
+    st_ = _mk_state()
+    if pts:
+        arr = np.array(pts, np.int64)
+        S.ingest_points(st_, np.zeros(len(pts), np.int64), arr[:, 0], arr[:, 1])
+    if rects:
+        arr = np.array(rects, np.int64)
+        S.ingest_queries(st_, np.zeros(len(rects), np.int64),
+                         arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3])
+    S.close_round(st_, decay=1.0)
+    S.derive_row_split(st_, PID, 1, 2, 0, sp, G - 1, 0, G - 1)
+    n_lo, q_lo, r_lo = S.partition_totals(st_, 1, sp, G - 1)
+    n_hi = st_.rows[S.N, 2, G - 1]
+    q_hi = st_.rows[S.Q, 2, G - 1]
+    assert n_lo == _brute_points(pts, 0, sp)
+    assert n_hi == _brute_points(pts, sp + 1, G - 1)
+    assert q_lo == _brute_queries(rects, 0, sp)
+    assert q_hi == _brute_queries(rects, sp + 1, G - 1)
+    # orthogonal (cols) bank totals must equal the exact side totals too
+    assert st_.cols[S.N, 1, G - 1] == pytest.approx(n_lo, rel=1e-5)
+    assert st_.cols[S.Q, 2, G - 1] == pytest.approx(q_hi, rel=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(points_strat, rects_strat, st.integers(0, G - 2))
+def test_col_split_derivation_exact(pts, rects, sp):
+    st_ = _mk_state()
+    if pts:
+        arr = np.array(pts, np.int64)
+        S.ingest_points(st_, np.zeros(len(pts), np.int64), arr[:, 0], arr[:, 1])
+    if rects:
+        arr = np.array(rects, np.int64)
+        S.ingest_queries(st_, np.zeros(len(rects), np.int64),
+                         arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3])
+    S.close_round(st_, decay=1.0)
+    S.derive_col_split(st_, PID, 1, 2, 0, sp, G - 1, 0, G - 1)
+    assert st_.cols[S.N, 1, sp] == _brute_points([(c, r) for r, c in pts], 0, sp)
+    assert st_.cols[S.Q, 2, G - 1] == _brute_queries(rects, sp + 1, G - 1, axis=1)
+
+
+def test_multi_round_accumulation_and_decay():
+    st_ = _mk_state()
+    S.ingest_points(st_, np.zeros(4, np.int64), np.array([1, 2, 3, 4]),
+                    np.array([0, 0, 0, 0]))
+    S.close_round(st_, decay=1.0)
+    assert st_.rows[S.N, PID, G - 1] == 4
+    S.ingest_points(st_, np.zeros(2, np.int64), np.array([5, 6]),
+                    np.array([0, 0]))
+    S.close_round(st_, decay=0.5)
+    # N decays: 4/2 + 2 = 4; R is only the new round: 2
+    assert st_.rows[S.N, PID, G - 1] == 4
+    assert st_.rows[S.R, PID, G - 1] == 2
+
+
+def test_expiry_via_negative_ingest():
+    st_ = _mk_state()
+    S.ingest_points(st_, np.zeros(3, np.int64), np.array([1, 2, 3]),
+                    np.array([1, 2, 3]))
+    S.close_round(st_, decay=1.0)
+    S.ingest_points(st_, np.zeros(1, np.int64), np.array([2]), np.array([2]),
+                    weight=np.array([-1.0], np.float32))
+    S.close_round(st_, decay=1.0)
+    assert st_.rows[S.N, PID, G - 1] == 2
+
+
+def test_pallas_stats_update_matches_control_plane():
+    import jax.numpy as jnp
+    from repro.kernels.stats_update import close_round as pallas_close
+    rng = np.random.default_rng(0)
+    st_ = _mk_state()
+    st_.rows[:] = rng.uniform(0, 5, st_.rows.shape).astype(np.float32)
+    rows0 = st_.rows.copy()
+    out = np.asarray(pallas_close(jnp.asarray(rows0), decay=0.5,
+                                  interpret=True))
+    S.close_round(st_, 0.5)
+    np.testing.assert_allclose(out, st_.rows, rtol=1e-6)
