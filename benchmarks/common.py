@@ -6,10 +6,12 @@ import time
 
 import numpy as np
 
+from repro.queries import QueryModel, WorkloadSpec
 from repro.streaming import (EngineConfig, ReplicatedRouter,
                              StaticHistoryRouter, StaticUniformRouter,
                              SwarmRouter, TwitterLikeSource, run_experiment,
                              scenario)
+from repro.streaming.sources import QUERY_SIDE
 
 G, M = 64, 8
 CFG = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20_000,
@@ -17,26 +19,40 @@ CFG = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20_000,
 SYSTEMS = ("replicated", "static_uniform", "static_history", "swarm")
 
 
-def make_router(name: str, *, beta: int = 8, seed: int = 1):
+def workload_query_side(workload: WorkloadSpec | None) -> float:
+    return (workload.knn_side
+            if workload is not None and workload.query_model is QueryModel.KNN
+            else QUERY_SIDE)
+
+
+def make_router(name: str, *, beta: int = 8, seed: int = 1,
+                workload: WorkloadSpec | None = None):
+    kw = {"workload": workload} if workload is not None else {}
     if name == "replicated":
-        return ReplicatedRouter(M, G)
+        return ReplicatedRouter(M, G, **kw)
     if name == "static_uniform":
-        return StaticUniformRouter(G, M)
+        return StaticUniformRouter(G, M, **kw)
     if name == "static_history":
         base = TwitterLikeSource(seed=seed)
-        return StaticHistoryRouter(G, M, base.sample_points(4000),
-                                   base.sample_queries(2000), rounds=20)
+        # keep the original RNG order (points, then queries), and balance
+        # the frozen plan for the query footprint it will actually serve
+        hist_pts = base.sample_points(4000)
+        hist_q = base.sample_queries(2000, side=workload_query_side(workload))
+        return StaticHistoryRouter(G, M, hist_pts, hist_q, rounds=20, **kw)
     if name == "swarm":
-        return SwarmRouter(G, M, beta=beta)
+        return SwarmRouter(G, M, beta=beta, **kw)
     raise ValueError(name)
 
 
 def run_system(name: str, scen: str, *, ticks: int = 90, preload: int = 3000,
-               query_burst: int = 500, cfg: EngineConfig = CFG, seed: int = 0):
-    src = scenario(scen, seed=seed, horizon=ticks, query_burst=query_burst)
+               query_burst: int = 500, cfg: EngineConfig = CFG, seed: int = 0,
+               workload: WorkloadSpec | None = None):
+    src = scenario(scen, seed=seed, horizon=ticks, query_burst=query_burst,
+                   query_side=workload_query_side(workload))
     t0 = time.perf_counter()
-    metrics = run_experiment(make_router(name), src, ticks=ticks,
-                             preload_queries=preload, config=cfg, seed=seed)
+    metrics = run_experiment(make_router(name, workload=workload), src,
+                             ticks=ticks, preload_queries=preload, config=cfg,
+                             seed=seed)
     wall = time.perf_counter() - t0
     return metrics, wall
 

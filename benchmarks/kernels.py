@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import attention_ref
+from repro.kernels.knn_match import knn_match, knn_match_ref
 from repro.kernels.moe_histogram import moe_histogram_ref
 from repro.kernels.spatial_match import spatial_match, spatial_match_ref
 from repro.kernels.stats_update import close_round_ref
@@ -38,6 +39,15 @@ def run() -> dict:
          f"checks_per_us={4096 * 2048 / t:.0f}")
     t_i = _time(lambda: spatial_match(pts[:256], rects[:256], interpret=True), 2)
     emit("kernels/spatial_match_interpret_256", t_i, "correctness-mode")
+
+    foci = jnp.asarray(rng.uniform(0, 1, (1024, 2)), jnp.float32)
+    refk = jax.jit(lambda p, f: knn_match_ref(p, f, 8))
+    t = _time(lambda: refk(pts, foci))
+    emit("kernels/knn_match_ref_4k_x_1k_k8", t,
+         f"dists_per_us={4096 * 1024 / t:.0f}")
+    t_i = _time(lambda: knn_match(pts[:256], foci[:256], k=8,
+                                  interpret=True), 2)
+    emit("kernels/knn_match_interpret_256", t_i, "correctness-mode")
 
     bank = jnp.asarray(rng.uniform(0, 5, (8, 64, 1024)), jnp.float32)
     refc = jax.jit(lambda b: close_round_ref(b, 0.5))

@@ -1,6 +1,8 @@
-"""Render EXPERIMENTS.md tables from dry-run artifacts.
+"""Render EXPERIMENTS.md tables from dry-run artifacts, and the
+mixed-workload query table from BENCH_queries.json.
 
 Usage: PYTHONPATH=src python -m benchmarks.make_tables [baseline_dir] [final_dir]
+       PYTHONPATH=src python -m benchmarks.make_tables --queries [BENCH_queries.json]
 """
 import glob
 import json
@@ -68,7 +70,33 @@ def dryrun_table(recs, mesh):
     return "\n".join(rows)
 
 
+def queries_table(path="BENCH_queries.json"):
+    """Units-of-work matrix per (query model × persistence) workload
+    (benchmarks/queries_mixed.py output)."""
+    rec = json.load(open(path))
+    rows = {}
+    systems = []
+    for r in rec["results"]:
+        rows.setdefault(r["workload"], {})[r["system"]] = r
+        if r["system"] not in systems:
+            systems.append(r["system"])
+    print(f"### Mixed query/persistence workloads — mean units of work "
+          f"({rec['scenario']}, {rec['ticks']} ticks)\n")
+    print("| workload | " + " | ".join(systems) + " | swarm vs history |")
+    print("|---" * (len(systems) + 2) + "|")
+    for wl, by_sys in rows.items():
+        cells = [f"{by_sys[s]['uow_mean']:.3e}" if s in by_sys else ""
+                 for s in systems]
+        ratio = (by_sys["swarm"]["uow_mean"]
+                 / max(by_sys["static_history"]["uow_mean"], 1e-9))
+        print(f"| {wl} | " + " | ".join(cells) + f" | {ratio:.2f}x |")
+
+
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "--queries":
+        queries_table(sys.argv[2] if len(sys.argv) > 2
+                      else "BENCH_queries.json")
+        return
     base_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
     final_dir = sys.argv[2] if len(sys.argv) > 2 else "artifacts/dryrun_final"
     base = load(base_dir)

@@ -8,8 +8,10 @@ Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
   fig20  statistics network traffic           (benchmarks/stats_network.py)
   kernels  Pallas-oracle throughput           (benchmarks/kernels.py)
   roofline per-cell three-term analysis       (benchmarks/roofline.py)
+  queries  query×persistence workload matrix  (benchmarks/queries_mixed.py)
 """
 import argparse
+import inspect
 import sys
 
 
@@ -17,10 +19,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: capability,hotspots,utilization,"
-                         "overheads,stats_network,kernels,roofline")
+                         "overheads,stats_network,kernels,roofline,queries")
+    ap.add_argument("--smoke", action="store_true",
+                    help="short timelines (CI sanity run)")
     args = ap.parse_args()
-    from . import (capability, hotspots, kernels, overheads, roofline,
-                   stats_network, utilization)
+    from . import (capability, hotspots, kernels, overheads, queries_mixed,
+                   roofline, stats_network, utilization)
     sections = {
         "capability": capability.run,
         "hotspots": hotspots.run,
@@ -29,11 +33,16 @@ def main() -> None:
         "stats_network": stats_network.run,
         "kernels": kernels.run,
         "roofline": roofline.run,
+        "queries": queries_mixed.run,
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     print("name,us_per_call,derived")
     for name in chosen:
-        sections[name]()
+        fn = sections[name]
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            fn(smoke=True)
+        else:
+            fn()
 
 
 if __name__ == "__main__":

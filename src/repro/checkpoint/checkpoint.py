@@ -20,7 +20,7 @@ import numpy as np
 
 
 def _flatten(tree):
-    flat = jax.tree.flatten_with_path(tree)[0]
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
 
 
@@ -67,7 +67,7 @@ def restore(directory: str, step: int, *, abstract_params,
     data = np.load(os.path.join(src, "arrays.npz"))
 
     def load_tree(prefix, abstract, shardings):
-        flat = jax.tree.flatten_with_path(abstract)[0]
+        flat = jax.tree_util.tree_flatten_with_path(abstract)[0]
         tdef = jax.tree.structure(abstract)
         shard_flat = (jax.tree.leaves(shardings)
                       if shardings is not None else [None] * len(flat))

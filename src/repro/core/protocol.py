@@ -32,6 +32,8 @@ class RoundReport:
     moved_pids: tuple = ()
     new_pids: tuple = ()
     wire_bytes: int = 0               # Coordinator traffic this round (Fig 20)
+    moved_tuples: int = 0             # stored tuples re-homed by plan changes
+    data_bytes: int = 0               # …billed as wire bytes (STORED mode)
 
 
 class Swarm:
@@ -61,6 +63,25 @@ class Swarm:
         self.round_no = 0
         self.reports: list[RoundReport] = []
         self.dead: set[int] = set()   # crash-stop machines (ft layer)
+        # Data-persistence hook (repro.queries): when a TupleStore is
+        # attached, plan changes re-home its per-partition counts and
+        # D(p) enters the cost product with weight ``data_weight``.
+        self.store = None
+        self.data_weight = 0.0
+        self.bill_data_migration = False
+        self._moved_tuples = 0
+
+    def attach_store(self, store, *, data_weight: float = 0.0,
+                     bill_migration: bool = False) -> None:
+        """Wire a ``repro.queries.TupleStore`` into the protocol.
+
+        ``data_weight`` > 0 folds resident tuples into N(p) (STORED
+        cost); ``bill_migration`` bills moved tuples' bytes on the round
+        that moved them (§5.2 chain-forwarding ships them lazily, but
+        they do cross the wire once)."""
+        self.store = store
+        self.data_weight = float(data_weight)
+        self.bill_data_migration = bool(bill_migration)
 
     # ------------------------------------------------------------------
     # Executor-side ingest (hot path)
@@ -95,6 +116,27 @@ class Swarm:
             out.append([(int(q), int(p.owner[q])) for q in pids])
         return out
 
+    def ingest_snapshot_probes(self, rects: np.ndarray):
+        """One-shot snapshot probes (repro.queries SNAPSHOT model).
+
+        Probes arrive at stream rate, so unlike continuous-query
+        registration this path is fully vectorized: each probe is
+        attributed to the partition containing its center (probes are
+        campus-sized, partitions much larger).  Feeds the Q'/spanQ'
+        collectors so the cost model sees probe hotspots exactly like
+        query hotspots.  Returns (pids, owners) per probe."""
+        centers = np.stack([(rects[:, 0] + rects[:, 2]) * 0.5,
+                            (rects[:, 1] + rects[:, 3]) * 0.5], axis=1)
+        row, col = geometry.points_to_cells(centers, self.g)
+        pids, owners = self.index.route_points(row, col)
+        self._sync_capacity()
+        r0, c0, r1, c1 = geometry.rects_to_cells(rects, self.g)
+        p = self.index.parts
+        qr0, qc0, qr1, qc1 = geometry.clip_box(
+            r0, c0, r1, c1, p.r0[pids], p.c0[pids], p.r1[pids], p.c1[pids])
+        S.ingest_queries(self.stats, pids, qr0, qc0, qr1, qc1)
+        return pids, owners
+
     # ------------------------------------------------------------------
     # Coordinator round (Figs 8–10)
     # ------------------------------------------------------------------
@@ -103,14 +145,25 @@ class Swarm:
         S.close_round(self.stats, self.decay)
         reports = self._collect_reports()
         r_s = cost_model.total_rate(reports)
-        wire = len(reports) * cost_model.CostReport.WIRE_BYTES
+        per_machine = (cost_model.CostReport.WIRE_BYTES_STORED
+                       if self.store is not None and self.data_weight > 0
+                       else cost_model.CostReport.WIRE_BYTES)
+        wire = len(reports) * per_machine
         self.decision, decision = balancer.step_decision(self.decision, r_s, self.beta)
         rep = RoundReport(self.round_no, decision, r_s, wire_bytes=wire)
         if decision == balancer.REBALANCE:
             self._rebalance(reports, r_s, rep)
         integrity.expire_chains(self.index.parts, self.round_no, self.window_rounds)
-        self.reports.append(rep)
+        self._finish_round(rep)
         return rep
+
+    def _finish_round(self, rep: RoundReport) -> None:
+        """Fold the data-migration accounting (includes emergency
+        failure moves done since the previous round) and log the round."""
+        rep.moved_tuples, self._moved_tuples = self._moved_tuples, 0
+        if self.bill_data_migration and self.store is not None:
+            rep.data_bytes = rep.moved_tuples * self.store.bytes_per_tuple
+        self.reports.append(rep)
 
     # ------------------------------------------------------------------
     def _collect_reports(self):
@@ -120,19 +173,24 @@ class Swarm:
         n = self.stats.rows[S.N, live, p.r1[live]] + s
         q = self.stats.rows[S.Q, live, p.r1[live]] + s
         r = self.stats.rows[S.R, live, p.r1[live]] + s
+        d = np.zeros(len(live), np.float64)
+        if self.store is not None:
+            self.store.ensure(p.capacity)
+            d = self.store.counts[live]
+            n = cost_model.effective_n(n, d, self.data_weight)
         area = (geometry.box_area(p.r0[live], p.c0[live], p.r1[live], p.c1[live])
                 .astype(np.float64) / (self.g * self.g))
         self._live_cache = (live, n, q, r, area)
         r_s = float(r.sum())
         part_cost = self.cost_fn(n, q, r, area, r_s)
         # wire format is unchanged: two scalars per machine — Num(C(m))
-        # (scaled so Num/R(S) = Σ C(p)) and R(m).
+        # (scaled so Num/R(S) = Σ C(p)) and R(m); STORED adds D(m).
         reports = []
         for m in range(self.m):
             sel = p.owner[live] == m
             reports.append(cost_model.CostReport(
                 m, float(part_cost[sel].sum()) * max(r_s, 1.0),
-                float(r[sel].sum())))
+                float(r[sel].sum()), float(d[sel].sum())))
         return reports
 
     def mark_dead(self, machine: int) -> None:
@@ -185,6 +243,8 @@ class Swarm:
         p.retire(pid)
         self._sync_capacity()
         S.move_partition_stats(self.stats, pid, new)
+        if self.store is not None:
+            self._moved_tuples += self.store.migrate(pid, new)
         return new
 
     def _split_partition(self, plan: balancer.SplitPlan, m_h: int, m_l: int):
@@ -203,6 +263,15 @@ class Swarm:
             hi = p.allocate(r0, plan.sp + 1, r1, c1, own_hi, pid, m_h, self.round_no)
             self._sync_capacity()
             S.derive_col_split(self.stats, pid, lo, hi, c0, plan.sp, c1, r0, r1)
+        if self.store is not None:
+            if plan.axis == "row":
+                frac_lo = (plan.sp - r0 + 1) / max(r1 - r0 + 1, 1)
+            else:
+                frac_lo = (plan.sp - c0 + 1) / max(c1 - c0 + 1, 1)
+            total = self.store.split(pid, lo, hi, frac_lo)
+            # only the side handed to m_L actually changes machine
+            moved_frac = frac_lo if plan.move_lo else 1.0 - frac_lo
+            self._moved_tuples += int(round(total * moved_frac))
         p.retire(pid)
         return lo, hi
 
@@ -273,6 +342,10 @@ class Swarm:
                 st.cols[ch, new, sp + 1:] = st.cols[ch, hi, sp + 1:] + st.cols[ch, lo, sp]
             st.cols[S.SPANQ, new, sp + 1] = 0.0
             st.cols[S.PRESPANQ, new, sp + 1] = 0.0
+        if self.store is not None:
+            # same-owner merge: counts re-home, nothing crosses the wire
+            self.store.migrate(a, new)
+            self.store.migrate(b, new)
         p.retire(a)
         p.retire(b)
         return new
@@ -281,6 +354,8 @@ class Swarm:
     def _sync_capacity(self) -> None:
         """Grow the stats bank alongside the partition table."""
         cap = self.index.parts.capacity
+        if self.store is not None:
+            self.store.ensure(cap)
         if self.stats.rows.shape[1] < cap:
             pad = cap - self.stats.rows.shape[1]
             self.stats.rows = np.concatenate(

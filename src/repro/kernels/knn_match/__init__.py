@@ -1,0 +1,4 @@
+from .ops import knn_match
+from .ref import knn_match_ref
+
+__all__ = ["knn_match", "knn_match_ref"]

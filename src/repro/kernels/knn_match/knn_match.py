@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: blocked point↔focal-point distance tiles with an
+in-VMEM running top-k (the data plane of the continuous-kNN query
+model, repro.queries).
+
+Shape of the computation: for each resident kNN query (focal point), the
+k smallest squared distances to the incoming tuple batch.  Like the
+spatial_match containment sweep, the tile is a dense (TN × TQ) VPU
+pattern — but the reduction is order-statistics, not a sum, so the
+accumulator is a (K, TQ) tile of the current k best distances per query,
+revisited on consecutive inner grid steps (the safe TPU accumulation
+pattern: the reduced axis — point tiles — is the innermost grid
+dimension).
+
+The merge of TN fresh candidates into the running top-k avoids any
+sort: K rounds of (min over sublanes, mask the first argmin via a
+broadcasted row iota).  Each round is pure elementwise/reduce VPU work
+across the 128 query lanes; K is static and small, so the loop unrolls.
+
+Layout: points (2, N), foci (2, Q) — coordinate-major so the minor
+(lane) dimension is the entity index, padded to 128.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TN = 128   # points per tile (candidate axis, sublanes of the dist tile)
+TQ = 128   # kNN queries per tile (lanes)
+
+
+def _dist_tile(pts_ref, foc_ref):
+    px = pts_ref[0, :]                     # (TN,)
+    py = pts_ref[1, :]
+    fx = foc_ref[0, :]                     # (TQ,)
+    fy = foc_ref[1, :]
+    dx = px[:, None] - fx[None, :]
+    dy = py[:, None] - fy[None, :]
+    return dx * dx + dy * dy               # (TN, TQ) squared distances
+
+
+def _knn_kernel(k, pts_ref, foc_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+
+    cand = jnp.concatenate([out_ref[...], _dist_tile(pts_ref, foc_ref)],
+                           axis=0)                     # (K + TN, TQ)
+    rows = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 0)
+    best = []
+    for _ in range(k):                                 # unrolled, k static
+        m = jnp.min(cand, axis=0)                      # (TQ,)
+        hit = cand <= m[None, :]
+        first = jnp.min(jnp.where(hit, rows, cand.shape[0]), axis=0)
+        cand = jnp.where(rows == first[None, :], jnp.inf, cand)
+        best.append(m)
+    out_ref[...] = jnp.stack(best, axis=0)             # ascending
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def knn_match_kernel(points_t, foci_t, *, k: int = 8,
+                     interpret: bool = False):
+    """points_t: (2, N) f32, foci_t: (2, Q) f32, N % TN == Q % TQ == 0.
+
+    Returns (k, Q) float32 — per query the k smallest squared distances
+    in ascending order (padded/absent candidates appear as +inf)."""
+    _, n = points_t.shape
+    _, q = foci_t.shape
+    return pl.pallas_call(
+        functools.partial(_knn_kernel, k),
+        grid=(q // TQ, n // TN),           # inner axis = point tiles (reduced)
+        in_specs=[
+            pl.BlockSpec((2, TN), lambda i, j: (0, j)),
+            pl.BlockSpec((2, TQ), lambda i, j: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((k, TQ), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, q), jnp.float32),
+        interpret=interpret,
+    )(points_t, foci_t)

@@ -1,0 +1,36 @@
+"""Public jit'd wrapper for the knn_match kernel: padding, layout
+transform (entity-major → coordinate-major), and output slicing."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .knn_match import TN, TQ, knn_match_kernel
+
+# Padding points land far outside the unit square: their squared
+# distance (~8e8) is finite (no inf-inf NaNs against padded foci) yet
+# larger than any real distance, so they never displace a real
+# neighbor as long as k <= N.
+PAD_COORD = 2.0e4
+
+
+def _pad_to(x, mult, axis, fill):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def knn_match(points, foci, *, k: int = 8, interpret: bool = False):
+    """points: (N, 2) f32; foci: (Q, 2) f32; requires N >= k.
+
+    Returns (Q, k) float32 — ascending squared distances from each
+    focal point to its k nearest points."""
+    q = foci.shape[0]
+    pts_t = _pad_to(points.T.astype(jnp.float32), TN, 1, PAD_COORD)
+    foc_t = _pad_to(foci.T.astype(jnp.float32), TQ, 1, 0.0)
+    out = knn_match_kernel(pts_t, foc_t, k=k, interpret=interpret)
+    return out[:, :q].T

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the kNN top-k match.
+
+Given points (N, 2) and kNN-query focal points (Q, 2), return per query
+the k smallest squared Euclidean distances, ascending — the result-set
+update a batch of incoming tuples induces on the resident continuous
+kNN queries of a partition (repro.queries, KNN model).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def distance_matrix(points, foci):
+    """(Q, N) squared Euclidean distances."""
+    d = foci[:, None, :] - points[None, :, :]
+    return jnp.sum(d * d, axis=-1)
+
+
+def knn_match_ref(points, foci, k: int):
+    """Returns (Q, k) float32, ascending squared distances (requires
+    k <= N)."""
+    d = distance_matrix(points, foci)
+    neg_top, _ = jax.lax.top_k(-d, k)      # largest of -d == smallest of d
+    return (-neg_top).astype(jnp.float32)  # already ascending in d

@@ -6,19 +6,27 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; Auto is the default there
+    # anyway, so omit the kwarg on older versions.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16×16 = 256 chips ("data", "model").
     Multi-pod: 2×16×16 = 512 chips ("pod", "data", "model")."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small host-device meshes)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def data_parallel_size(mesh) -> int:

@@ -88,6 +88,8 @@ def roofline_terms(compiled, num_chips: int, analytic: dict | None = None,
     numbers and the undercount ratio are still recorded); the collective
     term always comes from the compiled HLO schedule."""
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax<=0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     flops_dev_xla = float(cost.get("flops", 0.0))
     bytes_dev_xla = float(cost.get("bytes accessed", 0.0))
     coll = collective_bytes(compiled.as_text(), scan_trip_hint)
@@ -160,7 +162,7 @@ def active_param_count(cfg) -> int:
     from ..models import layers as L
     spec = M.param_spec(cfg)
     total = 0
-    for path, lf in jax.tree.flatten_with_path(spec, is_leaf=L.is_leaf)[0]:
+    for path, lf in jax.tree_util.tree_flatten_with_path(spec, is_leaf=L.is_leaf)[0]:
         n = int(np.prod(lf["shape"]))
         keypath = jax.tree_util.keystr(path)
         if (cfg.moe is not None and L.P.EXPERT in lf["axes"]

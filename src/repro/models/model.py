@@ -98,7 +98,7 @@ def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
 
 def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
     spec = param_spec(cfg)
-    flat, treedef = jax.tree.flatten_with_path(spec, is_leaf=L.is_leaf)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(spec, is_leaf=L.is_leaf)
 
     def init_one(path, lf, k):
         shape = lf["shape"]

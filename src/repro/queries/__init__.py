@@ -1,0 +1,15 @@
+"""Multi-model query subsystem: query-execution models (continuous
+range, continuous kNN, snapshot range) and data-persistence models
+(ephemeral, stored) consumed by the streaming engine, the routers and
+the SWARM protocol.  See models.py for the plug-in contract and
+store.py for the resident-data state.
+"""
+from .models import (PersistenceModel, QueryModel, QueryModelSpec,
+                     WorkloadSpec, all_workloads, get_query_model,
+                     register_query_model)
+from .store import TupleStore
+
+__all__ = [
+    "QueryModel", "PersistenceModel", "QueryModelSpec", "WorkloadSpec",
+    "all_workloads", "get_query_model", "register_query_model", "TupleStore",
+]

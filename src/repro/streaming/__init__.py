@@ -1,5 +1,9 @@
 """Streaming substrate: tuple-at-a-time engine simulation, sources and
-the four routing approaches of the paper's evaluation."""
+the four routing approaches of the paper's evaluation.  Every router
+runs any (query model × persistence model) workload from
+``repro.queries`` (re-exported here for convenience)."""
+from ..queries import (PersistenceModel, QueryModel, TupleStore,
+                       WorkloadSpec, all_workloads)
 from .baselines import (ReplicatedRouter, RoundInfo, StaticHistoryRouter,
                         StaticUniformRouter, SwarmRouter)
 from .engine import EngineConfig, Metrics, StreamingEngine, run_experiment
@@ -9,5 +13,6 @@ __all__ = [
     "ReplicatedRouter", "StaticUniformRouter", "StaticHistoryRouter",
     "SwarmRouter", "RoundInfo", "EngineConfig", "Metrics", "StreamingEngine",
     "run_experiment", "Hotspot", "ScenarioSource", "TwitterLikeSource",
-    "scenario",
+    "scenario", "QueryModel", "PersistenceModel", "WorkloadSpec",
+    "TupleStore", "all_workloads",
 ]

@@ -7,10 +7,18 @@
 * ``SwarmRouter``           — the live SWARM protocol
 
 All expose the same interface the engine drives:
-  route_points(xy)   → (owner per point, work units per point)
+  route_points(xy)      → (owner per point, work units per point)
+  route_snapshots(rects)→ (owner per probe, work units per probe)
   register_queries(rects)
-  on_round(queries)  → RoundInfo (migration + coordinator traffic)
-  resident_counts()  → queries resident per machine (memory accounting)
+  on_round(queries)     → RoundInfo (migration + coordinator traffic)
+  resident_counts()     → queries resident per machine (memory accounting)
+  resident_data_counts()→ stored tuples per machine (STORED memory)
+  end_tick()            → persistence upkeep (ephemeral window decay)
+
+Every router carries a ``repro.queries.WorkloadSpec`` selecting the
+query-execution model (range / knn / snapshot) and the persistence
+model (ephemeral / stored); the default reproduces the original
+continuous-range-over-ephemeral-tuples behavior exactly.
 """
 from __future__ import annotations
 
@@ -20,6 +28,8 @@ import numpy as np
 
 from ..core import Swarm, balancer, geometry
 from ..core.global_index import GlobalIndex
+from ..queries import QueryModel, TupleStore, WorkloadSpec
+from .sources import QUERY_SIDE
 
 BYTES_PER_QUERY = 64   # moved-query wire size (rect + id + state header)
 
@@ -27,8 +37,9 @@ BYTES_PER_QUERY = 64   # moved-query wire size (rect + id + state header)
 @dataclass
 class RoundInfo:
     wire_bytes: int = 0        # coordinator statistics traffic (Fig 20)
-    migration_bytes: int = 0   # moved continuous queries (§5.2: data stays)
+    migration_bytes: int = 0   # moved queries + (STORED) moved data bytes
     moved_queries: int = 0
+    moved_tuples: int = 0      # stored tuples re-homed this round
     action: str = "none"
 
 
@@ -47,17 +58,35 @@ class _Base:
 
     def __init__(self, num_machines: int, kappa_probe: float = 1.0,
                  kappa_match: float = 1.0, c0: float = 1.0,
-                 query_area: float = 0.02 ** 2, q_cache: int = 1500):
+                 query_area: float | None = None, q_cache: int = 1500,
+                 workload: WorkloadSpec | None = None):
         self.m = num_machines
         self.kappa_probe = kappa_probe
         self.kappa_match = kappa_match
         self.c0 = c0
+        self.workload = workload or WorkloadSpec()
+        if query_area is None:
+            # match-cost coverage must price the resident rects the
+            # workload actually registers: kNN influence regions are
+            # much smaller than campus-scale range queries
+            wl = self.workload
+            side = (wl.knn_side if wl.query_model is QueryModel.KNN
+                    else QUERY_SIDE)
+            query_area = side ** 2
         self.query_area = query_area
         # Index size beyond which probes pay memory pressure (the paper's
         # Replicated "fails … due to high memory overhead" at 16M queries;
         # the soft penalty models cache/RAM thrash before the hard wall).
         self.q_cache = q_cache
         self.query_rects = np.zeros((0, 4), np.float32)
+        self.store: TupleStore | None = None   # set where capacity is known
+
+    def _make_store(self, capacity: int) -> TupleStore | None:
+        wl = self.workload
+        if not wl.uses_store:
+            return None
+        return TupleStore(capacity, bytes_per_tuple=wl.bytes_per_tuple,
+                          retention=1.0 if wl.stored else wl.retention)
 
     def _probe_cost(self, q_resident):
         q = np.asarray(q_resident, np.float64)
@@ -80,23 +109,38 @@ class _Base:
     def on_machine_failed(self, m: int) -> None:
         pass
 
+    def end_tick(self) -> None:
+        """Per-tick persistence upkeep (ephemeral probe-window decay)."""
+        if self.store is not None:
+            self.store.expire()
+
+    def resident_data_counts(self) -> np.ndarray:
+        """Stored tuples per machine (STORED memory accounting)."""
+        return np.zeros(self.m, np.float64)
+
     # subclass hooks
     def _index_queries(self, rects: np.ndarray) -> None: ...
     def route_points(self, xy: np.ndarray): ...
+    def route_snapshots(self, rects: np.ndarray): ...
     def resident_counts(self) -> np.ndarray: ...
 
 
 class ReplicatedRouter(_Base):
     """Queries on every machine; points round-robin (perfectly balanced,
     memory-bound; probes the *full* replicated query index).  A shadow
-    uniform grid estimates local query density for the match term."""
+    uniform grid estimates local query density for the match term and,
+    under the stored/snapshot models, stands in for the scatter targets
+    of stored data — with data resident, 'replicate the queries and
+    spray the tuples' stops being placement-free, which is exactly the
+    stress the persistence models add (CheetahGIS observation)."""
 
     def __init__(self, num_machines: int, grid_size: int = 64, **kw):
         super().__init__(num_machines, **kw)
         self._rr = 0
-        from .sources import QUERY_SIDE  # noqa: F401  (documented default)
         self._shadow = StaticUniformRouter(grid_size, num_machines,
-                                           query_area=self.query_area)
+                                           query_area=self.query_area,
+                                           workload=self.workload)
+        self.store = self._shadow.store
 
     def _index_queries(self, rects: np.ndarray) -> None:
         self._shadow.register_queries(rects)
@@ -105,13 +149,23 @@ class ReplicatedRouter(_Base):
         n = len(xy)
         owners = (self._rr + np.arange(n)) % self.m
         self._rr = int((self._rr + n) % self.m)
-        probe = self._probe_cost(self.q_total)
-        _, match = self._shadow._match_costs(xy)
-        costs = (self.c0 + probe + match).astype(np.float32)
-        return owners.astype(np.int32), costs
+        wl = self.workload
+        probe = self._probe_cost(self.q_total) if wl.spec.tuple_driven else 0.0
+        pids, match = self._shadow._match_costs(xy)
+        costs = (self.c0 + probe + wl.spec.match_factor(wl.k) * match)
+        if self.store is not None:
+            self.store.deposit(pids, self._shadow.index.parts.capacity)
+            costs = costs + wl.store_cost
+        return owners.astype(np.int32), costs.astype(np.float32)
+
+    def route_snapshots(self, rects: np.ndarray):
+        return self._shadow.route_snapshots(rects)
 
     def resident_counts(self) -> np.ndarray:
         return np.full(self.m, self.q_total, np.int64)
+
+    def resident_data_counts(self) -> np.ndarray:
+        return self._shadow.resident_data_counts()
 
 
 class _GridRouter(_Base):
@@ -121,6 +175,7 @@ class _GridRouter(_Base):
         super().__init__(num_machines, **kw)
         self.index = index
         self.qres = np.zeros(index.parts.capacity, np.int64)  # per-partition
+        self.store = self._make_store(index.parts.capacity)
 
     def _ensure_qres(self):
         cap = self.index.parts.capacity
@@ -153,26 +208,63 @@ class _GridRouter(_Base):
             p.r1[live][None, :], p.c1[live][None, :])
         self.qres[live] = hit.sum(0)
 
-    def _match_costs(self, xy: np.ndarray):
-        """(pids, match-term work) for each point."""
+    def _route_cells(self, xy: np.ndarray):
+        row, col = geometry.points_to_cells(xy, self.index.grid_size)
+        return self.index.route_points(row, col)
+
+    def _coverage(self, pids: np.ndarray, area_q: float) -> np.ndarray:
+        """Fraction of partition p a box of area ``area_q`` covers."""
         g = self.index.grid_size
-        row, col = geometry.points_to_cells(xy, g)
-        pids, _ = self.index.route_points(row, col)
         p = self.index.parts
         area = geometry.box_area(p.r0[pids], p.c0[pids], p.r1[pids],
                                  p.c1[pids]).astype(np.float64) / (g * g)
-        density = np.minimum(self.query_area / np.maximum(area, 1e-12), 1.0)
-        match = self.kappa_match * self.qres[pids] * density
+        return np.minimum(area_q / np.maximum(area, 1e-12), 1.0)
+
+    def _match_costs(self, xy: np.ndarray, pids: np.ndarray | None = None):
+        """(pids, match-term work) for each point."""
+        if pids is None:
+            pids, _ = self._route_cells(xy)
+        match = (self.kappa_match * self.qres[pids]
+                 * self._coverage(pids, self.query_area))
         return pids, match
 
     def route_points(self, xy: np.ndarray):
-        row, col = geometry.points_to_cells(xy, self.index.grid_size)
-        pids, owners = self.index.route_points(row, col)
-        q_machine = self.resident_counts()
-        probe = self._probe_cost(q_machine[owners])
-        _, match = self._match_costs(xy)
-        costs = (self.c0 + probe + match).astype(np.float32)
-        return owners.astype(np.int32), costs
+        pids, owners = self._route_cells(xy)
+        wl = self.workload
+        if wl.spec.tuple_driven:
+            probe = self._probe_cost(self.resident_counts()[owners])
+            _, match = self._match_costs(xy, pids)
+            costs = self.c0 + probe + wl.spec.match_factor(wl.k) * match
+        else:
+            costs = np.full(len(xy), self.c0, np.float64)
+        if self.store is not None:
+            self.store.deposit(pids, self.index.parts.capacity)
+            costs = costs + wl.store_cost
+        return owners.astype(np.int32), costs.astype(np.float32)
+
+    def route_snapshots(self, rects: np.ndarray):
+        """One-shot probes over stored tuples: each probe scans the
+        resident data of the partition holding its center (probes are
+        campus-sized; partitions much larger).  Cost = index probe over
+        the machine's stored tuples + per-tuple scan of the covered
+        fraction."""
+        centers = np.stack([(rects[:, 0] + rects[:, 2]) * 0.5,
+                            (rects[:, 1] + rects[:, 3]) * 0.5], axis=1)
+        pids, owners = self._route_cells(centers)
+        return owners.astype(np.int32), self._snapshot_costs(rects, pids,
+                                                             owners)
+
+    def _snapshot_costs(self, rects: np.ndarray, pids: np.ndarray,
+                        owners: np.ndarray) -> np.ndarray:
+        wl = self.workload
+        self.store.ensure(self.index.parts.capacity)
+        d_machine = self.resident_data_counts()
+        probe = self.kappa_probe * np.log2(1.0 + d_machine[owners])
+        area_q = ((rects[:, 2] - rects[:, 0])
+                  * (rects[:, 3] - rects[:, 1])).astype(np.float64)
+        scan = (wl.scan_kappa * self.store.counts[pids]
+                * self._coverage(pids, area_q))
+        return (self.c0 + probe + scan).astype(np.float32)
 
     def resident_counts(self) -> np.ndarray:
         p = self.index.parts
@@ -180,6 +272,11 @@ class _GridRouter(_Base):
         out = np.zeros(self.m, np.int64)
         np.add.at(out, p.owner[live], self.qres[live])
         return out
+
+    def resident_data_counts(self) -> np.ndarray:
+        if self.store is None:
+            return np.zeros(self.m, np.float64)
+        return self.store.by_machine(self.index.parts, self.m)
 
 
 class StaticUniformRouter(_GridRouter):
@@ -217,6 +314,12 @@ class SwarmRouter(_GridRouter):
         self.swarm = Swarm(grid_size, num_machines, beta=beta, decay=decay,
                            use_binary_search=use_binary_search)
         super().__init__(self.swarm.index, num_machines, **kw)
+        if self.store is not None:
+            wl = self.workload
+            self.swarm.attach_store(
+                self.store,
+                data_weight=wl.data_weight if wl.stored else 0.0,
+                bill_migration=wl.stored)
 
     def _index_queries(self, rects: np.ndarray) -> None:
         super()._index_queries(rects)
@@ -226,14 +329,22 @@ class SwarmRouter(_GridRouter):
         self.swarm.ingest_points(xy)  # collectors (N'); then normal routing
         return super().route_points(xy)
 
+    def route_snapshots(self, rects: np.ndarray):
+        # probes feed the Q' collectors so the cost model sees them
+        pids, owners = self.swarm.ingest_snapshot_probes(rects)
+        return (np.asarray(owners, np.int32),
+                self._snapshot_costs(rects, pids, owners))
+
     def on_round(self, tick: int) -> RoundInfo:
         rep = self.swarm.run_round()
-        info = RoundInfo(wire_bytes=rep.wire_bytes, action=rep.action)
+        info = RoundInfo(wire_bytes=rep.wire_bytes, action=rep.action,
+                         moved_tuples=rep.moved_tuples)
+        info.migration_bytes = rep.data_bytes   # STORED data shipped (§5.2)
         if rep.action != "none":
-            # queries move with their partitions; data stays (§5.2)
+            # queries move with their partitions
             moved = int(self.qres[list(rep.moved_pids)].sum())
             info.moved_queries = moved
-            info.migration_bytes = moved * BYTES_PER_QUERY
+            info.migration_bytes += moved * BYTES_PER_QUERY
             self.reindex_all_queries()
         return info
 
@@ -264,5 +375,5 @@ def force_rebalance_round(sw: Swarm):
     r_s = cost_model.total_rate(reports)
     rep = RoundReport(sw.round_no, balancer.REBALANCE, r_s)
     sw._rebalance(reports, r_s, rep)
-    sw.reports.append(rep)
+    sw._finish_round(rep)
     return rep

@@ -12,6 +12,14 @@ Metrics per tick: units of work (= processed tuples × Q_total, §6.1),
 mean execution latency, per-machine utilization, network bytes.
 Machine failures (crash-stop) can be injected to exercise the
 fault-tolerance path.
+
+Query-execution / data-persistence models (repro.queries): the engine
+reads ``router.workload`` each tick.  Continuous models (range, knn)
+register ``source.query_arrivals`` as resident queries; the snapshot
+model instead injects ``source.snapshot_arrivals`` as one-shot probe
+work items (their count enters the tick's units-of-work factor in place
+of growth in Q_total).  STORED persistence adds a resident-tuple memory
+check and per-tick retention upkeep (``router.end_tick``).
 """
 from __future__ import annotations
 
@@ -29,6 +37,7 @@ class EngineConfig:
     cap_units: float = 4.0e5        # work units per machine per tick
     lambda_max: float = 6.0e3       # injected tuples/tick ceiling (source rate)
     mem_queries: int = 50_000       # resident-query capacity per machine
+    mem_tuples: float = 1.0e6       # stored-tuple capacity per machine
     bp_high: float = 2.0            # queue > bp_high·cap ⇒ backpressure
     bp_dec: float = 0.6
     bp_inc: float = 0.04            # additive recovery, fraction of λmax
@@ -45,6 +54,9 @@ class Metrics:
     utilization: list = field(default_factory=list)   # (M,) per tick
     wire_bytes: list = field(default_factory=list)
     migration_bytes: list = field(default_factory=list)
+    moved_tuples: list = field(default_factory=list)
+    snapshots: list = field(default_factory=list)     # one-shot probes/tick
+    resident_tuples: list = field(default_factory=list)  # max per machine
     injected: list = field(default_factory=list)
     infeasible: bool = False
 
@@ -90,14 +102,33 @@ class StreamingEngine:
     def step(self) -> None:
         cfg, mtr = self.cfg, self.metrics
         t = self.tick_no
-        # 1. new continuous queries (hotspot bursts)
-        new_q = self.source.query_arrivals(t)
-        if len(new_q):
-            self.router.register_queries(new_q)
-        # 2. memory feasibility (Fig 11: Replicated dies at high |Q|)
+        wl = self.router.workload
+        # 1. query arrivals: continuous models register resident queries
+        #    (hotspot bursts); the snapshot model injects one-shot probe
+        #    work items instead.
+        n_snap = 0
+        if wl.spec.snapshot:
+            probes = self.source.snapshot_arrivals(t, wl.snapshot_rate,
+                                                   wl.snapshot_side)
+            n_snap = len(probes)
+            if n_snap:
+                owners, costs = self.router.route_snapshots(probes)
+                np.add.at(self.queue_units, owners, costs.astype(np.float64))
+                np.add.at(self.queue_tuples, owners, 1.0)
+        else:
+            new_q = self.source.query_arrivals(t)
+            if len(new_q):
+                self.router.register_queries(new_q)
+        # 2. memory feasibility (Fig 11: Replicated dies at high |Q|;
+        #    STORED adds the resident-data wall)
         resident = self.router.resident_counts()
         if resident.max(initial=0) > cfg.mem_queries:
             mtr.infeasible = True
+        d_max = 0.0
+        if wl.stored:
+            d_max = float(self.router.resident_data_counts().max(initial=0))
+            if d_max > cfg.mem_tuples:
+                mtr.infeasible = True
         # 3. inject tuples (backpressure-throttled)
         lam = 0.0 if mtr.infeasible else min(cfg.lambda_max, self.lam_bp)
         n = int(lam)
@@ -136,15 +167,22 @@ class StreamingEngine:
                 # installing moved queries costs work on the receiver
                 tgt = int(np.argmin(self.queue_units + (~self.alive) * 1e18))
                 self.queue_units[tgt] += info.moved_queries * cfg.migration_unit_cost
-        # 8. record
+        # 8. persistence upkeep (ephemeral probe-window decay)
+        self.router.end_tick()
+        # 9. record.  The units-of-work factor is the query load served:
+        # resident queries for continuous models plus this tick's
+        # one-shot probes for the snapshot model.
         q_total = self.router.q_total
-        mtr.units_of_work.append(float(w) * q_total)
+        mtr.units_of_work.append(float(w) * (q_total + n_snap))
         mtr.throughput.append(float(w))
         mtr.latency.append(latency)
         mtr.q_total.append(q_total)
         mtr.utilization.append(processed_units / np.maximum(cfg.cap_units, 1e-9))
         mtr.wire_bytes.append(info.wire_bytes)
         mtr.migration_bytes.append(info.migration_bytes)
+        mtr.moved_tuples.append(info.moved_tuples)
+        mtr.snapshots.append(n_snap)
+        mtr.resident_tuples.append(d_max)
         mtr.injected.append(n)
         self.tick_no += 1
 
@@ -157,6 +195,6 @@ def run_experiment(router: _Base, source: ScenarioSource, *, ticks: int,
                    preload_queries: int, config: EngineConfig | None = None,
                    seed: int = 0) -> Metrics:
     eng = StreamingEngine(router, source, config, seed)
-    if preload_queries > 0:
-        eng.preload_queries(source.base.sample_queries(preload_queries))
+    if preload_queries > 0 and router.workload.spec.continuous:
+        eng.preload_queries(source.sample_queries(preload_queries))
     return eng.run(ticks)

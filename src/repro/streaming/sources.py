@@ -117,10 +117,19 @@ class Hotspot:
 
 @dataclass
 class ScenarioSource:
-    """Background + hotspots, driving one experiment timeline."""
+    """Background + hotspots, driving one experiment timeline.
+
+    ``query_side`` sets the rectangle side of every continuous query the
+    scenario emits (range queries use the campus-scale default; the kNN
+    model routes by a smaller influence region around the focal point).
+    Snapshot probes are emitted by ``snapshot_arrivals`` and follow the
+    *data* distribution — people ask about where things are happening —
+    so probe hotspots track data hotspots, which is what makes
+    stored-data workloads stress the balancer."""
 
     base: TwitterLikeSource
     hotspots: list[Hotspot] = field(default_factory=list)
+    query_side: float = QUERY_SIDE
 
     def sample_points(self, n: int, tick: int) -> np.ndarray:
         rng = self.base.rng
@@ -137,11 +146,26 @@ class ScenarioSource:
         return np.concatenate(parts, axis=0)
 
     def query_arrivals(self, tick: int) -> np.ndarray:
-        rects = [h.burst_queries(self.base.rng, tick) for h in self.hotspots]
+        rects = [h.burst_queries(self.base.rng, tick, side=self.query_side)
+                 for h in self.hotspots]
         rects = [r for r in rects if len(r)]
         if not rects:
             return np.zeros((0, 4), np.float32)
         return np.concatenate(rects, axis=0)
+
+    def sample_queries(self, n: int, tick: int = 0) -> np.ndarray:
+        """Preload queries at this scenario's query side."""
+        return self.base.sample_queries(n, side=self.query_side, tick=tick)
+
+    def snapshot_arrivals(self, tick: int, rate: int,
+                          side: float) -> np.ndarray:
+        """One-shot probe rectangles for the SNAPSHOT query model."""
+        if rate <= 0:
+            return np.zeros((0, 4), np.float32)
+        foci = self.sample_points(int(rate), tick)
+        half = side / 2
+        return np.clip(np.concatenate([foci - half, foci + half], axis=1),
+                       0.0, 0.999).astype(np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -150,7 +174,8 @@ class ScenarioSource:
 # ---------------------------------------------------------------------------
 
 def scenario(name: str, seed: int = 0, horizon: int = 240,
-             peak: float = 0.4, query_burst: int = 2000) -> ScenarioSource:
+             peak: float = 0.4, query_burst: int = 2000,
+             query_side: float = QUERY_SIDE) -> ScenarioSource:
     base = TwitterLikeSource(seed=seed)
     lo, hi = (0.05, 0.05), (0.80, 0.80)  # lower-left / upper-right corners
     span = (horizon // 3, horizon // 3)  # hotspot occupies the middle third
@@ -178,4 +203,4 @@ def scenario(name: str, seed: int = 0, horizon: int = 240,
         hs = []
     else:
         raise ValueError(f"unknown scenario {name!r}")
-    return ScenarioSource(base, hs)
+    return ScenarioSource(base, hs, query_side=query_side)

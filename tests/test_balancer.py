@@ -1,6 +1,8 @@
 """Tests for the decision FSM, Algorithm 3 and the split search."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # dev extra (pyproject.toml)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import balancer as B

@@ -88,17 +88,23 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-mesh = jax.make_mesh((2,4), ("data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+import sys; sys.path.insert(0, "src")
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2,4), ("data","model"))
+def flops(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return cost["flops"]
 def f(x, w): return x @ w
 xs = jax.ShapeDtypeStruct((256, 256), jnp.float32)
 ws = jax.ShapeDtypeStruct((256, 256), jnp.float32)
-full = jax.jit(f).lower(xs, ws).compile().cost_analysis()["flops"]
+full = flops(jax.jit(f).lower(xs, ws).compile())
 with mesh:
-    shard = jax.jit(f, in_shardings=(NamedSharding(mesh, P("data", None)),
+    shard = flops(jax.jit(f, in_shardings=(NamedSharding(mesh, P("data", None)),
                                      NamedSharding(mesh, P(None, "model"))),
                     out_shardings=NamedSharding(mesh, P("data", "model"))
-                    ).lower(xs, ws).compile().cost_analysis()["flops"]
+                    ).lower(xs, ws).compile())
 ratio = full / shard
 assert 7.0 < ratio < 9.0, ratio
 print("OK", ratio)

@@ -1,6 +1,9 @@
 """Tests for the global grid index: kd-initialization, routing and
 Algorithm 1's partition-skipping walk."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # dev extra (pyproject.toml)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.global_index import GlobalIndex

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.knn_match import knn_match, knn_match_ref
 from repro.kernels.moe_histogram import moe_histogram, moe_histogram_ref
 from repro.kernels.spatial_match import spatial_match, spatial_match_ref
 from repro.kernels.stats_update import close_round, close_round_ref
@@ -36,6 +37,31 @@ def test_spatial_match_boundary_inclusive():
                          [0.51, 0.51, 0.6, 0.6]], jnp.float32)
     pc, qc = spatial_match(pts, rects, interpret=True)
     assert int(pc[0]) == 2 and qc.tolist() == [1, 1, 0]
+
+
+# ---------------------------------------------------------------------------
+# knn_match
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,q,k", [(128, 128, 8), (257, 100, 8),
+                                   (16, 16, 16), (640, 384, 3)])
+def test_knn_match_sweep(n, q, k):
+    pts = jnp.asarray(rng.uniform(0, 1, (n, 2)), jnp.float32)
+    foci = jnp.asarray(rng.uniform(0, 1, (q, 2)), jnp.float32)
+    out = knn_match(pts, foci, k=k, interpret=True)
+    ref = knn_match_ref(pts, foci, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_knn_match_duplicate_points():
+    """Ties: a point at the focal location counted as many times as it
+    appears (top-k over the multiset)."""
+    pts = jnp.asarray([[0.5, 0.5]] * 3 + [[0.9, 0.9]], jnp.float32)
+    foci = jnp.asarray([[0.5, 0.5]], jnp.float32)
+    out = np.asarray(knn_match(pts, foci, k=4, interpret=True))
+    np.testing.assert_allclose(out[0, :3], 0.0, atol=1e-7)
+    np.testing.assert_allclose(out[0, 3], 0.32, rtol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,209 @@
+"""Multi-model query subsystem: registry, persistence store, stored-mode
+migration accounting, kNN kernel parity, and the end-to-end
+{range, knn, snapshot} × {ephemeral, stored} matrix."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.knn_match import knn_match, knn_match_ref
+from repro.queries import (PersistenceModel, QueryModel, TupleStore,
+                           WorkloadSpec, all_workloads, get_query_model)
+from repro.streaming import (EngineConfig, ReplicatedRouter,
+                             StaticHistoryRouter, StaticUniformRouter,
+                             SwarmRouter, TwitterLikeSource, run_experiment,
+                             scenario)
+from repro.streaming.baselines import force_rebalance_round
+
+G, M = 64, 8
+rng = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_all_models():
+    for qm in QueryModel:
+        spec = get_query_model(qm)
+        assert spec.name == qm
+    with pytest.raises(ValueError):
+        get_query_model("spatio-temporal-join")
+    assert len(all_workloads()) == 6
+
+
+def test_match_factor_semantics():
+    assert get_query_model("range").match_factor(8) == 1.0
+    assert get_query_model("knn").match_factor(8) == pytest.approx(
+        np.log2(9.0))
+    assert get_query_model("snapshot").match_factor(8) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# knn_match kernel vs oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,q,k", [(128, 128, 8), (300, 77, 8),
+                                   (513, 256, 4), (64, 10, 16),
+                                   (8, 5, 8), (1000, 300, 12)])
+def test_knn_match_parity(n, q, k):
+    pts = jnp.asarray(rng.uniform(0, 1, (n, 2)), jnp.float32)
+    foci = jnp.asarray(rng.uniform(0, 1, (q, 2)), jnp.float32)
+    out = np.asarray(knn_match(pts, foci, k=k, interpret=True))
+    ref = np.asarray(knn_match_ref(pts, foci, k))
+    assert out.shape == (q, k)
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-7)
+    # ascending order per query
+    assert (np.diff(out, axis=1) >= 0).all()
+
+
+def test_knn_match_exact_neighbors():
+    pts = jnp.asarray([[0.0, 0.0], [0.3, 0.0], [1.0, 1.0]], jnp.float32)
+    foci = jnp.asarray([[0.0, 0.0]], jnp.float32)
+    out = np.asarray(knn_match(pts, foci, k=2, interpret=True))
+    np.testing.assert_allclose(out[0], [0.0, 0.09], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# TupleStore
+# ---------------------------------------------------------------------------
+
+def test_store_deposit_migrate_split():
+    st = TupleStore(4, bytes_per_tuple=24)
+    st.deposit(np.array([0, 0, 1, 2]), capacity=4)
+    assert st.total() == 4
+    assert st.migrate(0, 3) == 2
+    assert st.counts[0] == 0 and st.counts[3] == 2
+    st.counts[1] = 10
+    assert st.split(1, 4, 5, frac_lo=0.3) == 10   # grows capacity
+    np.testing.assert_allclose([st.counts[4], st.counts[5]], [3.0, 7.0])
+
+
+def test_store_retention_window():
+    st = TupleStore(2, retention=0.5)
+    st.deposit(np.zeros(64, np.int64))
+    for _ in range(10):
+        st.expire()
+    assert st.total() == 0.0   # sub-half counts are flushed
+
+
+# ---------------------------------------------------------------------------
+# stored-mode migration-byte accounting
+# ---------------------------------------------------------------------------
+
+def test_stored_migration_ships_data_bytes():
+    wl = WorkloadSpec(query_model=QueryModel.RANGE,
+                      persistence=PersistenceModel.STORED)
+    r = SwarmRouter(G, M, beta=4, workload=wl)
+    base = TwitterLikeSource(seed=3)
+    r.register_queries(base.sample_queries(500))
+    moved_total = 0
+    for _ in range(6):
+        r.route_points(base.sample_points(4000))
+        rep = force_rebalance_round(r.swarm)
+        rep2 = r.swarm.reports[-1]
+        assert rep is rep2
+        moved_total += rep.moved_tuples
+    assert moved_total > 0, "rebalancing never re-homed stored tuples"
+    # conservation: every deposited tuple is still resident somewhere
+    live = r.index.parts.live_ids()
+    assert r.store.counts[live].sum() == pytest.approx(r.store.total())
+    assert r.store.total() == pytest.approx(6 * 4000, rel=1e-6)
+    # bytes billed on the engine-facing RoundInfo path too
+    rep = r.swarm.run_round()
+    assert rep.data_bytes == rep.moved_tuples * wl.bytes_per_tuple
+
+
+def test_merge_conserves_stored_tuples():
+    """Background merges (§4.3.1) must re-home store counts too."""
+    wl = WorkloadSpec(query_model=QueryModel.RANGE,
+                      persistence=PersistenceModel.STORED)
+    r = SwarmRouter(G, 2, beta=4, workload=wl)  # 2 half-grid partitions
+    base = TwitterLikeSource(seed=5)
+    r.route_points(base.sample_points(5000))
+    total = r.store.total()
+    sw = r.swarm
+    a, b = map(int, sw.index.parts.live_ids())
+    # same-owner adjacent rectangles → merge_adjacent must fire
+    sw.index.apply_changes([sw._move_partition(b, int(sw.index.parts.owner[a]))])
+    assert sw.merge_adjacent() == 1
+    live = r.index.parts.live_ids()
+    assert r.store.counts[live].sum() == pytest.approx(total)
+    assert r.store.total() == pytest.approx(total)
+
+
+def test_ephemeral_never_bills_data_bytes():
+    wl = WorkloadSpec(query_model=QueryModel.SNAPSHOT,
+                      persistence=PersistenceModel.EPHEMERAL)
+    r = SwarmRouter(G, M, beta=4, workload=wl)
+    base = TwitterLikeSource(seed=3)
+    for _ in range(4):
+        r.route_points(base.sample_points(2000))
+        rep = force_rebalance_round(r.swarm)
+        assert rep.data_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the full workload matrix through the engine
+# ---------------------------------------------------------------------------
+
+CFG = EngineConfig(num_machines=M, cap_units=8e3, lambda_max=8000,
+                   mem_queries=100_000)
+
+
+def _run(router, wl, ticks=60, seed=0):
+    side = wl.knn_side if wl.query_model is QueryModel.KNN else 0.02
+    src = scenario("uniform_normal", seed=seed, horizon=ticks,
+                   query_burst=500, query_side=side)
+    m = run_experiment(router, src, ticks=ticks, preload_queries=2000,
+                       config=CFG, seed=seed)
+    return m.asarrays(), m
+
+
+def _history_router(wl):
+    base = TwitterLikeSource(seed=1)
+    side = wl.knn_side if wl.query_model is QueryModel.KNN else 0.02
+    return StaticHistoryRouter(G, M, base.sample_points(4000),
+                               base.sample_queries(2000, side=side),
+                               rounds=20, workload=wl)
+
+
+@pytest.mark.parametrize("wl", all_workloads(),
+                         ids=lambda wl: wl.label)
+def test_all_routers_run_every_workload(wl):
+    """Smoke: every router × every workload progresses and does work."""
+    for mk in (lambda: ReplicatedRouter(M, G, workload=wl),
+               lambda: StaticUniformRouter(G, M, workload=wl)):
+        a, m = _run(mk(), wl, ticks=12)
+        assert a["throughput"].sum() > 0
+        assert a["units_of_work"].sum() > 0
+        if wl.spec.snapshot:
+            assert a["snapshots"].sum() > 0
+
+
+@pytest.mark.parametrize("wl", all_workloads(),
+                         ids=lambda wl: wl.label)
+def test_swarm_beats_history_in_every_workload(wl):
+    """The acceptance matrix: SWARM does more units of work than the
+    history-balanced static grid under every query-execution ×
+    data-persistence combination (hotspot scenario, Fig-12 style)."""
+    a_h, m_h = _run(_history_router(wl), wl)
+    a_s, m_s = _run(SwarmRouter(G, M, beta=8, workload=wl), wl)
+    u_s, u_h = a_s["units_of_work"].mean(), a_h["units_of_work"].mean()
+    assert u_s > 1.2 * u_h, (wl.label, u_s, u_h)
+    if wl.stored:
+        # stored mode must actually ship data at least once
+        assert a_s["moved_tuples"].sum() > 0
+        assert a_s["migration_bytes"].sum() > 0
+
+
+def test_stored_memory_wall():
+    """STORED persistence adds a resident-data memory wall the engine
+    enforces (the CheetahGIS-style stress ephemeral never sees)."""
+    wl = WorkloadSpec(query_model=QueryModel.SNAPSHOT,
+                      persistence=PersistenceModel.STORED)
+    tiny = EngineConfig(num_machines=M, cap_units=8e3, lambda_max=8000,
+                        mem_queries=100_000, mem_tuples=5_000)
+    src = scenario("none", horizon=30)
+    m = run_experiment(StaticUniformRouter(G, M, workload=wl), src,
+                       ticks=30, preload_queries=0, config=tiny)
+    assert m.infeasible

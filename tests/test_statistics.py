@@ -5,6 +5,8 @@ hypothesis drives random workloads and sub-ranges against brute force.
 """
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # dev extra (pyproject.toml)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import statistics as S
