@@ -5,24 +5,30 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import CFG, SYSTEMS, emit, run_system
+from repro.streaming import run_suite
+
+from .common import CFG, SYSTEMS, emit, experiment
 
 QUERY_COUNTS = (1000, 2000, 4000, 8000, 16000)
+TICKS = 60
 
 
 def run() -> dict:
     out = {}
-    for q in QUERY_COUNTS:
-        for name in SYSTEMS:
-            m, wall = run_system(name, "none", ticks=60, preload=q,
-                                 query_burst=0)
-            a = m.asarrays()
-            uow = float(a["units_of_work"].mean()) if not m.infeasible else 0.0
-            lat = float(np.mean(a["latency"])) if not m.infeasible else np.inf
-            out[(name, q)] = (uow, lat, m.infeasible)
-            emit(f"fig11a/{name}/q={q}", wall / 60 * 1e6,
-                 f"uow={uow:.3e} infeasible={m.infeasible}")
-            emit(f"fig11b/{name}/q={q}", wall / 60 * 1e6, f"lat={lat:.3f}")
+    cells = {(name, q): experiment(name, "none", ticks=TICKS, preload=q,
+                                   query_burst=0, cfg=CFG)
+             for q in QUERY_COUNTS for name in SYSTEMS}
+    results = run_suite(cells.values())
+    for (name, q), exp in cells.items():
+        res = results[exp.label]
+        m, a = res.metrics, res.asarrays()
+        uow = float(a["units_of_work"].mean()) if not m.infeasible else 0.0
+        lat = float(np.mean(a["latency"])) if not m.infeasible else np.inf
+        out[(name, q)] = (uow, lat, m.infeasible)
+        emit(f"fig11a/{name}/q={q}", res.wall_s / TICKS * 1e6,
+             f"uow={uow:.3e} infeasible={m.infeasible}")
+        emit(f"fig11b/{name}/q={q}", res.wall_s / TICKS * 1e6,
+             f"lat={lat:.3f}")
     # headline: SWARM vs history grid over |Q| where both are feasible
     ratios = [out[("swarm", q)][0] / out[("static_history", q)][0]
               for q in QUERY_COUNTS

@@ -1,60 +1,55 @@
 """Shared benchmark scaffolding: the four systems of §6 at simulation
-scale, plus CSV emission helpers."""
+scale, driven through the declarative experiment suite
+(``repro.streaming.experiments``), plus CSV emission helpers.
+
+The active data plane is process-global (set by ``benchmarks.run
+--data-plane``); every experiment a section builds picks it up.
+"""
 from __future__ import annotations
 
-import time
+from repro.queries import WorkloadSpec
+from repro.streaming import (EngineConfig, Experiment, RouterSpec,
+                             ScenarioSpec, run, workload_query_side)
 
-import numpy as np
-
-from repro.queries import QueryModel, WorkloadSpec
-from repro.streaming import (EngineConfig, ReplicatedRouter,
-                             StaticHistoryRouter, StaticUniformRouter,
-                             SwarmRouter, TwitterLikeSource, run_experiment,
-                             scenario)
-from repro.streaming.sources import QUERY_SIDE
+__all__ = ["G", "M", "CFG", "SYSTEMS", "emit", "experiment", "run_system",
+           "set_data_plane", "data_plane", "workload_query_side"]
 
 G, M = 64, 8
 CFG = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20_000,
                    mem_queries=12_000)
 SYSTEMS = ("replicated", "static_uniform", "static_history", "swarm")
 
-
-def workload_query_side(workload: WorkloadSpec | None) -> float:
-    return (workload.knn_side
-            if workload is not None and workload.query_model is QueryModel.KNN
-            else QUERY_SIDE)
+_DATA_PLANE = "numpy"
 
 
-def make_router(name: str, *, beta: int = 8, seed: int = 1,
-                workload: WorkloadSpec | None = None):
-    kw = {"workload": workload} if workload is not None else {}
-    if name == "replicated":
-        return ReplicatedRouter(M, G, **kw)
-    if name == "static_uniform":
-        return StaticUniformRouter(G, M, **kw)
-    if name == "static_history":
-        base = TwitterLikeSource(seed=seed)
-        # keep the original RNG order (points, then queries), and balance
-        # the frozen plan for the query footprint it will actually serve
-        hist_pts = base.sample_points(4000)
-        hist_q = base.sample_queries(2000, side=workload_query_side(workload))
-        return StaticHistoryRouter(G, M, hist_pts, hist_q, rounds=20, **kw)
-    if name == "swarm":
-        return SwarmRouter(G, M, beta=beta, **kw)
-    raise ValueError(name)
+def set_data_plane(name: str) -> None:
+    global _DATA_PLANE
+    _DATA_PLANE = name
 
 
-def run_system(name: str, scen: str, *, ticks: int = 90, preload: int = 3000,
+def data_plane() -> str:
+    return _DATA_PLANE
+
+
+def experiment(name: str, scen: str, *, ticks: int = 90, preload: int = 3000,
                query_burst: int = 500, cfg: EngineConfig = CFG, seed: int = 0,
-               workload: WorkloadSpec | None = None):
-    src = scenario(scen, seed=seed, horizon=ticks, query_burst=query_burst,
-                   query_side=workload_query_side(workload))
-    t0 = time.perf_counter()
-    metrics = run_experiment(make_router(name, workload=workload), src,
-                             ticks=ticks, preload_queries=preload, config=cfg,
-                             seed=seed)
-    wall = time.perf_counter() - t0
-    return metrics, wall
+               beta: int = 8,
+               workload: WorkloadSpec | None = None) -> Experiment:
+    """One benchmark cell as an Experiment spec.  ``history_seed=1``
+    keeps the pre-redesign history sample (drawn from a fixed seed
+    regardless of the run seed)."""
+    return Experiment(
+        router=RouterSpec(name, grid_size=G, beta=beta, history_seed=1),
+        scenario=ScenarioSpec(scen, ticks=ticks, preload_queries=preload,
+                              query_burst=query_burst),
+        workload=workload or WorkloadSpec(),
+        engine=cfg, seed=seed, data_plane=_DATA_PLANE)
+
+
+def run_system(name: str, scen: str, **kw):
+    """Run one cell; returns (metrics, wall seconds)."""
+    res = run(experiment(name, scen, **kw))
+    return res.metrics, res.wall_s
 
 
 def emit(name: str, us_per_call: float, derived) -> None:

@@ -1,0 +1,94 @@
+"""Data-plane throughput: NumPy reference vs jit-fused JAX plane on
+large-batch routing (cell gathers + probe/match cost terms) and
+snapshot-probe pricing.
+
+Each cell times ``plane.tuple_costs`` / ``plane.probe_costs`` on a
+realistic router state (64×64 grid, 8 machines, skewed resident
+queries).  JAX timings exclude the one-off jit compile (warmup) but
+include host↔device transfer and the numpy round-trip — the number the
+engine actually sees.  Non-smoke runs record ``BENCH_dataplane.json``
+at the repo root, the artifact behind the "JAX plane beats NumPy on
+large batches" claim.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.global_index import GlobalIndex
+from repro.streaming import get_plane
+from repro.streaming.planes import CostParams
+
+from .common import emit
+
+G, M = 64, 8
+OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_dataplane.json")
+
+
+def _state(rng):
+    index = GlobalIndex.initialize(G, M)
+    p = index.parts
+    n = p.n_alloc
+    from repro.core import geometry
+    area_frac = (geometry.box_area(p.r0[:n], p.c0[:n], p.r1[:n], p.c1[:n])
+                 .astype(np.float64) / (G * G))
+    qres = rng.integers(0, 800, n).astype(np.int64)
+    q_machine = rng.integers(100, 4000, M).astype(np.int64)
+    store = rng.integers(0, 5000, n).astype(np.float64)
+    d_machine = rng.integers(0, 40000, M).astype(np.float64)
+    params = CostParams(c0=1.0, kappa_probe=1.0, kappa_match=1.0,
+                        q_cache=1500.0, query_area=4e-4, match_factor=1.0,
+                        tuple_driven=True, store_cost=0.5, scan_kappa=0.05)
+    return index, area_frac, qres, q_machine, store, d_machine, params
+
+
+def _time(fn, repeats: int) -> float:
+    fn()                       # warmup (jit compile for the JAX plane)
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False) -> dict:
+    sizes = (1 << 12, 1 << 14) if smoke else (1 << 14, 1 << 17, 1 << 20)
+    repeats = 3 if smoke else 5
+    rng = np.random.default_rng(0)
+    index, area_frac, qres, q_machine, store, d_machine, params = _state(rng)
+    grid, owner = index.cell_to_partition, index.parts.owner
+    rows = []
+    for n in sizes:
+        xy = rng.uniform(0, 1, (n, 2)).astype(np.float32)
+        probes = np.concatenate([c := rng.uniform(0, 0.95, (n // 4, 2)),
+                                 c + 0.02], axis=1).astype(np.float32)
+        row = {"batch": n}
+        for name in ("numpy", "jax"):
+            plane = get_plane(name)
+            t_pts = _time(lambda: plane.tuple_costs(
+                xy, grid, owner, qres, q_machine, area_frac, params), repeats)
+            t_prb = _time(lambda: plane.probe_costs(
+                probes, grid, owner, store, d_machine, area_frac, params),
+                repeats)
+            row[f"{name}_tuple_ms"] = t_pts * 1e3
+            row[f"{name}_probe_ms"] = t_prb * 1e3
+            emit(f"dataplane/{name}/tuples/n={n}", t_pts / n * 1e6,
+                 f"batch_ms={t_pts * 1e3:.3f}")
+            emit(f"dataplane/{name}/probes/n={n // 4}", t_prb / (n // 4) * 1e6,
+                 f"batch_ms={t_prb * 1e3:.3f}")
+        row["tuple_speedup"] = row["numpy_tuple_ms"] / row["jax_tuple_ms"]
+        row["probe_speedup"] = row["numpy_probe_ms"] / row["jax_probe_ms"]
+        emit(f"dataplane/summary/n={n}", 0.0,
+             f"jax_vs_numpy_tuples={row['tuple_speedup']:.2f}x "
+             f"probes={row['probe_speedup']:.2f}x")
+        rows.append(row)
+    result = {"grid": G, "machines": M, "smoke": smoke, "results": rows}
+    if not smoke:
+        with open(OUT_JSON, "w") as f:
+            json.dump(result, f, indent=1)
+    return result

@@ -1,10 +1,13 @@
 """Figs 12–16: the five hotspot scenarios.  Reports mean Units of Work
-over the full timeline and inside the hotspot window, per system."""
+over the full timeline and inside the hotspot window, per system.  One
+``run_suite`` drives the whole (scenario × system) matrix."""
 from __future__ import annotations
 
 import numpy as np
 
-from .common import SYSTEMS, emit, run_system
+from repro.streaming import run_suite
+
+from .common import SYSTEMS, emit, experiment
 
 SCENARIOS = {
     "fig12_uniform_normal": "uniform_normal",
@@ -19,13 +22,16 @@ TICKS = 90
 def run() -> dict:
     out = {}
     lo, hi = TICKS // 3, 2 * TICKS // 3   # hotspot occupies middle third
-    for fig, scen in SCENARIOS.items():
-        for name in SYSTEMS:
-            m, wall = run_system(name, scen, ticks=TICKS)
-            uow = np.asarray(m.units_of_work, float)
-            out[(fig, name)] = uow
-            emit(f"{fig}/{name}", wall / TICKS * 1e6,
-                 f"uow_mean={uow.mean():.3e} uow_hotspot={uow[lo:hi].mean():.3e}")
+    cells = {(fig, name): experiment(name, scen, ticks=TICKS)
+             for fig, scen in SCENARIOS.items() for name in SYSTEMS}
+    results = run_suite(cells.values())
+    for (fig, name), exp in cells.items():
+        res = results[exp.label]
+        uow = np.asarray(res.metrics.units_of_work, float)
+        out[(fig, name)] = uow
+        emit(f"{fig}/{name}", res.wall_s / TICKS * 1e6,
+             f"uow_mean={uow.mean():.3e} uow_hotspot={uow[lo:hi].mean():.3e}")
+    for fig in SCENARIOS:
         ratio = (out[(fig, 'swarm')][lo:hi].mean()
                  / max(out[(fig, 'static_history')][lo:hi].mean(), 1e-9))
         emit(f"{fig}/summary", 0.0, f"swarm_vs_history_hotspot={ratio:.2f}x")

@@ -1,6 +1,6 @@
 """Mixed-workload benchmark: the {range, knn, snapshot} ×
 {ephemeral, stored} matrix (repro.queries) on a Fig-12-style hotspot,
-all four systems.
+all four systems, driven as one declarative suite.
 
 Emits one CSV line per (workload, system) with mean units of work over
 the full timeline and inside the hotspot window, plus a summary ratio
@@ -17,9 +17,9 @@ import os
 import numpy as np
 
 from repro.queries import all_workloads
-from repro.streaming import EngineConfig
+from repro.streaming import EngineConfig, run_suite
 
-from .common import M, SYSTEMS, emit, run_system
+from .common import M, SYSTEMS, data_plane, emit, experiment
 
 # Tighter capacity than the range-only benchmarks: the persistence
 # models add deposit/scan work and the point is the behavior at the
@@ -34,39 +34,43 @@ OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
 def run(smoke: bool = False) -> dict:
     ticks = 30 if smoke else 90
     lo, hi = ticks // 3, 2 * ticks // 3
-    rows = []
-    by_key = {}
+    cells = {(wl.label, name): experiment(name, SCEN, ticks=ticks,
+                                          preload=2000, cfg=CFG, workload=wl)
+             for wl in all_workloads() for name in SYSTEMS}
+    results = run_suite(cells.values())
+    rows, by_key = [], {}
+    for (wl_label, name), exp in cells.items():
+        res = results[exp.label]
+        a = res.asarrays()
+        uow = np.asarray(a["units_of_work"], float)
+        rec = {
+            "workload": wl_label,
+            "system": name,
+            "uow_mean": float(uow.mean()),
+            "uow_hotspot": float(uow[lo:hi].mean()),
+            "throughput_mean": float(a["throughput"].mean()),
+            "latency_mean": float(a["latency"].mean()),
+            "migration_bytes": int(a["migration_bytes"].sum()),
+            "moved_tuples": int(a["moved_tuples"].sum()),
+            "infeasible": bool(res.metrics.infeasible),
+            "us_per_tick": res.wall_s / ticks * 1e6,
+        }
+        rows.append(rec)
+        by_key[(wl_label, name)] = rec
+        emit(f"queries/{wl_label}/{name}", rec["us_per_tick"],
+             f"uow_mean={rec['uow_mean']:.3e} "
+             f"uow_hotspot={rec['uow_hotspot']:.3e}")
     for wl in all_workloads():
-        for name in SYSTEMS:
-            m, wall = run_system(name, SCEN, ticks=ticks, preload=2000,
-                                 cfg=CFG, workload=wl)
-            a = m.asarrays()
-            uow = np.asarray(a["units_of_work"], float)
-            rec = {
-                "workload": wl.label,
-                "system": name,
-                "uow_mean": float(uow.mean()),
-                "uow_hotspot": float(uow[lo:hi].mean()),
-                "throughput_mean": float(a["throughput"].mean()),
-                "latency_mean": float(a["latency"].mean()),
-                "migration_bytes": int(a["migration_bytes"].sum()),
-                "moved_tuples": int(a["moved_tuples"].sum()),
-                "infeasible": bool(m.infeasible),
-                "us_per_tick": wall / ticks * 1e6,
-            }
-            rows.append(rec)
-            by_key[(wl.label, name)] = rec
-            emit(f"queries/{wl.label}/{name}", rec["us_per_tick"],
-                 f"uow_mean={rec['uow_mean']:.3e} "
-                 f"uow_hotspot={rec['uow_hotspot']:.3e}")
         ratio = (by_key[(wl.label, "swarm")]["uow_mean"]
                  / max(by_key[(wl.label, "static_history")]["uow_mean"],
                        1e-9))
         emit(f"queries/{wl.label}/summary", 0.0,
              f"swarm_vs_history={ratio:.2f}x")
     result = {"scenario": SCEN, "ticks": ticks, "smoke": smoke,
-              "results": rows}
-    if not smoke:   # never clobber the recorded artifact with smoke runs
+              "data_plane": data_plane(), "results": rows}
+    # the recorded artifact is the reference-plane record; never clobber
+    # it with smoke runs or with a later plane of a multi-plane sweep
+    if not smoke and data_plane() == "numpy":
         with open(OUT_JSON, "w") as f:
             json.dump(result, f, indent=1)
     return result

@@ -9,22 +9,30 @@ Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
   kernels  Pallas-oracle throughput           (benchmarks/kernels.py)
   roofline per-cell three-term analysis       (benchmarks/roofline.py)
   queries  query×persistence workload matrix  (benchmarks/queries_mixed.py)
+  dataplane NumPy vs JAX plane throughput     (benchmarks/dataplane.py)
+
+``--data-plane`` selects the routing data plane for the experiment
+sections; a comma list (e.g. ``--data-plane=numpy,jax``) repeats the
+chosen sections once per plane.
 """
 import argparse
 import inspect
-import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: capability,hotspots,utilization,"
-                         "overheads,stats_network,kernels,roofline,queries")
+                         "overheads,stats_network,kernels,roofline,queries,"
+                         "dataplane")
     ap.add_argument("--smoke", action="store_true",
                     help="short timelines (CI sanity run)")
+    ap.add_argument("--data-plane", default="numpy",
+                    help="routing data plane(s), comma list: numpy,jax")
     args = ap.parse_args()
-    from . import (capability, hotspots, kernels, overheads, queries_mixed,
-                   roofline, stats_network, utilization)
+    from . import (capability, common, dataplane, hotspots, kernels,
+                   overheads, queries_mixed, roofline, stats_network,
+                   utilization)
     sections = {
         "capability": capability.run,
         "hotspots": hotspots.run,
@@ -34,15 +42,26 @@ def main() -> None:
         "kernels": kernels.run,
         "roofline": roofline.run,
         "queries": queries_mixed.run,
+        "dataplane": dataplane.run,
     }
+    # sections whose results depend on the routing data plane; the rest
+    # run once regardless of how many planes were requested
+    plane_sensitive = {"capability", "hotspots", "utilization", "queries"}
     chosen = (args.only.split(",") if args.only else list(sections))
+    planes = args.data_plane.split(",")
     print("name,us_per_call,derived")
-    for name in chosen:
-        fn = sections[name]
-        if args.smoke and "smoke" in inspect.signature(fn).parameters:
-            fn(smoke=True)
-        else:
-            fn()
+    for i, plane in enumerate(planes):
+        common.set_data_plane(plane)
+        if len(planes) > 1:
+            print(f"# data plane: {plane}")
+        for name in chosen:
+            if i > 0 and name not in plane_sensitive:
+                continue
+            fn = sections[name]
+            if args.smoke and "smoke" in inspect.signature(fn).parameters:
+                fn(smoke=True)
+            else:
+                fn()
 
 
 if __name__ == "__main__":

@@ -4,17 +4,24 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import SYSTEMS, emit, run_system
+from repro.streaming import run_suite
+
+from .common import SYSTEMS, emit, experiment
+
+TICKS = 90
 
 
 def run() -> dict:
     out = {}
-    for name in SYSTEMS:
-        m, wall = run_system(name, "uniform_normal", ticks=90)
-        u = np.stack(m.utilization)          # (ticks, M)
+    cells = {name: experiment(name, "uniform_normal", ticks=TICKS)
+             for name in SYSTEMS}
+    results = run_suite(cells.values())
+    for name, exp in cells.items():
+        res = results[exp.label]
+        u = np.stack(res.metrics.utilization)          # (ticks, M)
         per_machine = u.mean(0)
         out[name] = per_machine
-        emit(f"fig17a/{name}", wall / 90 * 1e6,
+        emit(f"fig17a/{name}", res.wall_s / TICKS * 1e6,
              f"util_mean={u.mean():.3f} util_min={per_machine.min():.3f} "
              f"util_max={per_machine.max():.3f} "
              f"gap={per_machine.max() - per_machine.min():.3f}")

@@ -1,49 +1,46 @@
 """End-to-end location-aware publish/subscribe (paper §2/§6).
 
 Streams Twitter-like geotagged points against continuous range queries
-under a moving hotspot, comparing all four systems and printing a
-Units-of-Work timeline.  The tuple-vs-query matching itself runs through
-the spatial_match oracle (the Pallas kernel's jnp reference).
+under a moving hotspot, comparing all four systems via the declarative
+experiment suite and printing a Units-of-Work timeline.  The
+tuple-vs-query matching itself runs through the data plane's
+``match_counts`` surface (the ``repro.kernels.spatial_match`` package:
+Pallas-compiled on TPU, its jnp reference elsewhere).
 
-Run:  PYTHONPATH=src python examples/streaming_pubsub.py [--ticks 90]
+Run:  PYTHONPATH=src python examples/streaming_pubsub.py
+      [--ticks 90] [--data-plane jax]
 """
 import argparse
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.spatial_match import spatial_match_ref
-from repro.streaming import (EngineConfig, ReplicatedRouter,
-                             StaticHistoryRouter, StaticUniformRouter,
-                             SwarmRouter, TwitterLikeSource, run_experiment,
-                             scenario)
+from repro.streaming import (EngineConfig, Experiment, RouterSpec,
+                             ScenarioSpec, get_plane, run_suite, scenario)
 
 G, M = 64, 8
+SYSTEMS = ("replicated", "static_uniform", "static_history", "swarm")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ticks", type=int, default=90)
+    ap.add_argument("--data-plane", default="numpy",
+                    choices=("numpy", "jax"))
     args = ap.parse_args()
     cfg = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20_000,
                        mem_queries=100_000)
-
-    def mk(name):
-        if name == "swarm":
-            return SwarmRouter(G, M, beta=8)
-        if name == "static_uniform":
-            return StaticUniformRouter(G, M)
-        if name == "replicated":
-            return ReplicatedRouter(M, G)
-        base = TwitterLikeSource(seed=1)
-        return StaticHistoryRouter(G, M, base.sample_points(4000),
-                                   base.sample_queries(2000), rounds=20)
+    scen = ScenarioSpec("uniform_normal", ticks=args.ticks,
+                        preload_queries=3000, query_burst=500)
+    exps = {name: Experiment(router=RouterSpec(name, grid_size=G,
+                                               history_seed=1),
+                             scenario=scen, engine=cfg,
+                             data_plane=args.data_plane)
+            for name in SYSTEMS}
+    suite = run_suite(exps.values())
 
     results = {}
-    for name in ("replicated", "static_uniform", "static_history", "swarm"):
-        src = scenario("uniform_normal", horizon=args.ticks, query_burst=500)
-        m = run_experiment(mk(name), src, ticks=args.ticks,
-                           preload_queries=3000, config=cfg)
+    for name, exp in exps.items():
+        m = suite[exp.label].metrics
         results[name] = np.asarray(m.units_of_work)
         print(f"{name:16s} mean UoW = {results[name].mean():.3e}  "
               f"mean latency = {np.mean(m.latency):.3f} ticks")
@@ -62,12 +59,14 @@ def main() -> None:
             line[bar_s] = "#"
         print(f"t={t:3d} |{''.join(line)}|")
 
-    # one real pub/sub matching tick through the kernel oracle
+    # one real pub/sub matching tick through the data plane's kernel surface
+    plane = get_plane(args.data_plane)
     src = scenario("none", horizon=1)
-    pts = jnp.asarray(src.sample_points(2000, 0))
-    rects = jnp.asarray(src.base.sample_queries(500))
-    pc, qc = spatial_match_ref(pts, rects)
-    print(f"\nspatial match over one tick: {int(pc.sum())} deliveries to "
+    pts = src.sample_points(2000, 0)
+    rects = src.base.sample_queries(500)
+    pc, qc = plane.match_counts(pts, rects)
+    print(f"\nspatial match over one tick ({plane.name} plane): "
+          f"{int(pc.sum())} deliveries to "
           f"{int((qc > 0).sum())} of 500 subscriptions")
 
 

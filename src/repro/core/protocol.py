@@ -29,11 +29,17 @@ class RoundReport:
     m_h: int = -1
     m_l: int = -1
     action: str = "none"              # none | subset | split
-    moved_pids: tuple = ()
-    new_pids: tuple = ()
+    moved_pids: tuple[int, ...] = ()
+    new_pids: tuple[int, ...] = ()
     wire_bytes: int = 0               # Coordinator traffic this round (Fig 20)
     moved_tuples: int = 0             # stored tuples re-homed by plan changes
     data_bytes: int = 0               # …billed as wire bytes (STORED mode)
+
+    @property
+    def did_rebalance(self) -> bool:
+        """Whether this round changed the plan (typed consumption point
+        for ``streaming.api.RoundOutcome.from_report``)."""
+        return self.action != "none"
 
 
 class Swarm:
@@ -244,7 +250,11 @@ class Swarm:
         self._sync_capacity()
         S.move_partition_stats(self.stats, pid, new)
         if self.store is not None:
-            self._moved_tuples += self.store.migrate(pid, new)
+            moved = self.store.migrate(pid, new)
+            # only STORED persistence ships durable data; the ephemeral
+            # probe window re-homes counts without crossing the wire
+            if self.bill_data_migration:
+                self._moved_tuples += moved
         return new
 
     def _split_partition(self, plan: balancer.SplitPlan, m_h: int, m_l: int):
@@ -269,9 +279,12 @@ class Swarm:
             else:
                 frac_lo = (plan.sp - c0 + 1) / max(c1 - c0 + 1, 1)
             total = self.store.split(pid, lo, hi, frac_lo)
-            # only the side handed to m_L actually changes machine
-            moved_frac = frac_lo if plan.move_lo else 1.0 - frac_lo
-            self._moved_tuples += int(round(total * moved_frac))
+            # only the side handed to m_L actually changes machine, and
+            # only STORED persistence ships it (ephemeral counts re-home
+            # without crossing the wire)
+            if self.bill_data_migration:
+                moved_frac = frac_lo if plan.move_lo else 1.0 - frac_lo
+                self._moved_tuples += int(round(total * moved_frac))
         p.retire(pid)
         return lo, hi
 

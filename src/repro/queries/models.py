@@ -93,8 +93,16 @@ def register_query_model(spec: QueryModelSpec) -> QueryModelSpec:
 
 
 def get_query_model(name: str | QueryModel) -> QueryModelSpec:
+    # direct registry hit first so models registered under custom names
+    # resolve; fall back to enum coercion for the built-in spellings
+    key = str(name)
+    if key not in _REGISTRY:
+        try:
+            key = str(QueryModel(name))
+        except ValueError:
+            pass
     try:
-        return _REGISTRY[str(QueryModel(name))]
+        return _REGISTRY[key]
     except KeyError:
         raise ValueError(f"unknown query model {name!r}; "
                          f"registered: {sorted(_REGISTRY)}") from None

@@ -1,18 +1,41 @@
-"""Streaming substrate: tuple-at-a-time engine simulation, sources and
-the four routing approaches of the paper's evaluation.  Every router
-runs any (query model × persistence model) workload from
-``repro.queries`` (re-exported here for convenience)."""
+"""Streaming substrate: the typed event/decision API (``api``), the
+pluggable data planes (``planes``), the engine simulation, sources, the
+four routing approaches of the paper's evaluation and the declarative
+experiment suite (``experiments``).  Every router runs any (query model
+× persistence model) workload from ``repro.queries`` (re-exported here
+for convenience)."""
 from ..queries import (PersistenceModel, QueryModel, TupleStore,
                        WorkloadSpec, all_workloads)
+from .api import (EventBatch, EventStream, MachineFailure, MemoryUsage,
+                  ProbeBatch, QueryBatch, Router, RoundOutcome,
+                  RoutingDecision, TupleBatch)
 from .baselines import (ReplicatedRouter, RoundInfo, StaticHistoryRouter,
                         StaticUniformRouter, SwarmRouter)
 from .engine import EngineConfig, Metrics, StreamingEngine, run_experiment
+from .experiments import (Experiment, ExperimentResult, RouterSpec,
+                          ScenarioSpec, run, run_suite, sweep,
+                          workload_query_side)
+from .planes import DataPlane, JaxPlane, NumpyPlane, available_planes, \
+    get_plane
 from .sources import Hotspot, ScenarioSource, TwitterLikeSource, scenario
 
 __all__ = [
+    # events / decisions
+    "TupleBatch", "QueryBatch", "ProbeBatch", "MachineFailure", "EventBatch",
+    "RoutingDecision", "RoundOutcome", "MemoryUsage", "Router", "EventStream",
+    # data planes
+    "DataPlane", "NumpyPlane", "JaxPlane", "get_plane", "available_planes",
+    # routers
     "ReplicatedRouter", "StaticUniformRouter", "StaticHistoryRouter",
-    "SwarmRouter", "RoundInfo", "EngineConfig", "Metrics", "StreamingEngine",
-    "run_experiment", "Hotspot", "ScenarioSource", "TwitterLikeSource",
-    "scenario", "QueryModel", "PersistenceModel", "WorkloadSpec",
-    "TupleStore", "all_workloads",
+    "SwarmRouter", "RoundInfo",
+    # engine
+    "EngineConfig", "Metrics", "StreamingEngine", "run_experiment",
+    # experiment suite
+    "Experiment", "ExperimentResult", "RouterSpec", "ScenarioSpec",
+    "run", "run_suite", "sweep", "workload_query_side",
+    # sources
+    "Hotspot", "ScenarioSource", "TwitterLikeSource", "scenario",
+    # workloads
+    "QueryModel", "PersistenceModel", "WorkloadSpec", "TupleStore",
+    "all_workloads",
 ]

@@ -1,0 +1,214 @@
+"""Typed event/decision API of the streaming runtime.
+
+The engine↔router boundary is a small set of frozen event batches and
+one formal entry point::
+
+    Router.ingest(batch: EventBatch) -> RoutingDecision | None
+
+* ``TupleBatch``     — stream tuples to route (the data plane hot path).
+* ``QueryBatch``     — continuous queries to register as resident state.
+* ``ProbeBatch``     — one-shot snapshot probes over stored tuples.
+* ``MachineFailure`` — crash-stop notification for one executor.
+
+``ingest`` answers with a :class:`RoutingDecision` (owner machine, work
+cost and partition per item) for work-carrying batches, and ``None`` for
+pure state changes (query registration, failures).  Per-round control
+traffic is typed as :class:`RoundOutcome`; executor memory accounting as
+:class:`MemoryUsage`.  The engine contains **no** per-query-model
+branches: which events a workload emits is decided here, by
+:class:`EventStream`, from the ``repro.queries`` registry — adding a new
+query/persistence model means registering a spec and emitting the right
+batches, not editing the engine.
+
+Migration note: ``route_points`` / ``route_snapshots`` /
+``register_queries`` survive as router-internal methods, but the
+supported entry point is ``ingest`` — see README "Event-stream API".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Protocol, Union, runtime_checkable
+
+import numpy as np
+
+from ..core.protocol import RoundReport
+from ..queries import WorkloadSpec
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .sources import ScenarioSource
+
+
+# ---------------------------------------------------------------------------
+# Events
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TupleBatch:
+    """A batch of stream tuples: ``xy`` is (N, 2) float32 in [0, 1)²."""
+
+    xy: np.ndarray
+    tick: int = 0
+
+    def __len__(self) -> int:
+        return len(self.xy)
+
+
+@dataclass(frozen=True)
+class QueryBatch:
+    """Continuous queries to register: ``rects`` is (Q, 4) float32
+    (x0, y0, x1, y1)."""
+
+    rects: np.ndarray
+    tick: int = 0
+
+    def __len__(self) -> int:
+        return len(self.rects)
+
+
+@dataclass(frozen=True)
+class ProbeBatch:
+    """One-shot snapshot probes: ``rects`` is (Q, 4) float32."""
+
+    rects: np.ndarray
+    tick: int = 0
+
+    def __len__(self) -> int:
+        return len(self.rects)
+
+
+@dataclass(frozen=True)
+class MachineFailure:
+    """Crash-stop failure of executor ``machine``."""
+
+    machine: int
+    tick: int = 0
+
+
+EventBatch = Union[TupleBatch, QueryBatch, ProbeBatch, MachineFailure]
+
+
+# ---------------------------------------------------------------------------
+# Decisions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RoutingDecision:
+    """Per-item routing answer for a work-carrying batch.
+
+    ``owners``  — (N,) int32, executor machine per item.
+    ``costs``   — (N,) float32, work units per item (the engine enqueues
+                  these against machine capacity).
+    ``pids``    — (N,) int32, global-index partition per item (−1 where
+                  no partition applies, e.g. round-robin routing still
+                  carries the shadow-grid pid used for accounting).
+    """
+
+    owners: np.ndarray
+    costs: np.ndarray
+    pids: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.owners)
+
+
+@dataclass(frozen=True)
+class RoundOutcome:
+    """Typed result of one load-balancing round (replaces the old
+    mutable ``RoundInfo``)."""
+
+    wire_bytes: int = 0        # coordinator statistics traffic (Fig 20)
+    migration_bytes: int = 0   # moved queries + (STORED) moved data bytes
+    moved_queries: int = 0
+    moved_tuples: int = 0      # stored tuples re-homed this round
+    action: str = "none"
+
+    @classmethod
+    def from_report(cls, rep: RoundReport, *, moved_queries: int = 0,
+                    bytes_per_query: int = 0) -> "RoundOutcome":
+        """Consume a typed ``core.protocol.RoundReport``: fold the
+        coordinator wire bytes, STORED data shipment and the caller's
+        moved-query count into one engine-facing outcome."""
+        return cls(
+            wire_bytes=rep.wire_bytes,
+            migration_bytes=rep.data_bytes + moved_queries * bytes_per_query,
+            moved_queries=moved_queries,
+            moved_tuples=rep.moved_tuples,
+            action=rep.action,
+        )
+
+
+NO_ROUND = RoundOutcome()
+
+
+@dataclass(frozen=True)
+class MemoryUsage:
+    """Per-machine executor memory accounting.  ``tuples`` is all zeros
+    unless the workload's persistence model makes resident data count
+    against executor memory (STORED)."""
+
+    queries: np.ndarray
+    tuples: np.ndarray
+
+
+# ---------------------------------------------------------------------------
+# The Router protocol
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Router(Protocol):
+    """What the engine requires of a routing approach.  All four systems
+    of the paper's evaluation (replicated, static-uniform,
+    static-history, SWARM) implement this via ``baselines._Base``."""
+
+    workload: WorkloadSpec
+
+    @property
+    def q_total(self) -> int: ...
+
+    def ingest(self, batch: EventBatch) -> RoutingDecision | None: ...
+
+    def on_round(self, tick: int) -> RoundOutcome: ...
+
+    def end_tick(self) -> None: ...
+
+    def memory_usage(self) -> MemoryUsage: ...
+
+
+# ---------------------------------------------------------------------------
+# Source → event adaptation
+# ---------------------------------------------------------------------------
+
+class EventStream:
+    """Adapts a ``ScenarioSource`` + ``WorkloadSpec`` into typed event
+    batches.  This is where the query-model dispatch lives: continuous
+    models emit ``QueryBatch`` arrivals, the snapshot model emits
+    ``ProbeBatch`` arrivals — the engine just ingests whatever comes."""
+
+    def __init__(self, source: "ScenarioSource", workload: WorkloadSpec):
+        self.source = source
+        self.workload = workload
+
+    def arrivals(self, tick: int) -> list[EventBatch]:
+        """Query/probe arrivals for this tick (tuple injection is
+        rate-controlled by the engine via :meth:`tuples`)."""
+        wl = self.workload
+        events: list[EventBatch] = []
+        if wl.spec.snapshot:
+            rects = self.source.snapshot_arrivals(tick, wl.snapshot_rate,
+                                                  wl.snapshot_side)
+            if len(rects):
+                events.append(ProbeBatch(rects, tick))
+        else:
+            rects = self.source.query_arrivals(tick)
+            if len(rects):
+                events.append(QueryBatch(rects, tick))
+        return events
+
+    def tuples(self, n: int, tick: int) -> TupleBatch:
+        return TupleBatch(self.source.sample_points(n, tick), tick)
+
+    def preload(self, n: int) -> QueryBatch | None:
+        """Initial resident queries — only continuous models have any."""
+        if n <= 0 or not self.workload.spec.continuous:
+            return None
+        return QueryBatch(self.source.sample_queries(n), 0)

@@ -6,41 +6,46 @@
                               over a limited history sample, then frozen
 * ``SwarmRouter``           — the live SWARM protocol
 
-All expose the same interface the engine drives:
-  route_points(xy)      → (owner per point, work units per point)
-  route_snapshots(rects)→ (owner per probe, work units per probe)
-  register_queries(rects)
-  on_round(queries)     → RoundInfo (migration + coordinator traffic)
-  resident_counts()     → queries resident per machine (memory accounting)
-  resident_data_counts()→ stored tuples per machine (STORED memory)
-  end_tick()            → persistence upkeep (ephemeral window decay)
+All four implement the typed event/decision API of ``streaming.api``:
+the engine drives exactly one entry point,
+
+    ingest(batch: EventBatch) -> RoutingDecision | None
+
+plus the per-round ``on_round(tick) -> RoundOutcome``, per-tick
+``end_tick()`` upkeep and ``memory_usage()`` accounting.  The batched
+routing/cost math itself is delegated to a pluggable
+``streaming.planes.DataPlane`` (NumPy reference or jit-fused JAX) —
+routers own only the mutable state: indexes, resident counts, tuple
+stores and SWARM's collectors.
 
 Every router carries a ``repro.queries.WorkloadSpec`` selecting the
 query-execution model (range / knn / snapshot) and the persistence
 model (ephemeral / stored); the default reproduces the original
 continuous-range-over-ephemeral-tuples behavior exactly.
+
+Migration note: the pre-redesign ``route_points(xy)`` /
+``route_snapshots(rects)`` duck-typed entry points survive as thin
+wrappers returning ``(owners, costs)``; new code should ingest
+``TupleBatch`` / ``ProbeBatch`` events instead.
 """
 from __future__ import annotations
-
-from dataclasses import dataclass
 
 import numpy as np
 
 from ..core import Swarm, balancer, geometry
 from ..core.global_index import GlobalIndex
 from ..queries import QueryModel, TupleStore, WorkloadSpec
+from .api import (NO_ROUND, EventBatch, MachineFailure, MemoryUsage,
+                  ProbeBatch, QueryBatch, RoundOutcome, RoutingDecision,
+                  TupleBatch)
+from .planes import CostParams, DataPlane, get_plane
 from .sources import QUERY_SIDE
 
 BYTES_PER_QUERY = 64   # moved-query wire size (rect + id + state header)
 
-
-@dataclass
-class RoundInfo:
-    wire_bytes: int = 0        # coordinator statistics traffic (Fig 20)
-    migration_bytes: int = 0   # moved queries + (STORED) moved data bytes
-    moved_queries: int = 0
-    moved_tuples: int = 0      # stored tuples re-homed this round
-    action: str = "none"
+# Legacy alias: the mutable RoundInfo of the pre-redesign API is now the
+# frozen, typed RoundOutcome.
+RoundInfo = RoundOutcome
 
 
 class _Base:
@@ -59,12 +64,14 @@ class _Base:
     def __init__(self, num_machines: int, kappa_probe: float = 1.0,
                  kappa_match: float = 1.0, c0: float = 1.0,
                  query_area: float | None = None, q_cache: int = 1500,
-                 workload: WorkloadSpec | None = None):
+                 workload: WorkloadSpec | None = None,
+                 data_plane: DataPlane | str | None = None):
         self.m = num_machines
         self.kappa_probe = kappa_probe
         self.kappa_match = kappa_match
         self.c0 = c0
         self.workload = workload or WorkloadSpec()
+        self.plane = get_plane(data_plane)
         if query_area is None:
             # match-cost coverage must price the resident rects the
             # workload actually registers: kNN influence regions are
@@ -80,6 +87,34 @@ class _Base:
         self.q_cache = q_cache
         self.query_rects = np.zeros((0, 4), np.float32)
         self.store: TupleStore | None = None   # set where capacity is known
+
+    # -- the typed entry point --------------------------------------------
+    def ingest(self, batch: EventBatch) -> RoutingDecision | None:
+        """Route one event batch.  Work-carrying batches (tuples,
+        probes) return a :class:`RoutingDecision`; state changes (query
+        registration, machine failures) return ``None``."""
+        if isinstance(batch, TupleBatch):
+            return self._route_tuples(batch.xy)
+        if isinstance(batch, QueryBatch):
+            self.register_queries(batch.rects)
+            return None
+        if isinstance(batch, ProbeBatch):
+            return self._route_probes(batch.rects)
+        if isinstance(batch, MachineFailure):
+            self.on_machine_failed(batch.machine)
+            return None
+        raise TypeError(f"unknown event batch type {type(batch).__name__}")
+
+    def _cost_params(self) -> CostParams:
+        wl = self.workload
+        return CostParams(
+            c0=float(self.c0), kappa_probe=float(self.kappa_probe),
+            kappa_match=float(self.kappa_match), q_cache=float(self.q_cache),
+            query_area=float(self.query_area),
+            match_factor=wl.spec.match_factor(wl.k),
+            tuple_driven=wl.spec.tuple_driven,
+            store_cost=float(wl.store_cost) if self.store is not None else 0.0,
+            scan_kappa=float(wl.scan_kappa))
 
     def _make_store(self, capacity: int) -> TupleStore | None:
         wl = self.workload
@@ -103,8 +138,8 @@ class _Base:
     def q_total(self) -> int:
         return len(self.query_rects)
 
-    def on_round(self, tick: int) -> RoundInfo:
-        return RoundInfo()
+    def on_round(self, tick: int) -> RoundOutcome:
+        return NO_ROUND
 
     def on_machine_failed(self, m: int) -> None:
         pass
@@ -118,10 +153,27 @@ class _Base:
         """Stored tuples per machine (STORED memory accounting)."""
         return np.zeros(self.m, np.float64)
 
+    def memory_usage(self) -> MemoryUsage:
+        """Executor memory: resident queries always count; resident
+        tuples only under STORED persistence (the ephemeral probe window
+        is bounded by retention decay, not by executor RAM)."""
+        tuples = (self.resident_data_counts() if self.workload.stored
+                  else np.zeros(self.m, np.float64))
+        return MemoryUsage(queries=self.resident_counts(), tuples=tuples)
+
+    # -- legacy entry points (see module migration note) -------------------
+    def route_points(self, xy: np.ndarray):
+        d = self._route_tuples(xy)
+        return d.owners, d.costs
+
+    def route_snapshots(self, rects: np.ndarray):
+        d = self._route_probes(rects)
+        return d.owners, d.costs
+
     # subclass hooks
     def _index_queries(self, rects: np.ndarray) -> None: ...
-    def route_points(self, xy: np.ndarray): ...
-    def route_snapshots(self, rects: np.ndarray): ...
+    def _route_tuples(self, xy: np.ndarray) -> RoutingDecision: ...
+    def _route_probes(self, rects: np.ndarray) -> RoutingDecision: ...
     def resident_counts(self) -> np.ndarray: ...
 
 
@@ -139,27 +191,29 @@ class ReplicatedRouter(_Base):
         self._rr = 0
         self._shadow = StaticUniformRouter(grid_size, num_machines,
                                            query_area=self.query_area,
-                                           workload=self.workload)
+                                           workload=self.workload,
+                                           data_plane=self.plane)
         self.store = self._shadow.store
 
     def _index_queries(self, rects: np.ndarray) -> None:
         self._shadow.register_queries(rects)
 
-    def route_points(self, xy: np.ndarray):
+    def _route_tuples(self, xy: np.ndarray) -> RoutingDecision:
         n = len(xy)
-        owners = (self._rr + np.arange(n)) % self.m
+        owners = ((self._rr + np.arange(n)) % self.m).astype(np.int32)
         self._rr = int((self._rr + n) % self.m)
         wl = self.workload
         probe = self._probe_cost(self.q_total) if wl.spec.tuple_driven else 0.0
-        pids, match = self._shadow._match_costs(xy)
+        pids, match = self._shadow._match_terms(xy)
         costs = (self.c0 + probe + wl.spec.match_factor(wl.k) * match)
         if self.store is not None:
             self.store.deposit(pids, self._shadow.index.parts.capacity)
             costs = costs + wl.store_cost
-        return owners.astype(np.int32), costs.astype(np.float32)
+        return RoutingDecision(owners, np.asarray(costs).astype(np.float32),
+                               np.asarray(pids, np.int32))
 
-    def route_snapshots(self, rects: np.ndarray):
-        return self._shadow.route_snapshots(rects)
+    def _route_probes(self, rects: np.ndarray) -> RoutingDecision:
+        return self._shadow._route_probes(rects)
 
     def resident_counts(self) -> np.ndarray:
         return np.full(self.m, self.q_total, np.int64)
@@ -208,63 +262,52 @@ class _GridRouter(_Base):
             p.r1[live][None, :], p.c1[live][None, :])
         self.qres[live] = hit.sum(0)
 
-    def _route_cells(self, xy: np.ndarray):
-        row, col = geometry.points_to_cells(xy, self.index.grid_size)
-        return self.index.route_points(row, col)
-
-    def _coverage(self, pids: np.ndarray, area_q: float) -> np.ndarray:
-        """Fraction of partition p a box of area ``area_q`` covers."""
-        g = self.index.grid_size
+    def _area_frac(self) -> np.ndarray:
+        """Partition area as a fraction of the space, per allocated pid
+        (the coverage denominator of the match/scan terms)."""
         p = self.index.parts
-        area = geometry.box_area(p.r0[pids], p.c0[pids], p.r1[pids],
-                                 p.c1[pids]).astype(np.float64) / (g * g)
-        return np.minimum(area_q / np.maximum(area, 1e-12), 1.0)
+        g = self.index.grid_size
+        n = p.n_alloc
+        return (geometry.box_area(p.r0[:n], p.c0[:n], p.r1[:n], p.c1[:n])
+                .astype(np.float64) / (g * g))
 
-    def _match_costs(self, xy: np.ndarray, pids: np.ndarray | None = None):
-        """(pids, match-term work) for each point."""
-        if pids is None:
-            pids, _ = self._route_cells(xy)
-        match = (self.kappa_match * self.qres[pids]
-                 * self._coverage(pids, self.query_area))
-        return pids, match
+    def _match_terms(self, xy: np.ndarray):
+        """(pids, match-term work) for each point — via the data plane."""
+        self._ensure_qres()
+        return self.plane.match_terms(xy, self.index.cell_to_partition,
+                                      self.qres, self._area_frac(),
+                                      float(self.query_area),
+                                      float(self.kappa_match))
 
-    def route_points(self, xy: np.ndarray):
-        pids, owners = self._route_cells(xy)
-        wl = self.workload
-        if wl.spec.tuple_driven:
-            probe = self._probe_cost(self.resident_counts()[owners])
-            _, match = self._match_costs(xy, pids)
-            costs = self.c0 + probe + wl.spec.match_factor(wl.k) * match
-        else:
-            costs = np.full(len(xy), self.c0, np.float64)
+    def _route_tuples(self, xy: np.ndarray) -> RoutingDecision:
+        self._ensure_qres()
+        pids, owners, costs = self.plane.tuple_costs(
+            xy, self.index.cell_to_partition, self.index.parts.owner,
+            self.qres, self.resident_counts(), self._area_frac(),
+            self._cost_params())
         if self.store is not None:
             self.store.deposit(pids, self.index.parts.capacity)
-            costs = costs + wl.store_cost
-        return owners.astype(np.int32), costs.astype(np.float32)
+        return RoutingDecision(owners, costs, np.asarray(pids, np.int32))
 
-    def route_snapshots(self, rects: np.ndarray):
+    def _route_probes(self, rects: np.ndarray, pids=None,
+                      owners=None) -> RoutingDecision:
         """One-shot probes over stored tuples: each probe scans the
         resident data of the partition holding its center (probes are
         campus-sized; partitions much larger).  Cost = index probe over
         the machine's stored tuples + per-tuple scan of the covered
         fraction."""
-        centers = np.stack([(rects[:, 0] + rects[:, 2]) * 0.5,
-                            (rects[:, 1] + rects[:, 3]) * 0.5], axis=1)
-        pids, owners = self._route_cells(centers)
-        return owners.astype(np.int32), self._snapshot_costs(rects, pids,
-                                                             owners)
-
-    def _snapshot_costs(self, rects: np.ndarray, pids: np.ndarray,
-                        owners: np.ndarray) -> np.ndarray:
-        wl = self.workload
+        if self.store is None:
+            raise ValueError(
+                f"workload {self.workload.label!r} keeps no tuple store for "
+                "snapshot probes to scan; configure the router with a "
+                "WorkloadSpec using QueryModel.SNAPSHOT (or STORED "
+                "persistence) before routing ProbeBatch events")
         self.store.ensure(self.index.parts.capacity)
-        d_machine = self.resident_data_counts()
-        probe = self.kappa_probe * np.log2(1.0 + d_machine[owners])
-        area_q = ((rects[:, 2] - rects[:, 0])
-                  * (rects[:, 3] - rects[:, 1])).astype(np.float64)
-        scan = (wl.scan_kappa * self.store.counts[pids]
-                * self._coverage(pids, area_q))
-        return (self.c0 + probe + scan).astype(np.float32)
+        pids, owners, costs = self.plane.probe_costs(
+            rects, self.index.cell_to_partition, self.index.parts.owner,
+            self.store.counts, self.resident_data_counts(),
+            self._area_frac(), self._cost_params(), pids=pids, owners=owners)
+        return RoutingDecision(owners, costs, np.asarray(pids, np.int32))
 
     def resident_counts(self) -> np.ndarray:
         p = self.index.parts
@@ -306,8 +349,8 @@ class StaticHistoryRouter(_GridRouter):
 
 
 class SwarmRouter(_GridRouter):
-    """The live protocol.  Points/queries also feed SWARM's collectors;
-    every engine round triggers one load-balancing round."""
+    """The live protocol.  Tuple/probe batches also feed SWARM's
+    collectors; every engine round triggers one load-balancing round."""
 
     def __init__(self, grid_size: int, num_machines: int, *, beta: int = 20,
                  decay: float = 0.5, use_binary_search: bool = False, **kw):
@@ -325,28 +368,26 @@ class SwarmRouter(_GridRouter):
         super()._index_queries(rects)
         self.swarm.ingest_queries(rects)
 
-    def route_points(self, xy: np.ndarray):
+    def _route_tuples(self, xy: np.ndarray) -> RoutingDecision:
         self.swarm.ingest_points(xy)  # collectors (N'); then normal routing
-        return super().route_points(xy)
+        return super()._route_tuples(xy)
 
-    def route_snapshots(self, rects: np.ndarray):
+    def _route_probes(self, rects: np.ndarray, pids=None,
+                      owners=None) -> RoutingDecision:
         # probes feed the Q' collectors so the cost model sees them
-        pids, owners = self.swarm.ingest_snapshot_probes(rects)
-        return (np.asarray(owners, np.int32),
-                self._snapshot_costs(rects, pids, owners))
+        if pids is None and self.store is not None:
+            pids, owners = self.swarm.ingest_snapshot_probes(rects)
+        return super()._route_probes(rects, pids=pids, owners=owners)
 
-    def on_round(self, tick: int) -> RoundInfo:
+    def on_round(self, tick: int) -> RoundOutcome:
         rep = self.swarm.run_round()
-        info = RoundInfo(wire_bytes=rep.wire_bytes, action=rep.action,
-                         moved_tuples=rep.moved_tuples)
-        info.migration_bytes = rep.data_bytes   # STORED data shipped (§5.2)
-        if rep.action != "none":
+        moved_queries = 0
+        if rep.did_rebalance:
             # queries move with their partitions
-            moved = int(self.qres[list(rep.moved_pids)].sum())
-            info.moved_queries = moved
-            info.migration_bytes += moved * BYTES_PER_QUERY
+            moved_queries = int(self.qres[list(rep.moved_pids)].sum())
             self.reindex_all_queries()
-        return info
+        return RoundOutcome.from_report(rep, moved_queries=moved_queries,
+                                        bytes_per_query=BYTES_PER_QUERY)
 
     def on_machine_failed(self, m: int) -> None:
         """Crash-stop handling: emergency-move the failed machine's

@@ -10,16 +10,16 @@ slow additive recovery — which produces the sawtooth of Fig 14).
 
 Metrics per tick: units of work (= processed tuples × Q_total, §6.1),
 mean execution latency, per-machine utilization, network bytes.
-Machine failures (crash-stop) can be injected to exercise the
-fault-tolerance path.
+Machine failures (crash-stop) are injected as typed ``MachineFailure``
+events to exercise the fault-tolerance path.
 
-Query-execution / data-persistence models (repro.queries): the engine
-reads ``router.workload`` each tick.  Continuous models (range, knn)
-register ``source.query_arrivals`` as resident queries; the snapshot
-model instead injects ``source.snapshot_arrivals`` as one-shot probe
-work items (their count enters the tick's units-of-work factor in place
-of growth in Q_total).  STORED persistence adds a resident-tuple memory
-check and per-tick retention upkeep (``router.end_tick``).
+The engine is workload-agnostic: it drives the typed event/decision API
+of ``streaming.api`` and contains no per-query-model branches.  Which
+events a tick carries (``QueryBatch`` registrations vs one-shot
+``ProbeBatch`` work) is decided by :class:`~repro.streaming.api.EventStream`
+from the workload's registered query-model spec; persistence shows up
+only through the router's ``memory_usage()`` accounting and ``end_tick``
+upkeep.
 """
 from __future__ import annotations
 
@@ -27,7 +27,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .baselines import RoundInfo, _Base
+from .api import (NO_ROUND, EventStream, MachineFailure, ProbeBatch,
+                  QueryBatch, Router, RoutingDecision)
 from .sources import ScenarioSource
 
 
@@ -66,12 +67,12 @@ class Metrics:
 
 
 class StreamingEngine:
-    def __init__(self, router: _Base, source: ScenarioSource,
-                 config: EngineConfig | None = None, seed: int = 0):
+    def __init__(self, router: Router, source: ScenarioSource,
+                 config: EngineConfig | None = None):
         self.router = router
         self.source = source
+        self.stream = EventStream(source, router.workload)
         self.cfg = config or EngineConfig()
-        self.rng = np.random.default_rng(seed)
         m = self.cfg.num_machines
         self.queue_units = np.zeros(m)
         self.queue_tuples = np.zeros(m)
@@ -82,16 +83,21 @@ class StreamingEngine:
 
     # ------------------------------------------------------------------
     def preload_queries(self, rects: np.ndarray) -> None:
-        self.router.register_queries(rects)
+        self.router.ingest(QueryBatch(rects, self.tick_no))
 
     def fail_machine(self, m: int) -> None:
         self.alive[m] = False
-        self.router.on_machine_failed(m)
+        self.router.ingest(MachineFailure(m, self.tick_no))
         # queued work on a crashed machine is re-queued via the router's
         # new plan on subsequent ticks; drop its local queue (data loss is
         # bounded by one tick of tuples — matches at-most-once spouts).
         self.queue_units[m] = 0.0
         self.queue_tuples[m] = 0.0
+
+    def _enqueue(self, decision: RoutingDecision) -> None:
+        np.add.at(self.queue_units, decision.owners,
+                  decision.costs.astype(np.float64))
+        np.add.at(self.queue_tuples, decision.owners, 1.0)
 
     # ------------------------------------------------------------------
     def run(self, ticks: int) -> Metrics:
@@ -102,41 +108,28 @@ class StreamingEngine:
     def step(self) -> None:
         cfg, mtr = self.cfg, self.metrics
         t = self.tick_no
-        wl = self.router.workload
-        # 1. query arrivals: continuous models register resident queries
-        #    (hotspot bursts); the snapshot model injects one-shot probe
-        #    work items instead.
+        # 1. query/probe arrivals — whatever events the workload's
+        #    EventStream emits for this tick.
         n_snap = 0
-        if wl.spec.snapshot:
-            probes = self.source.snapshot_arrivals(t, wl.snapshot_rate,
-                                                   wl.snapshot_side)
-            n_snap = len(probes)
-            if n_snap:
-                owners, costs = self.router.route_snapshots(probes)
-                np.add.at(self.queue_units, owners, costs.astype(np.float64))
-                np.add.at(self.queue_tuples, owners, 1.0)
-        else:
-            new_q = self.source.query_arrivals(t)
-            if len(new_q):
-                self.router.register_queries(new_q)
+        for event in self.stream.arrivals(t):
+            decision = self.router.ingest(event)
+            if decision is not None:
+                self._enqueue(decision)
+                if isinstance(event, ProbeBatch):
+                    n_snap += len(decision)
         # 2. memory feasibility (Fig 11: Replicated dies at high |Q|;
-        #    STORED adds the resident-data wall)
-        resident = self.router.resident_counts()
-        if resident.max(initial=0) > cfg.mem_queries:
+        #    STORED persistence adds the resident-data wall)
+        mem = self.router.memory_usage()
+        if mem.queries.max(initial=0) > cfg.mem_queries:
             mtr.infeasible = True
-        d_max = 0.0
-        if wl.stored:
-            d_max = float(self.router.resident_data_counts().max(initial=0))
-            if d_max > cfg.mem_tuples:
-                mtr.infeasible = True
+        d_max = float(mem.tuples.max(initial=0))
+        if d_max > cfg.mem_tuples:
+            mtr.infeasible = True
         # 3. inject tuples (backpressure-throttled)
         lam = 0.0 if mtr.infeasible else min(cfg.lambda_max, self.lam_bp)
         n = int(lam)
         if n > 0:
-            pts = self.source.sample_points(n, t)
-            owners, costs = self.router.route_points(pts)
-            np.add.at(self.queue_units, owners, costs.astype(np.float64))
-            np.add.at(self.queue_tuples, owners, 1.0)
+            self._enqueue(self.router.ingest(self.stream.tuples(n, t)))
         # 4. process
         cap = cfg.cap_units * self.alive
         processed_units = np.minimum(self.queue_units, cap)
@@ -159,28 +152,30 @@ class StreamingEngine:
         else:
             self.lam_bp = min(self.lam_bp + cfg.bp_inc * cfg.lambda_max,
                               cfg.lambda_max)
-        # 7. load-balancing round
-        info = RoundInfo()
-        if t % cfg.round_every == 0:
-            info = self.router.on_round(t)
-            if info.moved_queries:
+        # 7. load-balancing round — at the end of each full interval
+        #    (never at tick 0, when no load has accumulated yet)
+        outcome = NO_ROUND
+        if t > 0 and t % cfg.round_every == 0:
+            outcome = self.router.on_round(t)
+            if outcome.moved_queries:
                 # installing moved queries costs work on the receiver
                 tgt = int(np.argmin(self.queue_units + (~self.alive) * 1e18))
-                self.queue_units[tgt] += info.moved_queries * cfg.migration_unit_cost
+                self.queue_units[tgt] += (outcome.moved_queries
+                                          * cfg.migration_unit_cost)
         # 8. persistence upkeep (ephemeral probe-window decay)
         self.router.end_tick()
         # 9. record.  The units-of-work factor is the query load served:
         # resident queries for continuous models plus this tick's
-        # one-shot probes for the snapshot model.
+        # one-shot probes.
         q_total = self.router.q_total
         mtr.units_of_work.append(float(w) * (q_total + n_snap))
         mtr.throughput.append(float(w))
         mtr.latency.append(latency)
         mtr.q_total.append(q_total)
         mtr.utilization.append(processed_units / np.maximum(cfg.cap_units, 1e-9))
-        mtr.wire_bytes.append(info.wire_bytes)
-        mtr.migration_bytes.append(info.migration_bytes)
-        mtr.moved_tuples.append(info.moved_tuples)
+        mtr.wire_bytes.append(outcome.wire_bytes)
+        mtr.migration_bytes.append(outcome.migration_bytes)
+        mtr.moved_tuples.append(outcome.moved_tuples)
         mtr.snapshots.append(n_snap)
         mtr.resident_tuples.append(d_max)
         mtr.injected.append(n)
@@ -188,13 +183,16 @@ class StreamingEngine:
 
 
 # ---------------------------------------------------------------------------
-# Convenience: run one (router, scenario) experiment end to end.
+# Legacy convenience: run one (router, source) pair end to end.  New code
+# should use ``repro.streaming.experiments`` (Experiment / run_suite),
+# which also threads seeds end-to-end.
 # ---------------------------------------------------------------------------
 
-def run_experiment(router: _Base, source: ScenarioSource, *, ticks: int,
-                   preload_queries: int, config: EngineConfig | None = None,
-                   seed: int = 0) -> Metrics:
-    eng = StreamingEngine(router, source, config, seed)
-    if preload_queries > 0 and router.workload.spec.continuous:
-        eng.preload_queries(source.sample_queries(preload_queries))
+def run_experiment(router: Router, source: ScenarioSource, *, ticks: int,
+                   preload_queries: int,
+                   config: EngineConfig | None = None) -> Metrics:
+    eng = StreamingEngine(router, source, config)
+    preload = eng.stream.preload(preload_queries)
+    if preload is not None:
+        router.ingest(preload)
     return eng.run(ticks)

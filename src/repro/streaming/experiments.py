@@ -1,0 +1,190 @@
+"""Declarative experiment suite: router spec × scenario spec ×
+workload × engine config, seeds threaded end-to-end.
+
+The pre-redesign ``run_experiment(router, source, ...)`` took fully
+constructed objects, and its ``seed=`` parameter silently did nothing
+(the engine kept a never-used rng while the source sampled from its
+construction-time seed).  An :class:`Experiment` is instead a frozen
+*description*: :func:`run` builds the source, the router (with its data
+plane) and the engine from the spec, deriving every rng from
+``Experiment.seed`` — same seed, same metrics, bit for bit.
+
+``run_suite``/``sweep`` drive the benchmark matrix and tests uniformly::
+
+    results = run_suite(sweep(
+        routers=[RouterSpec("swarm"), RouterSpec("static_history")],
+        scenarios=[ScenarioSpec("uniform_normal", ticks=90)],
+        workloads=all_workloads(),
+        seeds=(0, 1, 2),
+        data_planes=("numpy", "jax"),
+    ))
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+from ..queries import QueryModel, WorkloadSpec
+from .api import Router
+from .baselines import (ReplicatedRouter, StaticHistoryRouter,
+                        StaticUniformRouter, SwarmRouter)
+from .engine import EngineConfig, Metrics, StreamingEngine
+from .sources import (QUERY_SIDE, ScenarioSource, TwitterLikeSource,
+                      scenario)
+
+ROUTER_KINDS = ("replicated", "static_uniform", "static_history", "swarm")
+
+
+def workload_query_side(workload: WorkloadSpec | None) -> float:
+    """Continuous-query rectangle side for a workload (kNN routes by its
+    much smaller influence region)."""
+    return (workload.knn_side
+            if workload is not None and workload.query_model is QueryModel.KNN
+            else QUERY_SIDE)
+
+
+@dataclass(frozen=True)
+class RouterSpec:
+    """How to build one of the four routing systems."""
+
+    kind: str = "swarm"
+    grid_size: int = 64
+    beta: int = 8
+    decay: float = 0.5
+    history_points: int = 4000       # static_history sample sizes
+    history_queries: int = 2000
+    history_rounds: int = 20
+    history_seed: int | None = None  # default: experiment seed + 1
+
+    def build(self, *, num_machines: int,
+              workload: WorkloadSpec | None = None,
+              data_plane: str | None = None, seed: int = 0) -> Router:
+        kw = {"workload": workload, "data_plane": data_plane}
+        if self.kind == "replicated":
+            return ReplicatedRouter(num_machines, self.grid_size, **kw)
+        if self.kind == "static_uniform":
+            return StaticUniformRouter(self.grid_size, num_machines, **kw)
+        if self.kind == "static_history":
+            hseed = self.history_seed if self.history_seed is not None \
+                else seed + 1
+            base = TwitterLikeSource(seed=hseed)
+            # keep the original RNG order (points, then queries), and
+            # balance the frozen plan for the query footprint it serves
+            hist_pts = base.sample_points(self.history_points)
+            hist_q = base.sample_queries(self.history_queries,
+                                         side=workload_query_side(workload))
+            return StaticHistoryRouter(self.grid_size, num_machines,
+                                       hist_pts, hist_q,
+                                       rounds=self.history_rounds, **kw)
+        if self.kind == "swarm":
+            return SwarmRouter(self.grid_size, num_machines, beta=self.beta,
+                               decay=self.decay, **kw)
+        raise ValueError(f"unknown router kind {self.kind!r}; "
+                         f"one of {ROUTER_KINDS}")
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """How to build one scenario timeline (paper Figs 11–16)."""
+
+    name: str = "uniform_normal"
+    ticks: int = 90
+    preload_queries: int = 3000
+    query_burst: int = 500
+    peak: float = 0.4
+
+    @property
+    def key(self) -> str:
+        return (f"{self.name}[{self.ticks}t,{self.preload_queries}q,"
+                f"{self.query_burst}b]")
+
+    def build(self, *, seed: int = 0,
+              workload: WorkloadSpec | None = None) -> ScenarioSource:
+        return scenario(self.name, seed=seed, horizon=self.ticks,
+                        peak=self.peak, query_burst=self.query_burst,
+                        query_side=workload_query_side(workload))
+
+
+@dataclass(frozen=True)
+class Experiment:
+    """One fully specified run.  ``seed`` derives every rng: the source,
+    the history sample (seed+1 unless pinned) — nothing else holds
+    randomness."""
+
+    router: RouterSpec = field(default_factory=RouterSpec)
+    scenario: ScenarioSpec = field(default_factory=ScenarioSpec)
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
+    engine: EngineConfig = field(default_factory=EngineConfig)
+    seed: int = 0
+    data_plane: str = "numpy"
+
+    @property
+    def label(self) -> str:
+        return (f"{self.router.kind}/{self.scenario.key}/"
+                f"{self.workload.label}/{self.data_plane}/seed={self.seed}")
+
+    def with_(self, **changes) -> "Experiment":
+        return replace(self, **changes)
+
+
+@dataclass
+class ExperimentResult:
+    experiment: Experiment
+    metrics: Metrics
+    wall_s: float
+    router: Router
+
+    @property
+    def label(self) -> str:
+        return self.experiment.label
+
+    def asarrays(self) -> dict:
+        return self.metrics.asarrays()
+
+
+def run(exp: Experiment) -> ExperimentResult:
+    """Build everything from the spec and run the timeline."""
+    source = exp.scenario.build(seed=exp.seed, workload=exp.workload)
+    router = exp.router.build(num_machines=exp.engine.num_machines,
+                              workload=exp.workload,
+                              data_plane=exp.data_plane, seed=exp.seed)
+    eng = StreamingEngine(router, source, exp.engine)
+    t0 = time.perf_counter()
+    preload = eng.stream.preload(exp.scenario.preload_queries)
+    if preload is not None:
+        router.ingest(preload)
+    metrics = eng.run(exp.scenario.ticks)
+    return ExperimentResult(exp, metrics, time.perf_counter() - t0, router)
+
+
+def sweep(routers=(RouterSpec(),), scenarios=(ScenarioSpec(),),
+          workloads=(WorkloadSpec(),), seeds=(0,),
+          engine: EngineConfig | None = None,
+          data_planes=("numpy",)) -> list[Experiment]:
+    """The full cartesian product as Experiment specs."""
+    engine = engine or EngineConfig()
+    return [Experiment(router=r, scenario=sc, workload=wl, engine=engine,
+                       seed=seed, data_plane=plane)
+            for r, sc, wl, seed, plane in itertools.product(
+                routers, scenarios, workloads, seeds, data_planes)]
+
+
+def run_suite(experiments) -> dict[str, ExperimentResult]:
+    """Run a batch of experiments; results keyed by ``Experiment.label``.
+    Duplicate labels are rejected (they would silently shadow)."""
+    results: dict[str, ExperimentResult] = {}
+    for exp in experiments:
+        if exp.label in results:
+            raise ValueError(f"duplicate experiment label {exp.label!r}")
+        results[exp.label] = run(exp)
+    return results
+
+
+def mean_uow(result: ExperimentResult, lo: int = 0,
+             hi: int | None = None) -> float:
+    """Mean units of work over a tick window (benchmark convenience)."""
+    uow = np.asarray(result.metrics.units_of_work, float)
+    return float(uow[lo:hi].mean())

@@ -1,0 +1,343 @@
+"""Pluggable data planes: the batched array math behind routing.
+
+A :class:`DataPlane` computes the *stateless* per-batch quantities of
+the routing hot path — cell routing (point → partition → owner gathers)
+and the probe/match cost terms of the paper's per-tuple cost model —
+over whole batches.  Routers own all mutable state (indexes, resident
+counts, stores, collectors) and call into the plane; swapping the plane
+changes how the math runs, not what it computes.
+
+Two implementations:
+
+* :class:`NumpyPlane` — the reference path; bit-for-bit the pre-redesign
+  behavior (float64 intermediates, float32 outputs).
+* :class:`JaxPlane`   — jit-compiled: routing + cost terms fuse into one
+  XLA executable per batch-shape bucket (inputs are padded to powers of
+  two so recompilation is O(log N)).  Exact tuple-vs-query match work is
+  served by the Pallas kernel packages ``repro.kernels.spatial_match``
+  and ``repro.kernels.knn_match`` (compiled on TPU, their jnp references
+  elsewhere — Pallas interpret mode is correctness-only).
+
+``benchmarks/dataplane.py`` records the large-batch speedup of the JAX
+plane over the NumPy plane (``BENCH_dataplane.json``).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core import geometry
+
+
+@dataclass(frozen=True)
+class CostParams:
+    """Per-router scalar bundle for the cost terms (paper §6):
+    ``cost = c0 + κ_probe·log2(1+Q_m)·pressure + mf·κ_match·E[matches]``
+    plus the persistence deposit (``store_cost``) and, for snapshot
+    probes, the stored-tuple scan term (``scan_kappa``)."""
+
+    c0: float
+    kappa_probe: float
+    kappa_match: float
+    q_cache: float
+    query_area: float
+    match_factor: float
+    tuple_driven: bool
+    store_cost: float       # 0.0 when the workload keeps no store
+    scan_kappa: float = 0.0
+
+
+class DataPlane:
+    """Interface; see module docstring.  ``grid`` is the (G, G) int32
+    cell→partition map, ``owner_table`` the (P,) int32 partition→machine
+    map, ``area_frac`` the (P,) float64 partition area as a fraction of
+    the space, ``qres`` the (P,) resident-query counts and
+    ``q_machine``/``d_machine`` the per-machine resident query/tuple
+    counts."""
+
+    name = "abstract"
+
+    def tuple_costs(self, xy, grid, owner_table, qres, q_machine,
+                    area_frac, p: CostParams):
+        """Route a tuple batch and price it: (pids, owners, costs)."""
+        raise NotImplementedError
+
+    def match_terms(self, xy, grid, qres, area_frac, query_area,
+                    kappa_match):
+        """(pids, match-term work) per point — the E[matches] density
+        approximation used by the replicated router's shadow grid."""
+        raise NotImplementedError
+
+    def probe_costs(self, rects, grid, owner_table, store_counts,
+                    d_machine, area_frac, p: CostParams,
+                    pids=None, owners=None):
+        """Route snapshot probes (by center) and price the stored-tuple
+        scan: (pids, owners, costs).  ``pids``/``owners`` may be
+        supplied when the router already routed the batch (SWARM's
+        collector path)."""
+        raise NotImplementedError
+
+    # -- exact match work (kernel packages) ---------------------------------
+    def match_counts(self, points, rects):
+        """Exact tuple↔query join sizes: (per-point matches, per-query
+        matches) — ``repro.kernels.spatial_match`` semantics."""
+        raise NotImplementedError
+
+    def knn_distances(self, points, foci, k: int = 8):
+        """(Q, k) ascending squared distances —
+        ``repro.kernels.knn_match`` semantics."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# NumPy reference plane
+# ---------------------------------------------------------------------------
+
+class NumpyPlane(DataPlane):
+    name = "numpy"
+
+    def _route(self, xy, grid, owner_table):
+        g = grid.shape[0]
+        row, col = geometry.points_to_cells(np.asarray(xy), g)
+        pids = grid[row, col]
+        return pids, owner_table[pids]
+
+    def tuple_costs(self, xy, grid, owner_table, qres, q_machine,
+                    area_frac, p: CostParams):
+        pids, owners = self._route(xy, grid, owner_table)
+        if p.tuple_driven:
+            q = np.asarray(q_machine, np.float64)[owners]
+            pressure = 1.0 + np.maximum(0.0, (q - p.q_cache) / p.q_cache)
+            probe = p.kappa_probe * np.log2(1.0 + q) * pressure
+            cov = np.minimum(
+                p.query_area / np.maximum(area_frac[pids], 1e-12), 1.0)
+            match = p.kappa_match * qres[pids] * cov
+            costs = p.c0 + probe + p.match_factor * match
+        else:
+            costs = np.full(len(xy), p.c0, np.float64)
+        costs = costs + p.store_cost
+        return pids, owners.astype(np.int32), costs.astype(np.float32)
+
+    def match_terms(self, xy, grid, qres, area_frac, query_area,
+                    kappa_match):
+        g = grid.shape[0]
+        row, col = geometry.points_to_cells(np.asarray(xy), g)
+        pids = grid[row, col]
+        cov = np.minimum(query_area / np.maximum(area_frac[pids], 1e-12), 1.0)
+        return pids, kappa_match * qres[pids] * cov
+
+    def probe_costs(self, rects, grid, owner_table, store_counts,
+                    d_machine, area_frac, p: CostParams,
+                    pids=None, owners=None):
+        rects = np.asarray(rects)
+        if pids is None:
+            centers = np.stack([(rects[:, 0] + rects[:, 2]) * 0.5,
+                                (rects[:, 1] + rects[:, 3]) * 0.5], axis=1)
+            pids, owners = self._route(centers, grid, owner_table)
+        probe = p.kappa_probe * np.log2(1.0 + np.asarray(d_machine)[owners])
+        area_q = ((rects[:, 2] - rects[:, 0])
+                  * (rects[:, 3] - rects[:, 1])).astype(np.float64)
+        cov = np.minimum(area_q / np.maximum(area_frac[pids], 1e-12), 1.0)
+        scan = p.scan_kappa * store_counts[pids] * cov
+        costs = (p.c0 + probe + scan).astype(np.float32)
+        return pids, np.asarray(owners, np.int32), costs
+
+    def match_counts(self, points, rects, chunk: int = 512):
+        points = np.asarray(points, np.float32)
+        rects = np.asarray(rects, np.float32)
+        pcnt = np.zeros(len(points), np.int32)
+        qcnt = np.zeros(len(rects), np.int32)
+        for lo in range(0, len(rects), chunk):
+            r = rects[lo:lo + chunk]
+            inside = ((points[:, None, 0] >= r[None, :, 0])
+                      & (points[:, None, 0] <= r[None, :, 2])
+                      & (points[:, None, 1] >= r[None, :, 1])
+                      & (points[:, None, 1] <= r[None, :, 3]))
+            pcnt += inside.sum(1, dtype=np.int32)
+            qcnt[lo:lo + chunk] = inside.sum(0, dtype=np.int32)
+        return pcnt, qcnt
+
+    def knn_distances(self, points, foci, k: int = 8):
+        points = np.asarray(points, np.float32)
+        foci = np.asarray(foci, np.float32)
+        d2 = ((foci[:, None, :] - points[None, :, :]) ** 2).sum(-1)
+        part = np.partition(d2, k - 1, axis=1)[:, :k]
+        return np.sort(part, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# JAX plane (jit-fused; Pallas kernel packages for exact match work)
+# ---------------------------------------------------------------------------
+
+def _pad_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length() if n > 2 else max(n, 1)
+
+
+class JaxPlane(DataPlane):
+    name = "jax"
+
+    def __init__(self):
+        import jax  # deferred so numpy-only use never pays the import
+        import jax.numpy as jnp
+        self._jax, self._jnp = jax, jnp
+        self._on_tpu = jax.default_backend() == "tpu"
+        self._jit_tuple = jax.jit(self._tuple_fn,
+                                  static_argnames=("tuple_driven",))
+        self._jit_match = jax.jit(self._match_fn)
+        self._jit_probe = jax.jit(self._probe_fn)
+
+    # -- jit bodies ---------------------------------------------------------
+    @staticmethod
+    def _route_fn(jnp, xy, grid, owner_table):
+        g = grid.shape[0]
+        col = jnp.clip((xy[:, 0] * g).astype(jnp.int32), 0, g - 1)
+        row = jnp.clip((xy[:, 1] * g).astype(jnp.int32), 0, g - 1)
+        pids = grid[row, col]
+        return pids, owner_table[pids]
+
+    def _tuple_fn(self, xy, grid, owner_table, qres, q_machine, area_frac,
+                  c0, kappa_probe, kappa_match, q_cache, query_area,
+                  match_factor, store_cost, *, tuple_driven: bool):
+        jnp = self._jnp
+        pids, owners = self._route_fn(jnp, xy, grid, owner_table)
+        if tuple_driven:
+            q = q_machine[owners].astype(jnp.float32)
+            pressure = 1.0 + jnp.maximum(0.0, (q - q_cache) / q_cache)
+            probe = kappa_probe * jnp.log2(1.0 + q) * pressure
+            cov = jnp.minimum(
+                query_area / jnp.maximum(area_frac[pids], 1e-12), 1.0)
+            match = kappa_match * qres[pids] * cov
+            costs = c0 + probe + match_factor * match
+        else:
+            costs = jnp.full(xy.shape[0], c0, jnp.float32)
+        return pids, owners, (costs + store_cost).astype(jnp.float32)
+
+    def _match_fn(self, xy, grid, qres, area_frac, query_area, kappa_match):
+        jnp = self._jnp
+        g = grid.shape[0]
+        col = jnp.clip((xy[:, 0] * g).astype(jnp.int32), 0, g - 1)
+        row = jnp.clip((xy[:, 1] * g).astype(jnp.int32), 0, g - 1)
+        pids = grid[row, col]
+        cov = jnp.minimum(
+            query_area / jnp.maximum(area_frac[pids], 1e-12), 1.0)
+        return pids, kappa_match * qres[pids] * cov
+
+    def _probe_fn(self, rects, pids, owners, store_counts, d_machine,
+                  area_frac, c0, kappa_probe, scan_kappa):
+        jnp = self._jnp
+        probe = kappa_probe * jnp.log2(
+            1.0 + d_machine[owners].astype(jnp.float32))
+        area_q = ((rects[:, 2] - rects[:, 0])
+                  * (rects[:, 3] - rects[:, 1])).astype(jnp.float32)
+        cov = jnp.minimum(area_q / jnp.maximum(area_frac[pids], 1e-12), 1.0)
+        scan = scan_kappa * store_counts[pids] * cov
+        return (c0 + probe + scan).astype(jnp.float32)
+
+    # -- padding helpers ----------------------------------------------------
+    def _padded(self, arr, n_pad, fill=0.0):
+        jnp = self._jnp
+        pad = n_pad - arr.shape[0]
+        if pad == 0:
+            return jnp.asarray(arr)
+        widths = ((0, pad),) + ((0, 0),) * (arr.ndim - 1)
+        return jnp.pad(jnp.asarray(arr), widths, constant_values=fill)
+
+    # -- interface ----------------------------------------------------------
+    def tuple_costs(self, xy, grid, owner_table, qres, q_machine,
+                    area_frac, p: CostParams):
+        n = len(xy)
+        xy_p = self._padded(np.asarray(xy, np.float32), _pad_pow2(n))
+        pids, owners, costs = self._jit_tuple(
+            xy_p, grid, np.asarray(owner_table, np.int32),
+            np.asarray(qres, np.float32), np.asarray(q_machine, np.float32),
+            np.asarray(area_frac, np.float32),
+            p.c0, p.kappa_probe, p.kappa_match, p.q_cache, p.query_area,
+            p.match_factor, p.store_cost, tuple_driven=p.tuple_driven)
+        return (np.asarray(pids)[:n], np.asarray(owners, np.int32)[:n],
+                np.asarray(costs)[:n])
+
+    def match_terms(self, xy, grid, qres, area_frac, query_area,
+                    kappa_match):
+        n = len(xy)
+        xy_p = self._padded(np.asarray(xy, np.float32), _pad_pow2(n))
+        pids, match = self._jit_match(
+            xy_p, grid, np.asarray(qres, np.float32),
+            np.asarray(area_frac, np.float32), query_area, kappa_match)
+        return np.asarray(pids)[:n], np.asarray(match)[:n]
+
+    def probe_costs(self, rects, grid, owner_table, store_counts,
+                    d_machine, area_frac, p: CostParams,
+                    pids=None, owners=None):
+        rects = np.asarray(rects, np.float32)
+        if pids is None:
+            centers = np.stack([(rects[:, 0] + rects[:, 2]) * 0.5,
+                                (rects[:, 1] + rects[:, 3]) * 0.5], axis=1)
+            g = grid.shape[0]
+            row, col = geometry.points_to_cells(centers, g)
+            pids = grid[row, col]
+            owners = np.asarray(owner_table)[pids]
+        n = len(rects)
+        n_pad = _pad_pow2(n)
+        costs = self._jit_probe(
+            self._padded(rects, n_pad),
+            self._padded(np.asarray(pids, np.int32), n_pad),
+            self._padded(np.asarray(owners, np.int32), n_pad),
+            np.asarray(store_counts, np.float32),
+            np.asarray(d_machine, np.float32),
+            np.asarray(area_frac, np.float32),
+            p.c0, p.kappa_probe, p.scan_kappa)
+        return (np.asarray(pids, np.int32), np.asarray(owners, np.int32),
+                np.asarray(costs)[:n])
+
+    def match_counts(self, points, rects):
+        jnp = self._jnp
+        if self._on_tpu:
+            from ..kernels.spatial_match import spatial_match
+            pc, qc = spatial_match(jnp.asarray(points), jnp.asarray(rects))
+        else:
+            from ..kernels.spatial_match import spatial_match_ref
+            pc, qc = spatial_match_ref(jnp.asarray(points),
+                                       jnp.asarray(rects))
+        return np.asarray(pc), np.asarray(qc)
+
+    def knn_distances(self, points, foci, k: int = 8):
+        jnp = self._jnp
+        if self._on_tpu:
+            from ..kernels.knn_match import knn_match
+            out = knn_match(jnp.asarray(points), jnp.asarray(foci), k=k)
+        else:
+            from ..kernels.knn_match import knn_match_ref
+            out = knn_match_ref(jnp.asarray(points), jnp.asarray(foci), k)
+        return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_PLANES: dict[str, type[DataPlane]] = {"numpy": NumpyPlane, "jax": JaxPlane}
+
+
+@functools.lru_cache(maxsize=None)
+def _plane_singleton(name: str) -> DataPlane:
+    return _PLANES[name]()
+
+
+def get_plane(plane: "DataPlane | str | None") -> DataPlane:
+    """Resolve a plane argument: an instance passes through, a name is
+    looked up (instances are shared — planes are stateless), ``None``
+    means the NumPy reference plane."""
+    if plane is None:
+        return _plane_singleton("numpy")
+    if isinstance(plane, DataPlane):
+        return plane
+    if plane not in _PLANES:
+        raise ValueError(f"unknown data plane {plane!r}; "
+                         f"available: {sorted(_PLANES)}")
+    return _plane_singleton(plane)
+
+
+def available_planes() -> tuple[str, ...]:
+    return tuple(sorted(_PLANES))

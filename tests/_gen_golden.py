@@ -1,0 +1,93 @@
+"""One-shot generator for ``tests/golden/routing_golden.npz``.
+
+Run against the pre-redesign routers (commit d9eef76) to freeze the
+reference routing behavior: for every router × workload combo, the
+owners/costs produced for fixed tuple batches and snapshot probes.
+``tests/test_api.py`` replays the same inputs through the typed
+``Router.ingest`` API on both data planes and checks owners match
+exactly and costs to ≤1e-4 relative.
+
+The input arrays themselves are stored in the npz so the replay does
+not depend on RNG call order.
+
+Usage:  PYTHONPATH=src python tests/_gen_golden.py
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.queries import QueryModel, all_workloads
+from repro.streaming import (ReplicatedRouter, StaticHistoryRouter,
+                             StaticUniformRouter, SwarmRouter,
+                             TwitterLikeSource)
+from repro.streaming.baselines import force_rebalance_round
+
+G, M = 64, 8
+OUT = os.path.join(os.path.dirname(__file__), "golden", "routing_golden.npz")
+
+
+def make_inputs() -> dict:
+    base = TwitterLikeSource(seed=1)
+    data = {
+        "pts1": base.sample_points(2048),
+        "pts2": base.sample_points(1024),
+        "probes": base.sample_queries(256, side=0.02),
+        "hist_pts": TwitterLikeSource(seed=1).sample_points(4000),
+    }
+    for side, tag in ((0.02, "range"), (0.01, "knn")):
+        data[f"queries_{tag}"] = base.sample_queries(300, side=side)
+        data[f"hist_q_{tag}"] = TwitterLikeSource(seed=2).sample_queries(
+            2000, side=side)
+    return data
+
+
+def make_router(kind: str, wl, inputs):
+    tag = "knn" if wl.query_model is QueryModel.KNN else "range"
+    if kind == "replicated":
+        return ReplicatedRouter(M, G, workload=wl)
+    if kind == "static_uniform":
+        return StaticUniformRouter(G, M, workload=wl)
+    if kind == "static_history":
+        return StaticHistoryRouter(G, M, inputs["hist_pts"],
+                                   inputs[f"hist_q_{tag}"], rounds=20,
+                                   workload=wl)
+    if kind == "swarm":
+        return SwarmRouter(G, M, beta=4, workload=wl)
+    raise ValueError(kind)
+
+
+def drive(kind: str, wl, inputs) -> dict:
+    """The exact op sequence the parity test replays through ingest."""
+    tag = "knn" if wl.query_model is QueryModel.KNN else "range"
+    r = make_router(kind, wl, inputs)
+    out = {}
+    if wl.spec.continuous:
+        r.register_queries(inputs[f"queries_{tag}"])
+    out["o1"], out["c1"] = r.route_points(inputs["pts1"])
+    if wl.spec.snapshot:
+        out["po1"], out["pc1"] = r.route_snapshots(inputs["probes"])
+    if kind == "swarm":
+        force_rebalance_round(r.swarm)
+    out["o2"], out["c2"] = r.route_points(inputs["pts2"])
+    if wl.spec.snapshot:
+        out["po2"], out["pc2"] = r.route_snapshots(inputs["probes"])
+    return out
+
+
+def main() -> None:
+    inputs = make_inputs()
+    blobs = dict(inputs)
+    for kind in ("replicated", "static_uniform", "static_history", "swarm"):
+        for wl in all_workloads():
+            rec = drive(kind, wl, inputs)
+            for name, arr in rec.items():
+                blobs[f"{kind}/{wl.label}/{name}"] = np.asarray(arr)
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    np.savez_compressed(OUT, **blobs)
+    print(f"wrote {OUT}: {len(blobs)} arrays")
+
+
+if __name__ == "__main__":
+    main()

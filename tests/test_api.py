@@ -1,0 +1,239 @@
+"""The typed event-stream API: golden parity with the pre-redesign
+routing path on both data planes, event dispatch, round scheduling,
+failure events and the declarative experiment suite."""
+import numpy as np
+import pytest
+
+from repro.queries import QueryModel, WorkloadSpec, all_workloads
+from repro.streaming import (EngineConfig, EventStream, Experiment,
+                             MachineFailure, ProbeBatch, QueryBatch,
+                             ReplicatedRouter, Router, RouterSpec,
+                             RoutingDecision, ScenarioSpec,
+                             StaticHistoryRouter, StaticUniformRouter,
+                             StreamingEngine, SwarmRouter, TupleBatch,
+                             get_plane, run, run_suite, scenario, sweep)
+from repro.streaming.baselines import force_rebalance_round
+
+G, M = 64, 8
+GOLDEN = __file__.rsplit("/", 1)[0] + "/golden/routing_golden.npz"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+def _make_router(kind, wl, plane, golden):
+    tag = "knn" if wl.query_model is QueryModel.KNN else "range"
+    if kind == "replicated":
+        return ReplicatedRouter(M, G, workload=wl, data_plane=plane)
+    if kind == "static_uniform":
+        return StaticUniformRouter(G, M, workload=wl, data_plane=plane)
+    if kind == "static_history":
+        return StaticHistoryRouter(G, M, golden["hist_pts"],
+                                   golden[f"hist_q_{tag}"], rounds=20,
+                                   workload=wl, data_plane=plane)
+    return SwarmRouter(G, M, beta=4, workload=wl, data_plane=plane)
+
+
+# ---------------------------------------------------------------------------
+# Golden parity: every router × workload through Router.ingest, on both
+# data planes, against the recorded pre-redesign owners/costs.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("plane", ["numpy", "jax"])
+@pytest.mark.parametrize("kind", ["replicated", "static_uniform",
+                                  "static_history", "swarm"])
+def test_golden_parity(plane, kind, golden):
+    for wl in all_workloads():
+        tag = "knn" if wl.query_model is QueryModel.KNN else "range"
+        r = _make_router(kind, wl, plane, golden)
+        assert isinstance(r, Router)
+        rec = {}
+        if wl.spec.continuous:
+            assert r.ingest(QueryBatch(golden[f"queries_{tag}"])) is None
+        d = r.ingest(TupleBatch(golden["pts1"]))
+        rec["o1"], rec["c1"] = d.owners, d.costs
+        if wl.spec.snapshot:
+            d = r.ingest(ProbeBatch(golden["probes"]))
+            rec["po1"], rec["pc1"] = d.owners, d.costs
+        if kind == "swarm":
+            force_rebalance_round(r.swarm)
+        d = r.ingest(TupleBatch(golden["pts2"]))
+        rec["o2"], rec["c2"] = d.owners, d.costs
+        if wl.spec.snapshot:
+            d = r.ingest(ProbeBatch(golden["probes"]))
+            rec["po2"], rec["pc2"] = d.owners, d.costs
+        for name, arr in rec.items():
+            ref = golden[f"{kind}/{wl.label}/{name}"]
+            if name.startswith(("o", "po")):   # owners: exact
+                np.testing.assert_array_equal(arr, ref,
+                                              err_msg=f"{wl.label}/{name}")
+            else:                              # costs: ≤1e-4 relative
+                np.testing.assert_allclose(arr.astype(np.float64), ref,
+                                           rtol=1e-4, atol=1e-7,
+                                           err_msg=f"{wl.label}/{name}")
+
+
+# ---------------------------------------------------------------------------
+# Event dispatch
+# ---------------------------------------------------------------------------
+
+def test_ingest_dispatch_and_decision_shape():
+    r = StaticUniformRouter(G, M)
+    rng = np.random.default_rng(0)
+    assert r.ingest(QueryBatch(rng.uniform(0, 0.9, (10, 4)).astype(
+        np.float32))) is None
+    assert r.q_total == 10
+    d = r.ingest(TupleBatch(rng.uniform(0, 1, (64, 2)).astype(np.float32)))
+    assert isinstance(d, RoutingDecision) and len(d) == 64
+    assert d.owners.dtype == np.int32 and d.costs.dtype == np.float32
+    assert (d.pids >= 0).all() and (0 <= d.owners).all() and (d.owners < M).all()
+    with pytest.raises(TypeError):
+        r.ingest(object())
+
+
+def test_event_stream_emits_model_specific_batches():
+    src = scenario("uniform_normal", horizon=30, query_burst=300)
+    cont = EventStream(src, WorkloadSpec(query_model="range"))
+    burst_tick = 10  # hotspot start = horizon//3
+    evs = cont.arrivals(burst_tick)
+    assert len(evs) == 1 and isinstance(evs[0], QueryBatch)
+    snap = EventStream(scenario("uniform_normal", horizon=30),
+                       WorkloadSpec(query_model="snapshot"))
+    evs = snap.arrivals(0)
+    assert len(evs) == 1 and isinstance(evs[0], ProbeBatch)
+    assert snap.preload(100) is None          # one-shot model: no preload
+    assert len(cont.preload(100)) == 100
+
+
+def test_snapshot_probe_without_store_raises_named_error():
+    r = StaticUniformRouter(G, M)   # default workload: range+ephemeral
+    probes = np.array([[0.1, 0.1, 0.12, 0.12]], np.float32)
+    with pytest.raises(ValueError, match="range"):
+        r.ingest(ProbeBatch(probes))
+    with pytest.raises(ValueError, match="tuple store"):
+        r.route_snapshots(probes)   # legacy entry point: same guard
+
+
+# ---------------------------------------------------------------------------
+# Round scheduling (off-by-one regression)
+# ---------------------------------------------------------------------------
+
+class _RecordingRouter(StaticUniformRouter):
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.round_ticks = []
+
+    def on_round(self, tick):
+        self.round_ticks.append(tick)
+        return super().on_round(tick)
+
+
+@pytest.mark.parametrize("round_every,expect", [(1, [1, 2, 3, 4, 5, 6]),
+                                                (3, [3, 6])])
+def test_rounds_start_at_first_full_interval(round_every, expect):
+    cfg = EngineConfig(num_machines=M, round_every=round_every)
+    r = _RecordingRouter(G, M)
+    eng = StreamingEngine(r, scenario("none", horizon=8), cfg)
+    eng.run(7)
+    assert r.round_ticks == expect   # never at tick 0
+
+
+# ---------------------------------------------------------------------------
+# Machine failure through the typed event
+# ---------------------------------------------------------------------------
+
+def test_machine_failure_event_end_to_end():
+    cfg = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20000,
+                       mem_queries=100_000)
+    src = scenario("none", horizon=80)
+    r = SwarmRouter(G, M, beta=8)
+    eng = StreamingEngine(r, src, cfg)
+    eng.preload_queries(src.sample_queries(2000))
+    for _ in range(20):
+        eng.step()
+    dead = 3
+    assert len(r.swarm.index.machine_partitions(dead)) > 0
+    r_before = r.resident_counts()
+    eng.fail_machine(dead)            # routed as a MachineFailure event
+    # partitions re-home away from the dead machine ...
+    assert len(r.swarm.index.machine_partitions(dead)) == 0
+    assert r.resident_counts()[dead] == 0
+    assert r.resident_counts().sum() >= r_before.sum()  # queries re-homed
+    # ... its queues drop ...
+    assert eng.queue_units[dead] == 0.0 and eng.queue_tuples[dead] == 0.0
+    for _ in range(40):
+        eng.step()
+    a = eng.metrics.asarrays()
+    # ... and every metric stays finite while the system keeps processing
+    for name, arr in a.items():
+        assert np.isfinite(np.asarray(arr, np.float64)).all(), name
+    assert a["throughput"][-10:].mean() > 0.3 * a["throughput"][:20].mean()
+    # direct ingest of the event is equivalent (idempotent here)
+    assert r.ingest(MachineFailure(dead)) is None
+
+
+# ---------------------------------------------------------------------------
+# Experiment suite: seeds threaded end-to-end, determinism, planes
+# ---------------------------------------------------------------------------
+
+SMALL = ScenarioSpec("uniform_normal", ticks=10, preload_queries=300,
+                     query_burst=100)
+CFG = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=5000,
+                   mem_queries=100_000)
+
+
+def test_experiment_seed_threads_into_sampling():
+    a = run(Experiment(router=RouterSpec("static_uniform"), scenario=SMALL,
+                       engine=CFG, seed=0))
+    b = run(Experiment(router=RouterSpec("static_uniform"), scenario=SMALL,
+                       engine=CFG, seed=0))
+    c = run(Experiment(router=RouterSpec("static_uniform"), scenario=SMALL,
+                       engine=CFG, seed=1))
+    np.testing.assert_array_equal(a.metrics.units_of_work,
+                                  b.metrics.units_of_work)
+    assert not np.array_equal(a.metrics.units_of_work,
+                              c.metrics.units_of_work)
+
+
+def test_engine_level_plane_parity():
+    res = {plane: run(Experiment(router=RouterSpec("swarm", beta=8),
+                                 scenario=SMALL, engine=CFG,
+                                 data_plane=plane))
+           for plane in ("numpy", "jax")}
+    a = np.asarray(res["numpy"].metrics.units_of_work, float)
+    b = np.asarray(res["jax"].metrics.units_of_work, float)
+    np.testing.assert_allclose(a, b, rtol=1e-3)
+
+
+def test_run_suite_sweep_and_duplicate_labels():
+    exps = sweep(routers=[RouterSpec("static_uniform"),
+                          RouterSpec("swarm", beta=8)],
+                 scenarios=[SMALL], seeds=(0,), engine=CFG)
+    results = run_suite(exps)
+    assert len(results) == 2
+    for exp in exps:
+        assert results[exp.label].experiment is exp
+    with pytest.raises(ValueError, match="duplicate"):
+        run_suite([exps[0], exps[0]])
+
+
+# ---------------------------------------------------------------------------
+# Data-plane kernel surfaces agree across planes
+# ---------------------------------------------------------------------------
+
+def test_plane_match_counts_and_knn_agree():
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(0, 1, (400, 2)).astype(np.float32)
+    rects = np.concatenate([c := rng.uniform(0, 0.9, (50, 2)), c + 0.05],
+                           axis=1).astype(np.float32)
+    np_plane, jx_plane = get_plane("numpy"), get_plane("jax")
+    pc_n, qc_n = np_plane.match_counts(pts, rects)
+    pc_j, qc_j = jx_plane.match_counts(pts, rects)
+    np.testing.assert_array_equal(pc_n, pc_j)
+    np.testing.assert_array_equal(qc_n, qc_j)
+    foci = rng.uniform(0, 1, (20, 2)).astype(np.float32)
+    np.testing.assert_allclose(np_plane.knn_distances(pts, foci, k=4),
+                               jx_plane.knn_distances(pts, foci, k=4),
+                               rtol=1e-5, atol=1e-7)

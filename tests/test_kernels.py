@@ -1,7 +1,6 @@
 """Per-kernel shape/dtype sweeps against the pure-jnp oracles
 (interpret=True executes the Pallas kernel bodies on CPU)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

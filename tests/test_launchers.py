@@ -1,5 +1,4 @@
 """Launcher entry points + elastic checkpoint restore across meshes."""
-import json
 import os
 import subprocess
 import sys

@@ -10,7 +10,6 @@ import pytest
 from repro import configs
 from repro.models import (decode_step, forward, init_params, loss_fn, prefill)
 from repro.models import layers as ML
-from repro.models import model as MODEL
 
 KEY = jax.random.PRNGKey(0)
 rng = np.random.default_rng(0)

@@ -1,7 +1,7 @@
 """Integration tests for the full SWARM protocol (§4.3, §5)."""
 import numpy as np
 
-from repro.core import Swarm, balancer, geometry, integrity
+from repro.core import Swarm, balancer, integrity
 from repro.core import statistics as S
 
 

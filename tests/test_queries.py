@@ -8,10 +8,9 @@ import pytest
 from repro.kernels.knn_match import knn_match, knn_match_ref
 from repro.queries import (PersistenceModel, QueryModel, TupleStore,
                            WorkloadSpec, all_workloads, get_query_model)
-from repro.streaming import (EngineConfig, ReplicatedRouter,
-                             StaticHistoryRouter, StaticUniformRouter,
-                             SwarmRouter, TwitterLikeSource, run_experiment,
-                             scenario)
+from repro.streaming import (EngineConfig, Experiment, QueryBatch,
+                             RouterSpec, ScenarioSpec, SwarmRouter,
+                             TupleBatch, TwitterLikeSource, run)
 from repro.streaming.baselines import force_rebalance_round
 
 G, M = 64, 8
@@ -29,6 +28,15 @@ def test_registry_covers_all_models():
     with pytest.raises(ValueError):
         get_query_model("spatio-temporal-join")
     assert len(all_workloads()) == 6
+
+
+def test_registry_serves_custom_models():
+    """The extension contract: a spec registered under a custom name
+    resolves without being a QueryModel enum member."""
+    from repro.queries.models import QueryModelSpec, register_query_model
+    spec = register_query_model(QueryModelSpec(
+        "trajectory", continuous=True, tuple_driven=True, snapshot=False))
+    assert get_query_model("trajectory") is spec
 
 
 def test_match_factor_semantics():
@@ -95,10 +103,10 @@ def test_stored_migration_ships_data_bytes():
                       persistence=PersistenceModel.STORED)
     r = SwarmRouter(G, M, beta=4, workload=wl)
     base = TwitterLikeSource(seed=3)
-    r.register_queries(base.sample_queries(500))
+    r.ingest(QueryBatch(base.sample_queries(500)))
     moved_total = 0
     for _ in range(6):
-        r.route_points(base.sample_points(4000))
+        r.ingest(TupleBatch(base.sample_points(4000)))
         rep = force_rebalance_round(r.swarm)
         rep2 = r.swarm.reports[-1]
         assert rep is rep2
@@ -119,7 +127,7 @@ def test_merge_conserves_stored_tuples():
                       persistence=PersistenceModel.STORED)
     r = SwarmRouter(G, 2, beta=4, workload=wl)  # 2 half-grid partitions
     base = TwitterLikeSource(seed=5)
-    r.route_points(base.sample_points(5000))
+    r.ingest(TupleBatch(base.sample_points(5000)))
     total = r.store.total()
     sw = r.swarm
     a, b = map(int, sw.index.parts.live_ids())
@@ -137,9 +145,11 @@ def test_ephemeral_never_bills_data_bytes():
     r = SwarmRouter(G, M, beta=4, workload=wl)
     base = TwitterLikeSource(seed=3)
     for _ in range(4):
-        r.route_points(base.sample_points(2000))
+        r.ingest(TupleBatch(base.sample_points(2000)))
         rep = force_rebalance_round(r.swarm)
         assert rep.data_bytes == 0
+        # the decayed probe window re-homes without crossing the wire
+        assert rep.moved_tuples == 0
 
 
 # ---------------------------------------------------------------------------
@@ -150,30 +160,23 @@ CFG = EngineConfig(num_machines=M, cap_units=8e3, lambda_max=8000,
                    mem_queries=100_000)
 
 
-def _run(router, wl, ticks=60, seed=0):
-    side = wl.knn_side if wl.query_model is QueryModel.KNN else 0.02
-    src = scenario("uniform_normal", seed=seed, horizon=ticks,
-                   query_burst=500, query_side=side)
-    m = run_experiment(router, src, ticks=ticks, preload_queries=2000,
-                       config=CFG, seed=seed)
-    return m.asarrays(), m
-
-
-def _history_router(wl):
-    base = TwitterLikeSource(seed=1)
-    side = wl.knn_side if wl.query_model is QueryModel.KNN else 0.02
-    return StaticHistoryRouter(G, M, base.sample_points(4000),
-                               base.sample_queries(2000, side=side),
-                               rounds=20, workload=wl)
+def _run(kind, wl, ticks=60, seed=0, cfg=CFG, scen="uniform_normal",
+         preload=2000, **router_kw):
+    exp = Experiment(
+        router=RouterSpec(kind, grid_size=G, history_seed=1, **router_kw),
+        scenario=ScenarioSpec(scen, ticks=ticks, preload_queries=preload,
+                              query_burst=500),
+        workload=wl, engine=cfg, seed=seed)
+    res = run(exp)
+    return res.asarrays(), res.metrics
 
 
 @pytest.mark.parametrize("wl", all_workloads(),
                          ids=lambda wl: wl.label)
 def test_all_routers_run_every_workload(wl):
     """Smoke: every router × every workload progresses and does work."""
-    for mk in (lambda: ReplicatedRouter(M, G, workload=wl),
-               lambda: StaticUniformRouter(G, M, workload=wl)):
-        a, m = _run(mk(), wl, ticks=12)
+    for kind in ("replicated", "static_uniform"):
+        a, m = _run(kind, wl, ticks=12)
         assert a["throughput"].sum() > 0
         assert a["units_of_work"].sum() > 0
         if wl.spec.snapshot:
@@ -186,8 +189,8 @@ def test_swarm_beats_history_in_every_workload(wl):
     """The acceptance matrix: SWARM does more units of work than the
     history-balanced static grid under every query-execution ×
     data-persistence combination (hotspot scenario, Fig-12 style)."""
-    a_h, m_h = _run(_history_router(wl), wl)
-    a_s, m_s = _run(SwarmRouter(G, M, beta=8, workload=wl), wl)
+    a_h, m_h = _run("static_history", wl)
+    a_s, m_s = _run("swarm", wl, beta=8)
     u_s, u_h = a_s["units_of_work"].mean(), a_h["units_of_work"].mean()
     assert u_s > 1.2 * u_h, (wl.label, u_s, u_h)
     if wl.stored:
@@ -203,7 +206,6 @@ def test_stored_memory_wall():
                       persistence=PersistenceModel.STORED)
     tiny = EngineConfig(num_machines=M, cap_units=8e3, lambda_max=8000,
                         mem_queries=100_000, mem_tuples=5_000)
-    src = scenario("none", horizon=30)
-    m = run_experiment(StaticUniformRouter(G, M, workload=wl), src,
-                       ticks=30, preload_queries=0, config=tiny)
+    _, m = _run("static_uniform", wl, ticks=30, cfg=tiny, scen="none",
+                preload=0)
     assert m.infeasible

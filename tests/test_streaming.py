@@ -1,41 +1,43 @@
 """Streaming-engine integration: the paper's comparative claims at
-simulation scale + fault tolerance."""
+simulation scale + fault tolerance, driven through the declarative
+experiment suite."""
 import numpy as np
 import pytest
 
-from repro.streaming import (EngineConfig, ReplicatedRouter,
-                             StaticHistoryRouter, StaticUniformRouter,
-                             StreamingEngine, SwarmRouter, TwitterLikeSource,
-                             run_experiment, scenario)
+from repro.streaming import (EngineConfig, Experiment, RouterSpec,
+                             ScenarioSpec, StreamingEngine, SwarmRouter,
+                             run, scenario)
 
 G, M = 64, 8
 CFG = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20000,
                    mem_queries=100_000)
 
 
-def _uow(router, ticks=90, preload=3000, cfg=CFG, scen="uniform_normal"):
-    src = scenario(scen, horizon=ticks, query_burst=500)
-    m = run_experiment(router, src, ticks=ticks, preload_queries=preload,
-                       config=cfg)
-    a = m.asarrays()
-    return float(a["units_of_work"].mean()), float(np.mean(a["latency"])), m
+def _uow(kind, ticks=90, preload=3000, cfg=CFG, scen="uniform_normal",
+         **router_kw):
+    exp = Experiment(
+        router=RouterSpec(kind, grid_size=G, history_seed=1, **router_kw),
+        scenario=ScenarioSpec(scen, ticks=ticks, preload_queries=preload,
+                              query_burst=500),
+        engine=cfg)
+    res = run(exp)
+    a = res.asarrays()
+    return float(a["units_of_work"].mean()), float(np.mean(a["latency"])), \
+        res.metrics
 
 
 def test_swarm_beats_history_grid_2x():
     """Paper §6.1: ≥200 % units-of-work improvement over the
     history-based static grid; lower latency."""
-    base = TwitterLikeSource(seed=1)
-    hist = StaticHistoryRouter(G, M, base.sample_points(4000),
-                               base.sample_queries(2000), rounds=20)
-    u_hist, l_hist, _ = _uow(hist)
-    u_swarm, l_swarm, _ = _uow(SwarmRouter(G, M, beta=8))
+    u_hist, l_hist, _ = _uow("static_history")
+    u_swarm, l_swarm, _ = _uow("swarm", beta=8)
     assert u_swarm > 2.0 * u_hist, (u_swarm, u_hist)
     assert l_swarm < l_hist / 2.0, (l_swarm, l_hist)
 
 
 def test_swarm_beats_uniform_grid():
-    u_uni, l_uni, _ = _uow(StaticUniformRouter(G, M), ticks=120)
-    u_swarm, l_swarm, _ = _uow(SwarmRouter(G, M, beta=8), ticks=120)
+    u_uni, l_uni, _ = _uow("static_uniform", ticks=120)
+    u_swarm, l_swarm, _ = _uow("swarm", beta=8, ticks=120)
     assert u_swarm > u_uni
     assert l_swarm < l_uni
 
@@ -43,11 +45,13 @@ def test_swarm_beats_uniform_grid():
 def test_replicated_memory_wall():
     """Fig 11: Replicated becomes infeasible at high query counts while
     the partitioned systems survive."""
+    # wall between the regimes: Replicated holds all ~3.5k queries on
+    # every machine; the partitioned systems peak near 2k per machine
     small = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20000,
-                         mem_queries=2000)
-    _, _, m_rep = _uow(ReplicatedRouter(M, G), cfg=small)
+                         mem_queries=2500)
+    _, _, m_rep = _uow("replicated", cfg=small)
     assert m_rep.infeasible
-    _, _, m_swarm = _uow(SwarmRouter(G, M, beta=8), cfg=small)
+    _, _, m_swarm = _uow("swarm", beta=8, cfg=small)
     assert not m_swarm.infeasible
 
 
@@ -70,9 +74,7 @@ def test_swarm_survives_machine_failure():
 def test_statistics_traffic_decentralized_vs_centralized():
     """Fig 20: SWARM ships 2 scalars/machine; a centralized (AQWA-style)
     scheme ships 5 stats per *cell*."""
-    r = SwarmRouter(G, M, beta=8)
-    src = scenario("none", horizon=10)
-    m = run_experiment(r, src, ticks=10, preload_queries=500, config=CFG)
+    _, _, m = _uow("swarm", beta=8, ticks=10, preload=500)
     per_round = np.asarray(m.wire_bytes)
     per_round = per_round[per_round > 0]
     centralized = G * G * 5 * 8   # 5 float64 stats per cell
@@ -83,6 +85,6 @@ def test_statistics_traffic_decentralized_vs_centralized():
 def test_backpressure_throttles_overload():
     tiny = EngineConfig(num_machines=M, cap_units=1e3, lambda_max=20000,
                         mem_queries=100_000)
-    _, _, m = _uow(StaticUniformRouter(G, M), cfg=tiny, ticks=60)
+    _, _, m = _uow("static_uniform", cfg=tiny, ticks=60)
     inj = np.asarray(m.injected, float)
     assert inj[-1] < 20000  # reduced below the source ceiling
