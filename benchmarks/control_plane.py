@@ -1,0 +1,156 @@
+"""Control-plane throughput: the Algorithm-2 round close and the
+batched round planner, NumPy reference plane vs jit-fused JAX plane.
+
+States are produced *organically*: a Swarm at grid G is driven through
+churn rounds of a moving hotspot with forced rebalancing, so the
+partition table reaches the steady state the protocol actually lives in
+— partition ids are never reused (§5.2 chains may reference them), so
+``n_alloc`` and the capacity bank keep growing while the live set stays
+near the machine count.  The NumPy plane's round close is the
+pre-refactor reference (whole capacity bank); the JAX plane folds only
+the live subset through ``kernels/stats_update`` — the speedup column
+is exactly the win of making the round an array program over live
+state.  ``BENCH_control.json`` records the matrix plus the multi-pair
+convergence experiment (rounds until machine-cost CV < threshold for
+``max_pairs`` 1 vs 4).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import Swarm, planner
+from repro.streaming import get_plane
+from repro.streaming.baselines import force_rebalance_round
+
+from .common import emit
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_control.json")
+DECAY = 0.5
+
+
+def _churned_swarm(g: int, m: int, rounds: int, seed: int = 0) -> Swarm:
+    """Drive a Swarm through ``rounds`` of moving-hotspot churn, with
+    the protocol's background merging (§4.3.1) keeping the live set
+    compact while retired ids accumulate — the long-run steady state."""
+    rng = np.random.default_rng(seed)
+    sw = Swarm(g, m, decay=1.0, beta=2)
+    for i in range(rounds):
+        cx, cy = 0.4 + 0.4 * np.cos(i / 7.0), 0.4 + 0.4 * np.sin(i / 7.0)
+        pts = np.concatenate([
+            rng.uniform(0, 1, (500, 2)),
+            np.clip(rng.normal((cx, cy), 0.05, (3000, 2)), 0, 0.999),
+        ]).astype(np.float32)
+        sw.ingest_points(pts)
+        qc = np.clip(rng.normal((cx, cy), 0.05, (100, 2)), 0, 0.97)
+        sw.ingest_queries(np.concatenate([qc, qc + 0.02], 1).astype(np.float32))
+        force_rebalance_round(sw)
+        sw.merge_adjacent()
+    return sw
+
+
+def _time(fn, repeats: int, setup=None) -> float:
+    if setup:
+        setup()
+    fn()                       # warmup (jit compile for the JAX plane)
+    best = np.inf
+    for _ in range(repeats):
+        if setup:
+            setup()
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bench_state(sw: Swarm, repeats: int) -> dict:
+    live = sw.index.parts.live_ids()
+    row = {"machines": sw.m, "grid": sw.g, "live": int(len(live)),
+           "n_alloc": int(sw.index.parts.n_alloc),
+           "capacity": int(sw.index.parts.capacity)}
+    rows0, cols0 = sw.stats.rows.copy(), sw.stats.cols.copy()
+
+    def restore():
+        sw.stats.rows[:] = rows0
+        sw.stats.cols[:] = cols0
+
+    for name in ("numpy", "jax"):
+        plane = get_plane(name)
+        t_close = _time(lambda: plane.close_round(sw.stats, DECAY, live),
+                        repeats, setup=restore)
+        row[f"{name}_close_ms"] = t_close * 1e3
+        restore()
+        plane.close_round(sw.stats, DECAY, live)   # planner sees closed stats
+
+        def plan():
+            agg = planner.collect(sw.stats, sw.index.parts, sw.m,
+                                  grid_size=sw.g, cost_fn=sw.cost_fn)
+            planner.plan_round(sw.stats, agg, sw.index.parts, max_pairs=4,
+                               cost_fn=sw.cost_fn, plane=plane)
+        t_plan = _time(plan, repeats)
+        row[f"{name}_plan_ms"] = t_plan * 1e3
+        restore()
+        emit(f"control/{name}/close/live={row['live']}", t_close * 1e6,
+             f"cap={row['capacity']} ms={t_close * 1e3:.3f}")
+        emit(f"control/{name}/plan/live={row['live']}", t_plan * 1e6,
+             f"pairs<=4 ms={t_plan * 1e3:.3f}")
+    row["close_speedup"] = row["numpy_close_ms"] / row["jax_close_ms"]
+    row["plan_speedup"] = row["numpy_plan_ms"] / row["jax_plan_ms"]
+    emit(f"control/summary/live={row['live']}", 0.0,
+         f"jax_vs_numpy_close={row['close_speedup']:.2f}x "
+         f"plan={row['plan_speedup']:.2f}x")
+    return row
+
+
+def rounds_to_balance(max_pairs: int, *, g: int = 64, m: int = 16,
+                      thresh: float = 0.25, max_rounds: int = 60,
+                      seed: int = 0) -> int:
+    """Rounds until machine-cost CV < ``thresh`` under a fixed corner
+    hotspot.  This is the acceptance scenario for multi-pair
+    rebalancing — ``tests/test_planner.py`` pins k=4 < k=1 on the same
+    helper so the recorded artifact and the test can't drift apart."""
+    rng = np.random.default_rng(seed)
+    sw = Swarm(g, m, decay=1.0, beta=2, max_pairs=max_pairs)
+    for i in range(max_rounds):
+        pts = np.concatenate([
+            rng.uniform(0, 1, (1000, 2)),
+            rng.uniform(0, 0.2, (6000, 2)),
+        ]).astype(np.float32)
+        sw.ingest_points(pts)
+        qc = rng.uniform(0, 0.2, (200, 2)).astype(np.float32)
+        sw.ingest_queries(np.concatenate([qc, qc + 0.02], 1))
+        force_rebalance_round(sw)
+        loads = sw.machine_loads()
+        if float(np.std(loads) / (np.mean(loads) + 1e-9)) < thresh:
+            return i + 1
+    return max_rounds
+
+
+def _convergence(g: int, m: int, rounds: int, thresh: float = 0.25) -> dict:
+    out = {"machines": m, "grid": g, "threshold": thresh}
+    for k in (1, 4):
+        taken = rounds_to_balance(k, g=g, m=m, thresh=thresh,
+                                  max_rounds=rounds)
+        out[f"rounds_k{k}"] = taken
+        emit(f"control/convergence/max_pairs={k}", 0.0,
+             f"rounds_to_cv<{thresh}={taken}")
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    repeats = 3 if smoke else 7
+    g = 128 if smoke else 512
+    states = ((16, 30),) if smoke else ((16, 60), (64, 300), (64, 800))
+    rows = [_bench_state(_churned_swarm(g, m, churn), repeats)
+            for m, churn in states]
+    conv = _convergence(64, 16, rounds=12 if smoke else 60)
+    result = {"grid": g, "smoke": smoke, "close_decay": DECAY,
+              "results": rows, "convergence": conv}
+    if not smoke:
+        with open(OUT_JSON, "w") as f:
+            json.dump(result, f, indent=1)
+    return result

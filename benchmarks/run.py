@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
   roofline per-cell three-term analysis       (benchmarks/roofline.py)
   queries  query×persistence workload matrix  (benchmarks/queries_mixed.py)
   dataplane NumPy vs JAX plane throughput     (benchmarks/dataplane.py)
+  control  round-close + planner throughput   (benchmarks/control_plane.py)
 
 ``--data-plane`` selects the routing data plane for the experiment
 sections; a comma list (e.g. ``--data-plane=numpy,jax``) repeats the
@@ -24,15 +25,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: capability,hotspots,utilization,"
                          "overheads,stats_network,kernels,roofline,queries,"
-                         "dataplane")
+                         "dataplane,control")
     ap.add_argument("--smoke", action="store_true",
                     help="short timelines (CI sanity run)")
     ap.add_argument("--data-plane", default="numpy",
                     help="routing data plane(s), comma list: numpy,jax")
     args = ap.parse_args()
-    from . import (capability, common, dataplane, hotspots, kernels,
-                   overheads, queries_mixed, roofline, stats_network,
-                   utilization)
+    from . import (capability, common, control_plane, dataplane, hotspots,
+                   kernels, overheads, queries_mixed, roofline,
+                   stats_network, utilization)
     sections = {
         "capability": capability.run,
         "hotspots": hotspots.run,
@@ -43,6 +44,7 @@ def main() -> None:
         "roofline": roofline.run,
         "queries": queries_mixed.run,
         "dataplane": dataplane.run,
+        "control": control_plane.run,
     }
     # sections whose results depend on the routing data plane; the rest
     # run once regardless of how many planes were requested

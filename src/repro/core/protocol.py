@@ -1,21 +1,29 @@
-"""The SWARM protocol: ties index, statistics, cost model and balancer
-into the per-round control loop of §4.3 (Figs 8–10).
+"""The SWARM protocol: ties index, statistics, cost model, planner and
+balancer into the per-round control loop of §4.3 (Figs 8–10).
 
-The object here *is* the distributed protocol run as one logical program:
-ingest touches only local collectors (executor-side), `run_round`
-performs the Coordinator exchange — two scalars per machine — then the
-FSM decision, the m_H→m_L reduction, and the latch-free plan install.
-The streaming engine (streaming/engine.py) drives it against a simulated
-cluster; the MoE placement layer (distributed/moe_placement.py) drives
-the very same object over experts instead of spatial partitions.
+The object here *is* the distributed protocol run as one logical
+program, but since the array-native control-plane refactor it is a thin
+orchestrator: ingest touches only local collectors (executor-side), and
+``run_round`` delegates every decision to the pure, batched
+``core.planner`` — round close → report collection → FSM → multi-pair
+reduction planning — then applies the returned :class:`~.planner.RoundPlan`
+(partition moves, splits, latch-free plan install).  The heavy array
+math (prefix-sum round close, batched split evaluation) can be served
+by a pluggable ``streaming.planes.DataPlane``; the default (``None``)
+is the NumPy reference path.
+
+The streaming engine (streaming/engine.py) drives this object against a
+simulated cluster; the MoE placement layer (distributed/moe_placement.py)
+drives the very same machinery over experts instead of spatial
+partitions.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
-from . import balancer, cost_model, geometry, integrity
+from . import balancer, cost_model, geometry, integrity, planner
 from . import statistics as S
 from .global_index import GlobalIndex
 
@@ -26,14 +34,15 @@ class RoundReport:
     decision: int
     r_s: float
     costs: np.ndarray | None = None
-    m_h: int = -1
+    m_h: int = -1                     # first transfer's pair (legacy view)
     m_l: int = -1
-    action: str = "none"              # none | subset | split
-    moved_pids: tuple[int, ...] = ()
+    action: str = "none"              # none | subset | split (first transfer)
+    moved_pids: tuple[int, ...] = ()  # all transfers, concatenated
     new_pids: tuple[int, ...] = ()
     wire_bytes: int = 0               # Coordinator traffic this round (Fig 20)
     moved_tuples: int = 0             # stored tuples re-homed by plan changes
     data_bytes: int = 0               # …billed as wire bytes (STORED mode)
+    transfers: tuple[planner.TransferRecord, ...] = ()
 
     @property
     def did_rebalance(self) -> bool:
@@ -48,7 +57,8 @@ class Swarm:
     def __init__(self, grid_size: int, num_machines: int, *, beta: int = 20,
                  decay: float = 0.5, window_rounds: int = 4,
                  use_binary_search: bool = False, smoothing: float = 0.0,
-                 cost_fn=None, seed: int = 0):
+                 cost_fn=None, seed: int = 0, max_pairs: int = 1,
+                 data_plane=None):
         self.g = grid_size
         self.m = num_machines
         self.beta = beta
@@ -63,6 +73,13 @@ class Swarm:
         # Pluggable partition-cost model.  Default: the paper's product
         # (Eqn 5).  balancer.make_rate_cost() is the beyond-paper model.
         self.cost_fn = cost_fn or balancer.product_cost
+        # Concurrent m_H→m_L pairs per round (DESIGN.md §5).  1 is the
+        # paper's single-reduction round; k>1 converges O(k)× faster
+        # under cluster-wide skew.
+        self.max_pairs = max_pairs
+        # Optional streaming.planes.DataPlane serving the round-close /
+        # split-evaluation array math; None = NumPy reference.
+        self.plane = data_plane
         self.index = GlobalIndex.initialize(grid_size, num_machines)
         self.stats = S.StatsState.zeros(self.index.parts.capacity, grid_size)
         self.decision = balancer.DecisionState()
@@ -103,24 +120,30 @@ class Swarm:
 
     def ingest_queries(self, rects: np.ndarray):
         """Route float query rects; update collectors of every overlapped
-        partition with the *clipped* rectangle (§4.2.2).  Returns the
-        list of (pid, owner) per query (a query may hit several)."""
+        partition with the *clipped* rectangle (§4.2.2).
+
+        Fully vectorized: one partitions×queries overlap test, one
+        batched clip, one collector scatter — no per-query loop.
+        Returns ``(query_idx, pids, owners)`` arrays, one entry per
+        (query, overlapped partition) pair, ordered by query then pid.
+        """
         r0, c0, r1, c1 = geometry.rects_to_cells(rects, self.g)
         self._sync_capacity()
-        out = []
         p = self.index.parts
-        for i in range(len(rects)):
-            pids = self.index.query_overlap_vectorized(int(r0[i]), int(c0[i]),
-                                                       int(r1[i]), int(c1[i]))
-            if len(pids) == 0:
-                out.append([])
-                continue
-            qr0, qc0, qr1, qc1 = geometry.clip_box(
-                r0[i], c0[i], r1[i], c1[i],
-                p.r0[pids], p.c0[pids], p.r1[pids], p.c1[pids])
-            S.ingest_queries(self.stats, pids, qr0, qc0, qr1, qc1)
-            out.append([(int(q), int(p.owner[q])) for q in pids])
-        return out
+        n = p.n_alloc
+        if len(rects) == 0 or n == 0:
+            empty = np.zeros(0, np.int64)
+            return empty, empty, empty
+        hit = p.alive[:n][None, :] & geometry.boxes_overlap(
+            r0[:, None], c0[:, None], r1[:, None], c1[:, None],
+            p.r0[:n][None, :], p.c0[:n][None, :],
+            p.r1[:n][None, :], p.c1[:n][None, :])
+        qi, pids = np.nonzero(hit)
+        qr0, qc0, qr1, qc1 = geometry.clip_box(
+            r0[qi], c0[qi], r1[qi], c1[qi],
+            p.r0[pids], p.c0[pids], p.r1[pids], p.c1[pids])
+        S.ingest_queries(self.stats, pids, qr0, qc0, qr1, qc1)
+        return qi, pids, p.owner[pids]
 
     def ingest_snapshot_probes(self, rects: np.ndarray):
         """One-shot snapshot probes (repro.queries SNAPSHOT model).
@@ -144,24 +167,51 @@ class Swarm:
         return pids, owners
 
     # ------------------------------------------------------------------
-    # Coordinator round (Figs 8–10)
+    # Coordinator round (Figs 8–10): close → collect → decide → apply
     # ------------------------------------------------------------------
     def run_round(self) -> RoundReport:
         self.round_no += 1
-        S.close_round(self.stats, self.decay)
-        reports = self._collect_reports()
-        r_s = cost_model.total_rate(reports)
+        self._close_stats()
+        agg = self._collect()
         per_machine = (cost_model.CostReport.WIRE_BYTES_STORED
                        if self.store is not None and self.data_weight > 0
                        else cost_model.CostReport.WIRE_BYTES)
-        wire = len(reports) * per_machine
-        self.decision, decision = balancer.step_decision(self.decision, r_s, self.beta)
-        rep = RoundReport(self.round_no, decision, r_s, wire_bytes=wire)
+        # only live executors report to the Coordinator: crash-stopped
+        # machines send nothing (Fig 20 accounting)
+        reporting = self.m - sum(1 for d in self.dead if 0 <= d < self.m)
+        wire = reporting * per_machine
+        self.decision, decision = balancer.step_decision(self.decision,
+                                                         agg.r_s, self.beta)
+        rep = RoundReport(self.round_no, decision, agg.r_s, wire_bytes=wire)
         if decision == balancer.REBALANCE:
-            self._rebalance(reports, r_s, rep)
+            plan = planner.plan_round(
+                self.stats, agg, self.index.parts, dead=self.dead,
+                max_pairs=self.max_pairs,
+                use_binary_search=self.use_binary_search,
+                cost_fn=self.cost_fn, plane=self.plane)
+            self._apply_plan(plan, rep)
         integrity.expire_chains(self.index.parts, self.round_no, self.window_rounds)
         self._finish_round(rep)
         return rep
+
+    def _close_stats(self) -> None:
+        """Algorithm-2 round close, served by the data plane when one is
+        attached (prefix-sum fold over the live partitions)."""
+        if self.plane is not None:
+            self.plane.close_round(self.stats, self.decay,
+                                   self.index.parts.live_ids())
+        else:
+            S.close_round(self.stats, self.decay)
+
+    def _collect(self) -> planner.RoundAggregate:
+        """Batched report collection (planner.collect) over live state."""
+        if self.store is not None:
+            self.store.ensure(self.index.parts.capacity)
+        return planner.collect(
+            self.stats, self.index.parts, self.m, grid_size=self.g,
+            smoothing=self.smoothing, cost_fn=self.cost_fn,
+            store_counts=self.store.counts if self.store is not None else None,
+            data_weight=self.data_weight)
 
     def _finish_round(self, rep: RoundReport) -> None:
         """Fold the data-migration accounting (includes emergency
@@ -171,73 +221,35 @@ class Swarm:
             rep.data_bytes = rep.moved_tuples * self.store.bytes_per_tuple
         self.reports.append(rep)
 
-    # ------------------------------------------------------------------
-    def _collect_reports(self):
-        p = self.index.parts
-        live = p.live_ids()
-        s = self.smoothing
-        n = self.stats.rows[S.N, live, p.r1[live]] + s
-        q = self.stats.rows[S.Q, live, p.r1[live]] + s
-        r = self.stats.rows[S.R, live, p.r1[live]] + s
-        d = np.zeros(len(live), np.float64)
-        if self.store is not None:
-            self.store.ensure(p.capacity)
-            d = self.store.counts[live]
-            n = cost_model.effective_n(n, d, self.data_weight)
-        area = (geometry.box_area(p.r0[live], p.c0[live], p.r1[live], p.c1[live])
-                .astype(np.float64) / (self.g * self.g))
-        self._live_cache = (live, n, q, r, area)
-        r_s = float(r.sum())
-        part_cost = self.cost_fn(n, q, r, area, r_s)
-        # wire format is unchanged: two scalars per machine — Num(C(m))
-        # (scaled so Num/R(S) = Σ C(p)) and R(m); STORED adds D(m).
-        reports = []
-        for m in range(self.m):
-            sel = p.owner[live] == m
-            reports.append(cost_model.CostReport(
-                m, float(part_cost[sel].sum()) * max(r_s, 1.0),
-                float(r[sel].sum()), float(d[sel].sum())))
-        return reports
-
     def mark_dead(self, machine: int) -> None:
         """Crash-stop: the machine is excluded from m_H/m_L selection."""
         self.dead.add(int(machine))
 
-    def _rebalance(self, reports, r_s: float, rep: RoundReport) -> None:
-        order, costs, _ = cost_model.rank_machines(reports)
-        rep.costs = costs
-        order = [m for m in map(int, order) if m not in self.dead]
-        if len(order) < 2:
-            return
-        m_l = int(order[-1])
-        live, n, q, r, area = self._live_cache
-        part_cost = np.asarray(self.cost_fn(n, q, r, area, r_s), np.float64)
-        p = self.index.parts
-        for m_h in order[:-1]:
-            if m_h == m_l or costs[m_h] <= costs[m_l]:
-                break
-            sel = p.owner[live] == m_h
-            ids, cst = live[sel], part_cost[sel]
-            if len(ids) == 0:
+    # ------------------------------------------------------------------
+    # Plan application (the only mutating half of the round)
+    # ------------------------------------------------------------------
+    def _apply_plan(self, plan: planner.RoundPlan, rep: RoundReport) -> None:
+        rep.costs = plan.costs
+        records = []
+        for t in plan.transfers:
+            if t.plan.kind == "subset":
+                new = [self._move_partition(pid, t.m_l)
+                       for pid in t.plan.subset]
+                records.append(planner.TransferRecord(
+                    t.m_h, t.m_l, "subset", tuple(t.plan.subset), tuple(new)))
+            elif t.plan.kind == "split":
+                new = self._split_partition(t.plan.split, t.m_h, t.m_l)
+                records.append(planner.TransferRecord(
+                    t.m_h, t.m_l, "split", (t.plan.split.pid,), tuple(new)))
+            else:
                 continue
-            boxes = {int(k): (int(p.r0[k]), int(p.c0[k]), int(p.r1[k]), int(p.c1[k]))
-                     for k in ids}
-            plan = balancer.find_workload_reduction(
-                self.stats, ids, cst, boxes, float(costs[m_h]), float(costs[m_l]),
-                r_s, self.use_binary_search, self.cost_fn)
-            if plan.kind == "subset":
-                new = [self._move_partition(pid, m_l) for pid in plan.subset]
-                rep.action, rep.m_h, rep.m_l = "subset", m_h, m_l
-                rep.moved_pids, rep.new_pids = tuple(plan.subset), tuple(new)
-                self.index.apply_changes(new)
-                return
-            if plan.kind == "split":
-                new = self._split_partition(plan.split, m_h, m_l)
-                rep.action, rep.m_h, rep.m_l = "split", m_h, m_l
-                rep.moved_pids, rep.new_pids = (plan.split.pid,), tuple(new)
-                self.index.apply_changes(new)
-                return
-        # every m_H candidate failed → no action this round
+            self.index.apply_changes(records[-1].new_pids)
+        if records:
+            rep.transfers = tuple(records)
+            rep.action = records[0].action
+            rep.m_h, rep.m_l = records[0].m_h, records[0].m_l
+            rep.moved_pids = tuple(p for r in records for p in r.moved_pids)
+            rep.new_pids = tuple(p for r in records for p in r.new_pids)
 
     def _move_partition(self, pid: int, m_l: int) -> int:
         """Whole-partition move: mint a new id owned by m_L, chain to the
@@ -294,42 +306,62 @@ class Swarm:
     def merge_adjacent(self) -> int:
         """Merge any two same-owner partitions forming a rectangle.
 
+        Sorted edge-sweep: candidates are found by lexsorting the live
+        boxes by (orthogonal span, owner, axis start) and testing only
+        *consecutive* rows — O(P log P) per pass instead of the old
+        O(P²) rescan.  Each pass merges a disjoint pair set, then
+        re-sweeps so cascaded merges (strip → block) still happen.
+
         Returns #merges.  Merged stats: exact for N/R along both axes;
         queries spanning the old boundary are counted once per side
         (slight overcount that fresh rounds wash out — documented)."""
         merges = 0
-        p = self.index.parts
         changed = []
-        done = False
-        while not done:
-            done = True
-            live = p.live_ids()
-            for i in live:
-                for j in live:
-                    if i >= j or p.owner[i] != p.owner[j]:
-                        continue
-                    new = self._try_merge(int(i), int(j))
-                    if new is not None:
-                        changed.append(new)
-                        merges += 1
-                        done = False
-                        break
-                if not done:
-                    break
+        while True:
+            pairs = self._merge_candidates()
+            if not pairs:
+                break
+            for a, b, row_adj in pairs:
+                changed.append(self._do_merge(a, b, row_adj))
+                merges += 1
         if changed:
             self.index.apply_changes(changed)
         return merges
 
-    def _try_merge(self, a: int, b: int):
+    def _merge_candidates(self) -> list[tuple[int, int, bool]]:
+        """One sweep: disjoint same-owner pairs forming rectangles."""
         p = self.index.parts
-        ar0, ac0, ar1, ac1 = p.r0[a], p.c0[a], p.r1[a], p.c1[a]
-        br0, bc0, br1, bc1 = p.r0[b], p.c0[b], p.r1[b], p.c1[b]
-        row_adj = (ac0 == bc0 and ac1 == bc1 and (ar1 + 1 == br0 or br1 + 1 == ar0))
-        col_adj = (ar0 == br0 and ar1 == br1 and (ac1 + 1 == bc0 or bc1 + 1 == ac0))
-        if not (row_adj or col_adj):
-            return None
-        new = p.allocate(int(min(ar0, br0)), int(min(ac0, bc0)), int(max(ar1, br1)),
-                         int(max(ac1, bc1)), owner=int(p.owner[a]), parent=a,
+        live = p.live_ids()
+        out: list[tuple[int, int, bool]] = []
+        used: set[int] = set()
+        for row_adj in (True, False):
+            if row_adj:  # same col span, stacked rows
+                keys = (p.r0[live], p.owner[live], p.c1[live], p.c0[live])
+            else:        # same row span, side-by-side cols
+                keys = (p.c0[live], p.owner[live], p.r1[live], p.r0[live])
+            order = live[np.lexsort(keys)]
+            for k in range(len(order) - 1):
+                i, j = int(order[k]), int(order[k + 1])
+                if i in used or j in used or p.owner[i] != p.owner[j]:
+                    continue
+                if row_adj:
+                    ok = (p.c0[i] == p.c0[j] and p.c1[i] == p.c1[j]
+                          and p.r1[i] + 1 == p.r0[j])
+                else:
+                    ok = (p.r0[i] == p.r0[j] and p.r1[i] == p.r1[j]
+                          and p.c1[i] + 1 == p.c0[j])
+                if ok:
+                    out.append((i, j, row_adj))
+                    used.update((i, j))
+        return out
+
+    def _do_merge(self, a: int, b: int, row_adj: bool) -> int:
+        p = self.index.parts
+        ar0, ac0 = p.r0[a], p.c0[a]
+        br0, bc0 = p.r0[b], p.c0[b]
+        new = p.allocate(int(min(ar0, br0)), int(min(ac0, bc0)),
+                         int(max(p.r1[a], p.r1[b])), int(max(p.c1[a], p.c1[b])),
+                         owner=int(p.owner[a]), parent=a,
                          prev_machine=int(p.owner[a]), birth_round=self.round_no)
         self._sync_capacity()
         st = self.stats
@@ -379,10 +411,4 @@ class Swarm:
     # Convenience -------------------------------------------------------
     def machine_loads(self) -> np.ndarray:
         """Current C(m) per machine (for monitoring/benchmarks)."""
-        reports = self._collect_reports_readonly()
-        costs, _ = cost_model.machine_costs(reports)
-        return costs
-
-    def _collect_reports_readonly(self):
-        reports = self._collect_reports()
-        return reports
+        return self._collect().costs

@@ -1,4 +1,5 @@
-from .ops import close_round
+from .ops import close_round, close_round_inputs, close_round_xla
 from .ref import close_round_ref
 
-__all__ = ["close_round", "close_round_ref"]
+__all__ = ["close_round", "close_round_inputs", "close_round_ref",
+           "close_round_xla"]

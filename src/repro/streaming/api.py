@@ -31,6 +31,7 @@ from typing import TYPE_CHECKING, Protocol, Union, runtime_checkable
 
 import numpy as np
 
+from ..core.planner import TransferRecord
 from ..core.protocol import RoundReport
 from ..queries import WorkloadSpec
 
@@ -114,26 +115,35 @@ class RoutingDecision:
 @dataclass(frozen=True)
 class RoundOutcome:
     """Typed result of one load-balancing round (replaces the old
-    mutable ``RoundInfo``)."""
+    mutable ``RoundInfo``).
+
+    ``transfers`` carries every m_H→m_L reduction the round applied —
+    one per concurrently rebalanced machine pair since the multi-pair
+    planner (``core.planner``); ``action`` keeps the first transfer's
+    kind for the legacy single-pair view.
+    """
 
     wire_bytes: int = 0        # coordinator statistics traffic (Fig 20)
     migration_bytes: int = 0   # moved queries + (STORED) moved data bytes
     moved_queries: int = 0
     moved_tuples: int = 0      # stored tuples re-homed this round
     action: str = "none"
+    transfers: tuple[TransferRecord, ...] = ()
 
     @classmethod
     def from_report(cls, rep: RoundReport, *, moved_queries: int = 0,
                     bytes_per_query: int = 0) -> "RoundOutcome":
         """Consume a typed ``core.protocol.RoundReport``: fold the
-        coordinator wire bytes, STORED data shipment and the caller's
-        moved-query count into one engine-facing outcome."""
+        coordinator wire bytes, STORED data shipment, the transfer set
+        and the caller's moved-query count into one engine-facing
+        outcome."""
         return cls(
             wire_bytes=rep.wire_bytes,
             migration_bytes=rep.data_bytes + moved_queries * bytes_per_query,
             moved_queries=moved_queries,
             moved_tuples=rep.moved_tuples,
             action=rep.action,
+            transfers=rep.transfers,
         )
 
 

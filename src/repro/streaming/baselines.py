@@ -124,9 +124,9 @@ class _Base:
                           retention=1.0 if wl.stored else wl.retention)
 
     def _probe_cost(self, q_resident):
-        q = np.asarray(q_resident, np.float64)
-        pressure = 1.0 + np.maximum(0.0, (q - self.q_cache) / self.q_cache)
-        return self.kappa_probe * np.log2(1.0 + q) * pressure
+        from .planes import probe_term
+        return probe_term(np, np.asarray(q_resident, np.float64),
+                          self.kappa_probe, self.q_cache)
 
     # -- queries ----------------------------------------------------------
     def register_queries(self, rects: np.ndarray) -> None:
@@ -350,13 +350,20 @@ class StaticHistoryRouter(_GridRouter):
 
 class SwarmRouter(_GridRouter):
     """The live protocol.  Tuple/probe batches also feed SWARM's
-    collectors; every engine round triggers one load-balancing round."""
+    collectors; every engine round triggers one load-balancing round.
+    The router's data plane also serves the protocol's control-plane
+    math (round close, batched split evaluation), and ``max_pairs``
+    selects how many m_H→m_L transfers one round may plan (1 = the
+    paper's single reduction)."""
 
     def __init__(self, grid_size: int, num_machines: int, *, beta: int = 20,
-                 decay: float = 0.5, use_binary_search: bool = False, **kw):
+                 decay: float = 0.5, use_binary_search: bool = False,
+                 max_pairs: int = 1, **kw):
         self.swarm = Swarm(grid_size, num_machines, beta=beta, decay=decay,
-                           use_binary_search=use_binary_search)
+                           use_binary_search=use_binary_search,
+                           max_pairs=max_pairs)
         super().__init__(self.swarm.index, num_machines, **kw)
+        self.swarm.plane = self.plane
         if self.store is not None:
             wl = self.workload
             self.swarm.attach_store(
@@ -407,14 +414,16 @@ class SwarmRouter(_GridRouter):
 def force_rebalance_round(sw: Swarm):
     """Run one SWARM round with the decision forced to REBALANCE (used to
     build the history-balanced static grid and by tests)."""
-    from ..core import statistics as S
-    from ..core import cost_model
+    from ..core import planner
     from ..core.protocol import RoundReport
     sw.round_no += 1
-    S.close_round(sw.stats, sw.decay)
-    reports = sw._collect_reports()
-    r_s = cost_model.total_rate(reports)
-    rep = RoundReport(sw.round_no, balancer.REBALANCE, r_s)
-    sw._rebalance(reports, r_s, rep)
+    sw._close_stats()
+    agg = sw._collect()
+    rep = RoundReport(sw.round_no, balancer.REBALANCE, agg.r_s)
+    plan = planner.plan_round(
+        sw.stats, agg, sw.index.parts, dead=sw.dead, max_pairs=sw.max_pairs,
+        use_binary_search=sw.use_binary_search, cost_fn=sw.cost_fn,
+        plane=sw.plane)
+    sw._apply_plan(plan, rep)
     sw._finish_round(rep)
     return rep

@@ -56,6 +56,7 @@ class Metrics:
     wire_bytes: list = field(default_factory=list)
     migration_bytes: list = field(default_factory=list)
     moved_tuples: list = field(default_factory=list)
+    transfers: list = field(default_factory=list)     # rebalance pairs/tick
     snapshots: list = field(default_factory=list)     # one-shot probes/tick
     resident_tuples: list = field(default_factory=list)  # max per machine
     injected: list = field(default_factory=list)
@@ -176,6 +177,7 @@ class StreamingEngine:
         mtr.wire_bytes.append(outcome.wire_bytes)
         mtr.migration_bytes.append(outcome.migration_bytes)
         mtr.moved_tuples.append(outcome.moved_tuples)
+        mtr.transfers.append(len(outcome.transfers))
         mtr.snapshots.append(n_snap)
         mtr.resident_tuples.append(d_max)
         mtr.injected.append(n)

@@ -38,6 +38,21 @@ from .sources import (QUERY_SIDE, ScenarioSource, TwitterLikeSource,
 ROUTER_KINDS = ("replicated", "static_uniform", "static_history", "swarm")
 
 
+def _nondefault_fields(spec) -> str:
+    """``"a=1,b=2"`` for every dataclass field differing from its
+    default — the label suffix that keeps swept specs distinguishable
+    (and default specs' labels unchanged)."""
+    import dataclasses
+    parts = []
+    for f in dataclasses.fields(spec):
+        if f.default is dataclasses.MISSING:
+            continue
+        v = getattr(spec, f.name)
+        if v != f.default:
+            parts.append(f"{f.name}={v}")
+    return ",".join(parts)
+
+
 def workload_query_side(workload: WorkloadSpec | None) -> float:
     """Continuous-query rectangle side for a workload (kNN routes by its
     much smaller influence region)."""
@@ -54,6 +69,7 @@ class RouterSpec:
     grid_size: int = 64
     beta: int = 8
     decay: float = 0.5
+    max_pairs: int = 1               # concurrent m_H→m_L pairs per round
     history_points: int = 4000       # static_history sample sizes
     history_queries: int = 2000
     history_rounds: int = 20
@@ -81,7 +97,8 @@ class RouterSpec:
                                        rounds=self.history_rounds, **kw)
         if self.kind == "swarm":
             return SwarmRouter(self.grid_size, num_machines, beta=self.beta,
-                               decay=self.decay, **kw)
+                               decay=self.decay, max_pairs=self.max_pairs,
+                               **kw)
         raise ValueError(f"unknown router kind {self.kind!r}; "
                          f"one of {ROUTER_KINDS}")
 
@@ -98,8 +115,9 @@ class ScenarioSpec:
 
     @property
     def key(self) -> str:
+        peak = "" if self.peak == 0.4 else f",peak={self.peak}"
         return (f"{self.name}[{self.ticks}t,{self.preload_queries}q,"
-                f"{self.query_burst}b]")
+                f"{self.query_burst}b{peak}]")
 
     def build(self, *, seed: int = 0,
               workload: WorkloadSpec | None = None) -> ScenarioSource:
@@ -123,8 +141,16 @@ class Experiment:
 
     @property
     def label(self) -> str:
-        return (f"{self.router.kind}/{self.scenario.key}/"
-                f"{self.workload.label}/{self.data_plane}/seed={self.seed}")
+        """Unique within a suite: every non-default router/engine field
+        is folded in, so sweeping e.g. ``max_pairs`` or ``cap_units``
+        cannot silently collide (labels are the result key)."""
+        router = self.router.kind
+        if extra := _nondefault_fields(self.router):
+            router = f"{router}[{extra}]"
+        engine = _nondefault_fields(self.engine)
+        return (f"{router}/{self.scenario.key}/"
+                f"{self.workload.label}/{self.data_plane}/seed={self.seed}"
+                + (f"/engine[{engine}]" if engine else ""))
 
     def with_(self, **changes) -> "Experiment":
         return replace(self, **changes)

@@ -1,25 +1,34 @@
-"""Pluggable data planes: the batched array math behind routing.
+"""Pluggable data planes: the batched array math behind routing *and*
+the control plane's per-round fold.
 
-A :class:`DataPlane` computes the *stateless* per-batch quantities of
-the routing hot path — cell routing (point → partition → owner gathers)
-and the probe/match cost terms of the paper's per-tuple cost model —
-over whole batches.  Routers own all mutable state (indexes, resident
-counts, stores, collectors) and call into the plane; swapping the plane
-changes how the math runs, not what it computes.
+A :class:`DataPlane` computes the *stateless* batched quantities of the
+system: the routing hot path (cell routing, per-tuple cost terms) and,
+since the array-native control-plane refactor, the round's heavy math —
+the Algorithm-2 prefix-sum round close (:meth:`DataPlane.close_round`)
+and the batched §4.3.2 split-candidate evaluation
+(:meth:`DataPlane.split_costs`) consumed by ``core.planner``.  Routers
+and the protocol own all mutable state (indexes, resident counts,
+stores, collectors) and call into the plane; swapping the plane changes
+how the math runs, not what it computes.
 
 Two implementations:
 
 * :class:`NumpyPlane` — the reference path; bit-for-bit the pre-redesign
-  behavior (float64 intermediates, float32 outputs).
+  behavior (float64 intermediates, float32 outputs; whole-bank
+  ``statistics.close_round``).
 * :class:`JaxPlane`   — jit-compiled: routing + cost terms fuse into one
   XLA executable per batch-shape bucket (inputs are padded to powers of
   two so recompilation is O(log N)).  Exact tuple-vs-query match work is
   served by the Pallas kernel packages ``repro.kernels.spatial_match``
-  and ``repro.kernels.knn_match`` (compiled on TPU, their jnp references
-  elsewhere — Pallas interpret mode is correctness-only).
+  and ``repro.kernels.knn_match``; the round close is served by
+  ``repro.kernels.stats_update`` — the Pallas kernel on TPU, its fused
+  blocked-scan XLA twin elsewhere — over the *live* partition subset
+  only (retired/unallocated rows are zero or never read again, so
+  skipping them is exact; the reference closes the whole capacity bank).
 
-``benchmarks/dataplane.py`` records the large-batch speedup of the JAX
-plane over the NumPy plane (``BENCH_dataplane.json``).
+``benchmarks/dataplane.py`` records the large-batch routing speedup of
+the JAX plane (``BENCH_dataplane.json``); ``benchmarks/control_plane.py``
+records the round-close/planner speedup (``BENCH_control.json``).
 """
 from __future__ import annotations
 
@@ -28,7 +37,20 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..core import geometry
+from ..core import geometry, planner
+from ..core import statistics as S
+
+
+def probe_term(mod, q, kappa_probe, q_cache):
+    """The per-tuple index-probe cost with cache-pressure knee (§6):
+    ``κ_probe·log2(1+Q)·(1 + max(0, (Q−q_cache)/q_cache))``.
+
+    The single home of the formula — both planes' fused paths and the
+    replicated router's scalar path call it with ``mod`` = numpy or
+    jax.numpy, so a tuning change cannot silently diverge between the
+    compared systems."""
+    pressure = 1.0 + mod.maximum(0.0, (q - q_cache) / q_cache)
+    return kappa_probe * mod.log2(1.0 + q) * pressure
 
 
 @dataclass(frozen=True)
@@ -90,6 +112,20 @@ class DataPlane:
         ``repro.kernels.knn_match`` semantics."""
         raise NotImplementedError
 
+    # -- control plane (core.planner) ---------------------------------------
+    def close_round(self, stats, decay: float, live) -> None:
+        """Algorithm-2 round close, in place: fold the collectors of
+        every live partition into the maintained statistics and reset
+        them (``core.statistics.close_round`` semantics)."""
+        raise NotImplementedError
+
+    def split_costs(self, stats, pids, boxes, r_s, cost_fn):
+        """Batched split-candidate evaluation for K partitions: stacked
+        (c_lo, c_hi, valid) of shape (K, 2 axes, G) — the cost of each
+        side at every global split position (``core.planner`` consumes
+        the argmin)."""
+        raise NotImplementedError
+
 
 # ---------------------------------------------------------------------------
 # NumPy reference plane
@@ -109,8 +145,7 @@ class NumpyPlane(DataPlane):
         pids, owners = self._route(xy, grid, owner_table)
         if p.tuple_driven:
             q = np.asarray(q_machine, np.float64)[owners]
-            pressure = 1.0 + np.maximum(0.0, (q - p.q_cache) / p.q_cache)
-            probe = p.kappa_probe * np.log2(1.0 + q) * pressure
+            probe = probe_term(np, q, p.kappa_probe, p.q_cache)
             cov = np.minimum(
                 p.query_area / np.maximum(area_frac[pids], 1e-12), 1.0)
             match = p.kappa_match * qres[pids] * cov
@@ -166,6 +201,15 @@ class NumpyPlane(DataPlane):
         part = np.partition(d2, k - 1, axis=1)[:, :k]
         return np.sort(part, axis=1)
 
+    # -- control plane ------------------------------------------------------
+    def close_round(self, stats, decay: float, live) -> None:
+        # reference semantics: the whole capacity bank, exactly as the
+        # pre-refactor control plane did (``live`` is a no-op hint here)
+        S.close_round(stats, decay)
+
+    def split_costs(self, stats, pids, boxes, r_s, cost_fn):
+        return planner.numpy_split_costs(stats, pids, boxes, r_s, cost_fn)
+
 
 # ---------------------------------------------------------------------------
 # JAX plane (jit-fused; Pallas kernel packages for exact match work)
@@ -173,6 +217,13 @@ class NumpyPlane(DataPlane):
 
 def _pad_pow2(n: int) -> int:
     return 1 << max(n - 1, 1).bit_length() if n > 2 else max(n, 1)
+
+
+def _pad64(n: int) -> int:
+    """Round up to a multiple of 64 — finer shape buckets than pow2 for
+    the live-partition subset (its size drifts by a few per round, so
+    a 64-row bucket recompiles rarely while wasting ≤ 63 rows)."""
+    return max(64, -(-n // 64) * 64)
 
 
 class JaxPlane(DataPlane):
@@ -187,13 +238,14 @@ class JaxPlane(DataPlane):
                                   static_argnames=("tuple_driven",))
         self._jit_match = jax.jit(self._match_fn)
         self._jit_probe = jax.jit(self._probe_fn)
+        self._jit_split_terms = jax.jit(self._split_terms_fn)
 
     # -- jit bodies ---------------------------------------------------------
     @staticmethod
     def _route_fn(jnp, xy, grid, owner_table):
-        g = grid.shape[0]
-        col = jnp.clip((xy[:, 0] * g).astype(jnp.int32), 0, g - 1)
-        row = jnp.clip((xy[:, 1] * g).astype(jnp.int32), 0, g - 1)
+        # geometry.points_to_cells is backend-neutral (tracers included),
+        # so both planes share one copy of the cell convention
+        row, col = geometry.points_to_cells(xy, grid.shape[0])
         pids = grid[row, col]
         return pids, owner_table[pids]
 
@@ -204,8 +256,7 @@ class JaxPlane(DataPlane):
         pids, owners = self._route_fn(jnp, xy, grid, owner_table)
         if tuple_driven:
             q = q_machine[owners].astype(jnp.float32)
-            pressure = 1.0 + jnp.maximum(0.0, (q - q_cache) / q_cache)
-            probe = kappa_probe * jnp.log2(1.0 + q) * pressure
+            probe = probe_term(jnp, q, kappa_probe, q_cache)
             cov = jnp.minimum(
                 query_area / jnp.maximum(area_frac[pids], 1e-12), 1.0)
             match = kappa_match * qres[pids] * cov
@@ -216,9 +267,7 @@ class JaxPlane(DataPlane):
 
     def _match_fn(self, xy, grid, qres, area_frac, query_area, kappa_match):
         jnp = self._jnp
-        g = grid.shape[0]
-        col = jnp.clip((xy[:, 0] * g).astype(jnp.int32), 0, g - 1)
-        row = jnp.clip((xy[:, 1] * g).astype(jnp.int32), 0, g - 1)
+        row, col = geometry.points_to_cells(xy, grid.shape[0])
         pids = grid[row, col]
         cov = jnp.minimum(
             query_area / jnp.maximum(area_frac[pids], 1e-12), 1.0)
@@ -311,6 +360,73 @@ class JaxPlane(DataPlane):
             from ..kernels.knn_match import knn_match_ref
             out = knn_match_ref(jnp.asarray(points), jnp.asarray(foci), k)
         return np.asarray(out)
+
+    # -- control plane ------------------------------------------------------
+    def close_round(self, stats, decay: float, live) -> None:
+        """Live-subset round close via ``kernels.stats_update``.
+
+        Retired partitions are cleared when they retire and unallocated
+        capacity is zero, and neither is ever read again — so folding
+        only the live rows is exact while the work scales with the live
+        count, not the (never-reused-ids) capacity.  Transfers are
+        minimal: only the six *input* channels of the live rows cross
+        to the device (R and preSpanQ' are fully derived; device→host
+        readback is zero-copy) and the subset is padded to a 64-row
+        bucket to bound recompiles.
+        """
+        from ..kernels import stats_update as SU
+        jnp = self._jnp
+        live = np.asarray(live)
+        n = len(live)
+        if n == 0:
+            return
+        idx = np.concatenate([live, np.repeat(live[:1], _pad64(n) - n)])
+        in_ch = np.array(SU.ops.IN_CH)[:, None]
+        closed = []
+        for bank in (stats.rows, stats.cols):
+            if self._on_tpu:
+                out = np.asarray(SU.close_round(jnp.asarray(bank[:, idx]),
+                                                decay=decay))[list(SU.ops.OUT_CH)]
+            else:
+                out = np.asarray(SU.ops.close_round_inputs(
+                    jnp.asarray(bank[in_ch, idx[None, :]]), decay=decay))
+            closed.append(out)
+        for bank, out in zip((stats.rows, stats.cols), closed):
+            for i, ch in enumerate(SU.ops.OUT_CH):
+                bank[ch, live] = out[i, :n]
+            for ch in S.COLLECTORS:
+                bank[ch, live] = 0.0
+
+    def split_costs(self, stats, pids, boxes, r_s, cost_fn):
+        """Batched split terms, jitted; the pluggable ``cost_fn`` stays
+        host-side NumPy on the (zero-copy) downloaded terms, so custom
+        cost models need not be traceable."""
+        jnp = self._jnp
+        pids = np.asarray(pids)
+        k = len(pids)
+        pad = _pad_pow2(k) - k
+        g = stats.grid_size
+        out_lo, out_hi, out_valid = [], [], []
+        for axis, bank in ((0, stats.rows), (1, stats.cols)):
+            a1 = boxes[2] if axis == 0 else boxes[3]
+            a1p = np.concatenate([a1, np.ones(pad, a1.dtype)])
+            # only the maintained channels are read by the split terms
+            sub = jnp.asarray(bank[:S.C_N, np.concatenate(
+                [pids, np.repeat(pids[:1], pad)])])
+            terms = self._jit_split_terms(sub, jnp.asarray(a1p))
+            terms = tuple(np.asarray(t)[:k] for t in terms)
+            c_lo, c_hi, valid = planner.split_cost_curves(
+                terms, boxes, axis, g, r_s, cost_fn)
+            out_lo.append(c_lo)
+            out_hi.append(c_hi)
+            out_valid.append(valid)
+        return (np.stack(out_lo, 1), np.stack(out_hi, 1),
+                np.stack(out_valid, 1))
+
+    def _split_terms_fn(self, bank_sub, a1):
+        # core.planner.split_terms is backend-neutral: tracing it here
+        # compiles the exact reference source
+        return planner.split_terms(bank_sub, a1, bank_sub.shape[-1] - 1)
 
 
 # ---------------------------------------------------------------------------

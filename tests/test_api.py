@@ -174,6 +174,22 @@ def test_machine_failure_event_end_to_end():
     assert r.ingest(MachineFailure(dead)) is None
 
 
+def test_round_wire_bytes_drop_after_machine_failure():
+    """Fig 20 regression: a crash-stopped machine sends the Coordinator
+    nothing, so per-round wire bytes drop by one report's worth."""
+    from repro.core.cost_model import CostReport
+    cfg = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=5000,
+                       mem_queries=100_000)
+    r = SwarmRouter(G, M, beta=8)
+    eng = StreamingEngine(r, scenario("none", horizon=30), cfg)
+    eng.step()
+    eng.step()                      # first round fires at tick 1
+    assert eng.metrics.wire_bytes[1] == M * CostReport.WIRE_BYTES
+    eng.fail_machine(2)
+    eng.step()
+    assert eng.metrics.wire_bytes[2] == (M - 1) * CostReport.WIRE_BYTES
+
+
 # ---------------------------------------------------------------------------
 # Experiment suite: seeds threaded end-to-end, determinism, planes
 # ---------------------------------------------------------------------------
@@ -217,6 +233,24 @@ def test_run_suite_sweep_and_duplicate_labels():
         assert results[exp.label].experiment is exp
     with pytest.raises(ValueError, match="duplicate"):
         run_suite([exps[0], exps[0]])
+
+
+def test_labels_distinguish_router_and_engine_sweeps():
+    """Sweeping any router/engine parameter must not collide labels
+    (the max_pairs=1-vs-4 comparison is the acceptance scenario)."""
+    exps = sweep(routers=[RouterSpec("swarm", max_pairs=1),
+                          RouterSpec("swarm", max_pairs=4)],
+                 scenarios=[ScenarioSpec("uniform_normal", ticks=2,
+                                         preload_queries=10, query_burst=0)],
+                 seeds=(0,), engine=CFG)
+    results = run_suite(exps)          # would raise "duplicate" before
+    assert len(results) == 2
+    assert "max_pairs=4" in exps[1].label
+    a = EngineConfig(num_machines=M, cap_units=1e4)
+    b = EngineConfig(num_machines=M, cap_units=2e4)
+    la = Experiment(engine=a).label
+    lb = Experiment(engine=b).label
+    assert la != lb and "cap_units" in la
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,28 @@ def test_fsm_jax_matches_python():
         assert int(js[0]) == ds.stage and int(js[1]) == ds.decision
 
 
+@pytest.mark.parametrize("beta", [3, 20])
+def test_fsm_jax_jit_trajectory_parity(beta):
+    """Random R(S) trajectories track step_decision state-for-state —
+    all four FSM fields — with the jax step compiled under jit."""
+    import jax
+    import jax.numpy as jnp
+    step = jax.jit(B.step_decision_jax, static_argnames=("beta",))
+    ds = B.DecisionState()
+    js = (jnp.asarray(ds.stage), jnp.asarray(ds.decision),
+          jnp.asarray(ds.same_count), jnp.asarray(ds.pre_rs))
+    rng = np.random.default_rng(1)
+    r = 50.0
+    for i in range(200):
+        # mix of trends, noise and exact repeats (ties matter: the FSM
+        # moves left when R(S) does not improve)
+        r = float(np.round(r + rng.normal(0, 5) + (1 if i % 17 else -8), 2))
+        ds, d = B.step_decision(ds, r, beta=beta)
+        js = step(*js, r, beta=beta)
+        state = (int(js[0]), int(js[1]), int(js[2]), float(js[3]))
+        assert state == (ds.stage, ds.decision, ds.same_count, ds.pre_rs), i
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 3 (greedy subset-sum)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,268 @@
+"""Array-native control plane (core.planner + plane-served round math):
+batched collection parity, batched split parity, cross-plane round
+close, multi-pair invariants and convergence."""
+import numpy as np
+import pytest
+
+from repro.core import Swarm, balancer, planner
+from repro.core import statistics as S
+from repro.streaming import get_plane
+from repro.streaming.baselines import force_rebalance_round
+
+G, M = 32, 4
+
+
+def _loaded_swarm(seed=0, g=G, m=M, rounds=3, **kw):
+    rng = np.random.default_rng(seed)
+    sw = Swarm(g, m, decay=1.0, beta=2, **kw)
+    for _ in range(rounds):
+        pts = np.concatenate([
+            rng.uniform(0, 1, (500, 2)),
+            rng.uniform(0, 0.3, (2000, 2)),
+        ]).astype(np.float32)
+        sw.ingest_points(pts)
+        qc = rng.uniform(0, 0.3, (80, 2)).astype(np.float32)
+        sw.ingest_queries(np.concatenate([qc, qc + 0.02], 1))
+        force_rebalance_round(sw)
+    return sw
+
+
+# ---------------------------------------------------------------------------
+# Batched report collection == the per-machine reference formulas
+# ---------------------------------------------------------------------------
+
+def test_collect_matches_per_machine_loop():
+    sw = _loaded_swarm()
+    agg = sw._collect()
+    p = sw.index.parts
+    live = p.live_ids()
+    n = sw.stats.rows[S.N, live, p.r1[live]]
+    q = sw.stats.rows[S.Q, live, p.r1[live]]
+    r = sw.stats.rows[S.R, live, p.r1[live]]
+    r_s_local = float(r.sum())
+    part_cost = np.asarray(
+        balancer.product_cost(n, q, r, None, r_s_local), np.float64)
+    # reference: boolean-mask sums per machine (the pre-refactor loop)
+    for m in range(M):
+        sel = p.owner[live] == m
+        num = float(part_cost[sel].sum()) * max(r_s_local, 1.0)
+        np.testing.assert_allclose(agg.num_m[m], num, rtol=1e-12)
+        np.testing.assert_allclose(agg.r_m[m], float(r[sel].astype(
+            np.float64).sum()), rtol=1e-12)
+    assert agg.r_s == pytest.approx(float(agg.r_m.sum()))
+    np.testing.assert_allclose(
+        agg.costs, agg.num_m / (agg.r_s if agg.r_s > 0 else 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Batched split search == per-pid find_best_split
+# ---------------------------------------------------------------------------
+
+def _random_stats(seed, n_pids=5, g=G):
+    rng = np.random.default_rng(seed)
+    st = S.StatsState.zeros(n_pids, g)
+    boxes = []
+    for pid in range(n_pids):
+        r0, c0 = rng.integers(0, g // 2, 2)
+        r1 = int(rng.integers(r0 + 1, g))
+        c1 = int(rng.integers(c0 + 1, g))
+        boxes.append((int(r0), int(c0), r1, c1))
+        k = 400
+        rows = rng.integers(r0, r1 + 1, k)
+        cols = rng.integers(c0, c1 + 1, k)
+        S.ingest_points(st, np.full(k, pid), rows, cols)
+        qr0 = rng.integers(r0, r1 + 1, 30)
+        qc0 = rng.integers(c0, c1 + 1, 30)
+        qr1 = np.minimum(qr0 + rng.integers(0, 4, 30), r1)
+        qc1 = np.minimum(qc0 + rng.integers(0, 4, 30), c1)
+        S.ingest_queries(st, np.full(30, pid), qr0, qc0, qr1, qc1)
+    S.close_round(st, 1.0)
+    return st, boxes
+
+
+@pytest.mark.parametrize("plane", [None, "numpy", "jax"])
+def test_batched_best_splits_match_find_best_split(plane):
+    st, boxes = _random_stats(1)
+    pids = np.arange(len(boxes))
+    r_s = 123.0
+    rng = np.random.default_rng(2)
+    c_mh = float(rng.uniform(50, 100))
+    c_ml = float(rng.uniform(0, 10))
+    c_p = rng.uniform(5, 40, len(boxes))
+    bases = [(c_mh - float(c)) - c_ml for c in c_p]
+    box_arrays = tuple(np.array(b, np.int64)
+                       for b in zip(*boxes))
+    plans = planner.best_splits(st, pids, box_arrays, bases, r_s,
+                                plane=get_plane(plane) if plane else None)
+    for k, pid in enumerate(pids):
+        ref = balancer.find_best_split(st, int(pid), boxes[k], c_mh, c_ml,
+                                       float(c_p[k]), r_s)
+        got = plans[k]
+        assert (got.axis, got.sp, got.move_lo) == (ref.axis, ref.sp,
+                                                   ref.move_lo), (k, ref, got)
+        assert got.c_diff == pytest.approx(ref.c_diff, rel=1e-6, abs=1e-9)
+        assert got.c_lo == pytest.approx(ref.c_lo, rel=1e-6, abs=1e-9)
+        assert got.c_hi == pytest.approx(ref.c_hi, rel=1e-6, abs=1e-9)
+
+
+def test_split_costs_parity_across_planes():
+    st, boxes = _random_stats(3)
+    pids = np.arange(len(boxes))
+    box_arrays = tuple(np.array(b, np.int64) for b in zip(*boxes))
+    out = {}
+    for name in ("numpy", "jax"):
+        out[name] = get_plane(name).split_costs(st, pids, box_arrays, 57.0,
+                                                balancer.product_cost)
+    for a, b in zip(out["numpy"], out["jax"]):
+        np.testing.assert_allclose(np.where(out["numpy"][2], a, 0.0),
+                                   np.where(out["jax"][2], b, 0.0),
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Cross-plane round close (live-subset JAX fold vs whole-bank reference)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("decay", [1.0, 0.5])
+def test_jax_close_round_matches_reference(decay):
+    rng = np.random.default_rng(4)
+    cap, g = 37, 24                       # odd sizes exercise padding
+    live = np.sort(rng.choice(cap, 17, replace=False))
+    ref = S.StatsState.zeros(cap, g)
+    # integer-valued stats (what collectors hold) on live rows only
+    ref.rows[:, live] = rng.integers(0, 50, (8, 17, g + 1)).astype(np.float32)
+    ref.cols[:, live] = rng.integers(0, 50, (8, 17, g + 1)).astype(np.float32)
+    jx = ref.copy()
+    get_plane("numpy").close_round(ref, decay, live)
+    get_plane("jax").close_round(jx, decay, live)
+    np.testing.assert_array_equal(jx.rows[:, live], ref.rows[:, live])
+    np.testing.assert_array_equal(jx.cols[:, live], ref.cols[:, live])
+    # dead rows were zero and must stay zero under both planes
+    dead = np.setdiff1d(np.arange(cap), live)
+    assert not jx.rows[:, dead].any() and not ref.rows[:, dead].any()
+
+
+@pytest.mark.parametrize("decay", [1.0, 0.5])
+def test_stats_update_xla_variants_match_reference(decay):
+    """kernels/stats_update's portable folds — the full-bank XLA twin
+    and the transfer-minimal six-channel variant — both reproduce
+    statistics.close_round exactly on integer-valued banks."""
+    import jax.numpy as jnp
+    from repro.kernels.stats_update import close_round_inputs, close_round_xla
+    from repro.kernels.stats_update.ops import IN_CH, OUT_CH
+    rng = np.random.default_rng(11)
+    ref = S.StatsState.zeros(9, 19)       # odd sizes exercise padding
+    ref.rows[:] = rng.integers(0, 60, ref.rows.shape).astype(np.float32)
+    bank0 = ref.rows.copy()
+    S.close_round(ref, decay)
+    full = np.asarray(close_round_xla(jnp.asarray(bank0), decay=decay))
+    np.testing.assert_array_equal(full, ref.rows)
+    five = np.asarray(close_round_inputs(jnp.asarray(bank0[list(IN_CH)]),
+                                         decay=decay))
+    np.testing.assert_array_equal(five, ref.rows[list(OUT_CH)])
+
+
+def test_swarm_runs_identically_on_both_planes():
+    reports = {}
+    for name in ("numpy", "jax"):
+        sw = _loaded_swarm(seed=7, data_plane=get_plane(name))
+        reports[name] = sw.reports
+    for a, b in zip(reports["numpy"], reports["jax"]):
+        assert (a.action, a.m_h, a.m_l, a.moved_pids, a.new_pids) == \
+            (b.action, b.m_h, b.m_l, b.moved_pids, b.new_pids)
+
+
+# ---------------------------------------------------------------------------
+# Multi-pair planning
+# ---------------------------------------------------------------------------
+
+def test_max_pairs_one_emits_single_highest_to_lowest_transfer():
+    sw = _loaded_swarm(seed=5)
+    agg = sw._collect()
+    plan = planner.plan_round(sw.stats, agg, sw.index.parts, max_pairs=1)
+    assert len(plan.transfers) <= 1
+    if plan.transfers:
+        t = plan.transfers[0]
+        order = np.argsort(-plan.costs)
+        assert t.m_l == int(order[-1])
+        assert plan.costs[t.m_h] > plan.costs[t.m_l]
+
+
+def test_multi_pair_transfers_are_disjoint_and_downhill():
+    sw = _loaded_swarm(seed=6, m=8, rounds=4)
+    agg = sw._collect()
+    plan = planner.plan_round(sw.stats, agg, sw.index.parts, max_pairs=4)
+    assert len(plan.transfers) >= 2
+    highs = [t.m_h for t in plan.transfers]
+    lows = [t.m_l for t in plan.transfers]
+    assert len(set(highs)) == len(highs)
+    assert len(set(lows)) == len(lows)
+    assert not set(highs) & set(lows)
+    for t in plan.transfers:
+        assert plan.costs[t.m_h] > plan.costs[t.m_l]
+
+
+def test_multi_pair_round_report_aggregates_all_transfers():
+    sw = _loaded_swarm(seed=6, m=8, rounds=4, max_pairs=4)
+    rep = force_rebalance_round(sw)
+    if len(rep.transfers) >= 2:
+        assert rep.action == rep.transfers[0].action
+        assert rep.m_h == rep.transfers[0].m_h
+        assert rep.moved_pids == tuple(
+            p for t in rep.transfers for p in t.moved_pids)
+        assert rep.new_pids == tuple(
+            p for t in rep.transfers for p in t.new_pids)
+
+
+def test_multi_pair_converges_in_fewer_rounds():
+    """The acceptance scenario (shared with benchmarks/control_plane.py,
+    which records it in BENCH_control.json): k=4 reaches balanced
+    utilization in measurably fewer rounds than the paper's single
+    pair."""
+    bench = pytest.importorskip("benchmarks.control_plane")
+    r1 = bench.rounds_to_balance(1, max_rounds=40)
+    r4 = bench.rounds_to_balance(4, max_rounds=40)
+    assert r4 < r1, (r1, r4)
+    assert r4 <= r1 - 3, (r1, r4)   # measurably, not marginally
+
+
+# ---------------------------------------------------------------------------
+# Vectorized query ingest keeps the collector semantics
+# ---------------------------------------------------------------------------
+
+def test_vectorized_query_ingest_matches_scalar_reference():
+    rng = np.random.default_rng(8)
+    sw = Swarm(G, M, decay=1.0)
+    rects = np.concatenate([c := rng.uniform(0, 0.9, (40, 2)).astype(
+        np.float32), c + 0.08], 1)
+    qi, pids, owners = sw.ingest_queries(rects)
+    # reference: per-query overlap + clip + scalar ingest
+    ref = S.StatsState.zeros(sw.index.parts.capacity, G)
+    from repro.core import geometry
+    r0, c0, r1, c1 = geometry.rects_to_cells(rects, G)
+    p = sw.index.parts
+    for i in range(len(rects)):
+        hits = sw.index.query_overlap_vectorized(int(r0[i]), int(c0[i]),
+                                                 int(r1[i]), int(c1[i]))
+        qr0, qc0, qr1, qc1 = geometry.clip_box(
+            r0[i], c0[i], r1[i], c1[i],
+            p.r0[hits], p.c0[hits], p.r1[hits], p.c1[hits])
+        S.ingest_queries(ref, hits, qr0, qc0, qr1, qc1)
+        sel = qi == i
+        np.testing.assert_array_equal(pids[sel], hits)
+        np.testing.assert_array_equal(owners[sel], p.owner[hits])
+    np.testing.assert_array_equal(sw.stats.rows, ref.rows)
+    np.testing.assert_array_equal(sw.stats.cols, ref.cols)
+
+
+# ---------------------------------------------------------------------------
+# Wire accounting excludes crash-stopped machines
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_exclude_dead_machines():
+    from repro.core.cost_model import CostReport
+    sw = Swarm(G, 8)
+    assert sw.run_round().wire_bytes == 8 * CostReport.WIRE_BYTES
+    sw.mark_dead(3)
+    sw.mark_dead(5)
+    assert sw.run_round().wire_bytes == 6 * CostReport.WIRE_BYTES

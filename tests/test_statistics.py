@@ -102,6 +102,67 @@ def test_col_split_derivation_exact(pts, rects, sp):
     assert st_.cols[S.Q, 2, G - 1] == _brute_queries(rects, sp + 1, G - 1, axis=1)
 
 
+def _ingest_all(st_, pts, rects):
+    if pts:
+        arr = np.array(pts, np.int64)
+        S.ingest_points(st_, np.zeros(len(pts), np.int64), arr[:, 0], arr[:, 1])
+    if rects:
+        arr = np.array(rects, np.int64)
+        S.ingest_queries(st_, np.zeros(len(rects), np.int64),
+                         arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3])
+    S.close_round(st_, decay=1.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(points_strat, rects_strat, st.integers(0, G - 2),
+       st.integers(0, G - 1), st.integers(0, G - 1))
+def test_row_split_identities_on_children(pts, rects, sp, a, b):
+    """§4.2.3 identities survive derive_row_split: every sub-range count
+    on a child equals the same count on the pre-split parent."""
+    st_ = _mk_state()
+    _ingest_all(st_, pts, rects)
+    parent = st_.copy()
+    S.derive_row_split(st_, PID, 1, 2, 0, sp, G - 1, 0, G - 1)
+    u, l = min(a, b), max(a, b)
+    for child, lo, hi in ((1, 0, sp), (2, sp + 1, G - 1)):
+        cu, cl = max(u, lo), min(l, hi)
+        if cu > cl:
+            continue
+        assert S.count_points_rows(st_, child, lo, cu, cl) == \
+            S.count_points_rows(parent, PID, 0, cu, cl)
+        assert S.count_queries_rows(st_, child, lo, cu, cl) == \
+            S.count_queries_rows(parent, PID, 0, cu, cl)
+        assert S.count_recent_rows(st_, child, lo, cu, cl) == \
+            S.count_recent_rows(parent, PID, 0, cu, cl)
+
+
+def _count_cols(state, pid, c0, u, l, ch, span_ch=None):
+    """Cols-bank analogue of count_points_rows / count_queries_rows."""
+    below = state.cols[ch, pid, u - 1] if u > c0 else 0.0
+    span = state.cols[span_ch, pid, u] if span_ch is not None and u > c0 \
+        else 0.0
+    return float(state.cols[ch, pid, l] - below + span)
+
+
+@settings(max_examples=60, deadline=None)
+@given(points_strat, rects_strat, st.integers(0, G - 2),
+       st.integers(0, G - 1), st.integers(0, G - 1))
+def test_col_split_identities_on_children(pts, rects, sp, a, b):
+    """Column-axis analogue, read through the cols bank directly."""
+    st_ = _mk_state()
+    _ingest_all(st_, pts, rects)
+    parent = st_.copy()
+    S.derive_col_split(st_, PID, 1, 2, 0, sp, G - 1, 0, G - 1)
+    u, l = min(a, b), max(a, b)
+    for child, lo, hi in ((1, 0, sp), (2, sp + 1, G - 1)):
+        cu, cl = max(u, lo), min(l, hi)
+        if cu > cl:
+            continue
+        for ch, span_ch in ((S.N, None), (S.Q, S.SPANQ), (S.R, S.PRESPANQ)):
+            assert _count_cols(st_, child, lo, cu, cl, ch, span_ch) == \
+                _count_cols(parent, PID, 0, cu, cl, ch, span_ch)
+
+
 def test_multi_round_accumulation_and_decay():
     st_ = _mk_state()
     S.ingest_points(st_, np.zeros(4, np.int64), np.array([1, 2, 3, 4]),
