@@ -1,0 +1,108 @@
+"""End-to-end engine ingest throughput: the per-tick event loop vs the
+device-resident fused path (``StreamingEngine.run_fused``), on both
+data planes (BENCH_engine.json).
+
+Setup: a live ``SwarmRouter`` (rounds every ``ROUND_EVERY`` ticks, so
+the adaptivity protocol runs at its normal cadence inside the measured
+region), 2000 resident queries, and a ``ReplaySource`` point pool so
+source synthesis stays off the measured path.  Timings exclude a
+warm-up long enough to cover several rounds (jit compilation and the
+first rebalances); events/sec counts injected tuples.
+
+The harness *asserts* that fused and per-tick modes inject identical
+per-tick tuple counts before timing anything — the throughput numbers
+cannot silently diverge from the correctness of the fused semantics.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.streaming import (EngineConfig, ReplaySource, StreamingEngine,
+                             SwarmRouter, TwitterLikeSource)
+
+from .common import emit
+
+G, M = 64, 8
+ROUND_EVERY = 8
+WINDOW = 8
+OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_engine.json")
+
+
+def _engine(plane: str, batch: int, pool: np.ndarray) -> StreamingEngine:
+    cfg = EngineConfig(num_machines=M, cap_units=1e12,
+                       lambda_max=float(batch), mem_queries=10**9,
+                       round_every=ROUND_EVERY)
+    base = TwitterLikeSource(seed=1)
+    src = ReplaySource(pool=pool, base=base)
+    eng = StreamingEngine(SwarmRouter(G, M, beta=8, data_plane=plane),
+                          src, cfg)
+    eng.preload_queries(base.sample_queries(2000))
+    return eng
+
+
+def _events_per_s(plane: str, batch: int, pool: np.ndarray, fused: bool,
+                  warm: int, ticks: int) -> float:
+    eng = _engine(plane, batch, pool)
+    runner = (lambda t: eng.run_fused(t, window=WINDOW)) if fused \
+        else eng.run
+    runner(warm)
+    t0 = time.perf_counter()
+    runner(ticks)
+    dt = time.perf_counter() - t0
+    return sum(eng.metrics.injected[-ticks:]) / dt
+
+
+def _assert_counts_equal(plane: str, batch: int, pool: np.ndarray,
+                         ticks: int) -> None:
+    """Fused and per-tick modes must report identical per-tick tuple
+    counts (and matching processed totals) on identical streams."""
+    a = _engine(plane, batch, pool)
+    a.run(ticks)
+    b = _engine(plane, batch, pool)
+    b.run_fused(ticks, window=WINDOW)
+    if a.metrics.injected != b.metrics.injected:
+        raise AssertionError(
+            f"fused/per-tick injected counts diverged on {plane}: "
+            f"{a.metrics.injected} vs {b.metrics.injected}")
+    if not np.allclose(a.metrics.throughput, b.metrics.throughput,
+                       rtol=1e-3, atol=1e-6):
+        raise AssertionError(
+            f"fused/per-tick processed totals diverged on {plane}")
+
+
+def run(smoke: bool = False) -> dict:
+    sizes = (4096,) if smoke else (1 << 14, 1 << 17)
+    warm, ticks = (8, 8) if smoke else (40, 24)
+    pool = TwitterLikeSource(seed=0).sample_points(1 << 20)
+    rows = []
+    for batch in sizes:
+        row: dict = {"batch": batch, "ticks": ticks}
+        for plane in ("numpy", "jax"):
+            _assert_counts_equal(plane, batch, pool, min(ticks, 12))
+            for fused in (False, True):
+                mode = "fused" if fused else "pertick"
+                evps = _events_per_s(plane, batch, pool, fused, warm, ticks)
+                row[f"{plane}_{mode}_evps"] = evps
+                emit(f"engine/{plane}/{mode}/batch={batch}",
+                     1e6 / evps, f"events_per_s={evps:.0f}")
+        row["fused_jax_vs_pertick_jax"] = (row["jax_fused_evps"]
+                                           / row["jax_pertick_evps"])
+        row["fused_jax_vs_pertick_numpy"] = (row["jax_fused_evps"]
+                                             / row["numpy_pertick_evps"])
+        row["counts_equal"] = True
+        emit(f"engine/summary/batch={batch}", 0.0,
+             f"fused_jax_vs_pertick_jax="
+             f"{row['fused_jax_vs_pertick_jax']:.2f}x "
+             f"vs_pertick_numpy={row['fused_jax_vs_pertick_numpy']:.2f}x")
+        rows.append(row)
+    result = {"grid": G, "machines": M, "round_every": ROUND_EVERY,
+              "window": WINDOW, "smoke": smoke, "results": rows}
+    if not smoke:
+        with open(OUT_JSON, "w") as f:
+            json.dump(result, f, indent=1)
+    return result

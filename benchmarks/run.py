@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
   queries  query×persistence workload matrix  (benchmarks/queries_mixed.py)
   dataplane NumPy vs JAX plane throughput     (benchmarks/dataplane.py)
   control  round-close + planner throughput   (benchmarks/control_plane.py)
+  engine   per-tick vs fused engine ingest    (benchmarks/engine_throughput.py)
 
 ``--data-plane`` selects the routing data plane for the experiment
 sections; a comma list (e.g. ``--data-plane=numpy,jax``) repeats the
@@ -25,15 +26,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: capability,hotspots,utilization,"
                          "overheads,stats_network,kernels,roofline,queries,"
-                         "dataplane,control")
+                         "dataplane,control,engine")
     ap.add_argument("--smoke", action="store_true",
                     help="short timelines (CI sanity run)")
     ap.add_argument("--data-plane", default="numpy",
                     help="routing data plane(s), comma list: numpy,jax")
     args = ap.parse_args()
-    from . import (capability, common, control_plane, dataplane, hotspots,
-                   kernels, overheads, queries_mixed, roofline,
-                   stats_network, utilization)
+    from . import (capability, common, control_plane, dataplane,
+                   engine_throughput, hotspots, kernels, overheads,
+                   queries_mixed, roofline, stats_network, utilization)
     sections = {
         "capability": capability.run,
         "hotspots": hotspots.run,
@@ -45,6 +46,7 @@ def main() -> None:
         "queries": queries_mixed.run,
         "dataplane": dataplane.run,
         "control": control_plane.run,
+        "engine": engine_throughput.run,
     }
     # sections whose results depend on the routing data plane; the rest
     # run once regardless of how many planes were requested

@@ -166,6 +166,24 @@ class Swarm:
         S.ingest_queries(self.stats, pids, qr0, qc0, qr1, qc1)
         return pids, owners
 
+    def absorb_collectors(self, cn_rows: np.ndarray,
+                          cn_cols: np.ndarray) -> None:
+        """Fold externally accumulated N′ collector deltas into the
+        stats bank.
+
+        The device-resident ingest path (``streaming.fused``) keeps the
+        per-tuple collector scatter on the data plane's device and
+        drains it here right before any host event that consumes or
+        relocates statistics — the round close reads the deltas exactly
+        as if ``ingest_points`` had accumulated them tuple by tuple
+        (integer counts in float32, so the fold is exact).  ``cn_*``
+        are (P_device, G+1) banks indexed by partition id; the device
+        bank may trail the host capacity after mid-round growth."""
+        self._sync_capacity()
+        p = cn_rows.shape[0]
+        self.stats.rows[S.C_N, :p] += cn_rows
+        self.stats.cols[S.C_N, :p] += cn_cols
+
     # ------------------------------------------------------------------
     # Coordinator round (Figs 8–10): close → collect → decide → apply
     # ------------------------------------------------------------------

@@ -15,9 +15,12 @@ from .engine import EngineConfig, Metrics, StreamingEngine, run_experiment
 from .experiments import (Experiment, ExperimentResult, RouterSpec,
                           ScenarioSpec, run, run_suite, sweep,
                           workload_query_side)
+from .fused import (DeviceState, EngineCarry, FusedHostState, FusedOutputs,
+                    FusedParams)
 from .planes import DataPlane, JaxPlane, NumpyPlane, available_planes, \
     get_plane
-from .sources import Hotspot, ScenarioSource, TwitterLikeSource, scenario
+from .sources import (Hotspot, ReplaySource, ScenarioSource,
+                      TwitterLikeSource, scenario)
 
 __all__ = [
     # events / decisions
@@ -25,6 +28,9 @@ __all__ = [
     "RoutingDecision", "RoundOutcome", "MemoryUsage", "Router", "EventStream",
     # data planes
     "DataPlane", "NumpyPlane", "JaxPlane", "get_plane", "available_planes",
+    # device-resident fused ingest
+    "DeviceState", "FusedHostState", "FusedParams", "EngineCarry",
+    "FusedOutputs",
     # routers
     "ReplicatedRouter", "StaticUniformRouter", "StaticHistoryRouter",
     "SwarmRouter", "RoundInfo",
@@ -34,7 +40,8 @@ __all__ = [
     "Experiment", "ExperimentResult", "RouterSpec", "ScenarioSpec",
     "run", "run_suite", "sweep", "workload_query_side",
     # sources
-    "Hotspot", "ScenarioSource", "TwitterLikeSource", "scenario",
+    "Hotspot", "ReplaySource", "ScenarioSource", "TwitterLikeSource",
+    "scenario",
     # workloads
     "QueryModel", "PersistenceModel", "WorkloadSpec", "TupleStore",
     "all_workloads",

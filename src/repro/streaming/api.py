@@ -217,6 +217,22 @@ class EventStream:
     def tuples(self, n: int, tick: int) -> TupleBatch:
         return TupleBatch(self.source.sample_points(n, tick), tick)
 
+    def next_arrival(self, tick: int) -> int | None:
+        """First tick ≥ ``tick`` that will emit query/probe arrivals,
+        ``None`` if there are none.  The fused engine path cuts its
+        scan windows here — *predicting* arrivals must not consume the
+        source RNG, so sources expose their deterministic schedule via
+        ``next_query_arrival``; a source without one conservatively
+        reports ``tick`` (every tick is a potential arrival, forcing
+        the per-tick path)."""
+        wl = self.workload
+        if wl.spec.snapshot:
+            return tick if wl.snapshot_rate > 0 else None
+        sched = getattr(self.source, "next_query_arrival", None)
+        if sched is None:
+            return tick
+        return sched(tick)
+
     def preload(self, n: int) -> QueryBatch | None:
         """Initial resident queries — only continuous models have any."""
         if n <= 0 or not self.workload.spec.continuous:

@@ -38,6 +38,7 @@ from ..queries import QueryModel, TupleStore, WorkloadSpec
 from .api import (NO_ROUND, EventBatch, MachineFailure, MemoryUsage,
                   ProbeBatch, QueryBatch, RoundOutcome, RoutingDecision,
                   TupleBatch)
+from .fused import FusedHostState
 from .planes import CostParams, DataPlane, get_plane
 from .sources import QUERY_SIDE
 
@@ -321,6 +322,28 @@ class _GridRouter(_Base):
             return np.zeros(self.m, np.float64)
         return self.store.by_machine(self.index.parts, self.m)
 
+    # -- device-resident fast path (streaming.fused) -----------------------
+    def fused_host_state(self) -> FusedHostState:
+        """Snapshot of everything the fused tuple-ingest step reads,
+        in the router's native dtypes (copies: the engine diffs
+        successive snapshots to scatter-patch the device state)."""
+        self._ensure_qres()
+        p = self.index.parts
+        af = np.ones(p.capacity, np.float64)
+        af[:p.n_alloc] = self._area_frac()
+        return FusedHostState(
+            grid=self.index.cell_to_partition.copy(),
+            owner=p.owner.copy(),
+            qres=self.qres.copy(),
+            area_frac=af,
+            q_machine=self.resident_counts(),
+            track_stats=False,
+            n_alloc=int(p.n_alloc))
+
+    def fused_absorb(self, cn_rows: np.ndarray, cn_cols: np.ndarray) -> None:
+        """Collector deltas drained from the device; grid routers keep
+        no per-round statistics."""
+
 
 class StaticUniformRouter(_GridRouter):
     def __init__(self, grid_size: int, num_machines: int, **kw):
@@ -374,6 +397,15 @@ class SwarmRouter(_GridRouter):
     def _index_queries(self, rects: np.ndarray) -> None:
         super()._index_queries(rects)
         self.swarm.ingest_queries(rects)
+
+    def fused_host_state(self) -> FusedHostState:
+        from dataclasses import replace
+        # SWARM's N' collectors ride the fused step: the device bank
+        # absorbs the per-tuple scatter and drains at round close
+        return replace(super().fused_host_state(), track_stats=True)
+
+    def fused_absorb(self, cn_rows: np.ndarray, cn_cols: np.ndarray) -> None:
+        self.swarm.absorb_collectors(cn_rows, cn_cols)
 
     def _route_tuples(self, xy: np.ndarray) -> RoutingDecision:
         self.swarm.ingest_points(xy)  # collectors (N'); then normal routing

@@ -20,6 +20,15 @@ events a tick carries (``QueryBatch`` registrations vs one-shot
 from the workload's registered query-model spec; persistence shows up
 only through the router's ``memory_usage()`` accounting and ``end_tick``
 upkeep.
+
+Two run modes share these semantics: :meth:`StreamingEngine.step` (the
+per-tick reference loop) and :meth:`StreamingEngine.run_fused`, the
+device-resident fast path — steady-state ticks are pre-staged and
+executed as scanned windows on the router's data plane, crossing the
+host boundary only at query arrivals, failures and round boundaries
+(where ``core.planner.plan_round`` runs and the resident state is
+scatter-patched).  ``EngineConfig.fused_window > 0`` makes ``run``
+dispatch to the fused mode, so the experiment suite can sweep it.
 """
 from __future__ import annotations
 
@@ -28,7 +37,9 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .api import (NO_ROUND, EventStream, MachineFailure, ProbeBatch,
-                  QueryBatch, Router, RoutingDecision)
+                  QueryBatch, Router, RoutingDecision, TupleBatch)
+from .fused import (EngineCarry, FusedOutputs, FusedParams,
+                    host_process_tick)
 from .sources import ScenarioSource
 
 
@@ -44,6 +55,7 @@ class EngineConfig:
     bp_inc: float = 0.04            # additive recovery, fraction of λmax
     round_every: int = 1            # ticks per load-balancing round
     migration_unit_cost: float = 2.0  # work units to install one moved query
+    fused_window: int = 0           # >0: run() scans W-tick fused windows
 
 
 @dataclass
@@ -81,12 +93,16 @@ class StreamingEngine:
         self.lam_bp = self.cfg.lambda_max
         self.metrics = Metrics()
         self.tick_no = 0
+        self._fused = None   # device-resident state cache (run_fused)
 
     # ------------------------------------------------------------------
     def preload_queries(self, rects: np.ndarray) -> None:
         self.router.ingest(QueryBatch(rects, self.tick_no))
 
     def fail_machine(self, m: int) -> None:
+        # drain device-held collector deltas before the failure handler
+        # re-homes partitions (their stats rows move with them)
+        self._fused_sync_collectors()
         self.alive[m] = False
         self.router.ingest(MachineFailure(m, self.tick_no))
         # queued work on a crashed machine is re-queued via the router's
@@ -101,7 +117,20 @@ class StreamingEngine:
         np.add.at(self.queue_tuples, decision.owners, 1.0)
 
     # ------------------------------------------------------------------
+    def fused_supported(self) -> bool:
+        """Whether this (router, workload) pair can run fused windows:
+        a grid-index router exposing the ``fused_host_state`` seam and
+        a storeless workload."""
+        return (hasattr(self.router, "fused_host_state")
+                and getattr(self.router, "store", None) is None)
+
     def run(self, ticks: int) -> Metrics:
+        # fused_window is an execution knob, not a semantics change:
+        # routers/workloads outside the fused envelope (replicated,
+        # tuple stores) silently take the per-tick loop so mixed
+        # sweeps complete; calling run_fused directly still raises
+        if self.cfg.fused_window > 0 and self.fused_supported():
+            return self.run_fused(ticks, self.cfg.fused_window)
         for _ in range(ticks):
             self.step()
         return self.metrics
@@ -131,28 +160,13 @@ class StreamingEngine:
         n = int(lam)
         if n > 0:
             self._enqueue(self.router.ingest(self.stream.tuples(n, t)))
-        # 4. process
-        cap = cfg.cap_units * self.alive
-        processed_units = np.minimum(self.queue_units, cap)
-        avg_cost = np.where(self.queue_tuples > 0,
-                            self.queue_units / np.maximum(self.queue_tuples, 1e-9),
-                            1.0)
-        processed_tuples = np.minimum(processed_units / np.maximum(avg_cost, 1e-9),
-                                      self.queue_tuples)
-        self.queue_units -= processed_tuples * avg_cost
-        self.queue_tuples -= processed_tuples
-        # 5. latency: queueing delay + service, in tick units
-        with np.errstate(divide="ignore", invalid="ignore"):
-            delay = np.where(cap > 0, self.queue_units / np.maximum(cap, 1e-9)
-                             + avg_cost / np.maximum(cap, 1e-9), 0.0)
-        w = processed_tuples.sum()
-        latency = float((delay * processed_tuples).sum() / w) if w > 0 else 0.0
-        # 6. backpressure (global, slowest-machine driven — §6.2)
-        if (self.queue_units > cfg.bp_high * cfg.cap_units).any():
-            self.lam_bp = max(self.lam_bp * cfg.bp_dec, 1.0)
-        else:
-            self.lam_bp = min(self.lam_bp + cfg.bp_inc * cfg.lambda_max,
-                              cfg.lambda_max)
+        # 4–6. process, latency, backpressure — the shared tick dynamics
+        # (fused.host_process_tick is the single home; the fused window
+        # paths run the very same function / its float32 mirror)
+        processed_units, w, latency, self.lam_bp = host_process_tick(
+            self.queue_units, self.queue_tuples, self.lam_bp,
+            cfg.cap_units, self.alive, cfg.bp_high, cfg.bp_dec,
+            cfg.bp_inc, cfg.lambda_max)
         # 7. load-balancing round — at the end of each full interval
         #    (never at tick 0, when no load has accumulated yet)
         outcome = NO_ROUND
@@ -182,6 +196,190 @@ class StreamingEngine:
         mtr.resident_tuples.append(d_max)
         mtr.injected.append(n)
         self.tick_no += 1
+
+    # ------------------------------------------------------------------
+    # Device-resident fast path (streaming.fused / planes.run_window)
+    # ------------------------------------------------------------------
+    def run_fused(self, ticks: int, window: int = 32) -> Metrics:
+        """Run ``ticks`` engine ticks with steady-state ingest fused on
+        the router's data plane.
+
+        The timeline is cut into scan windows of up to ``window`` ticks;
+        a window ends early at the next query/probe arrival tick or just
+        after the next round boundary, and those host-boundary ticks run
+        through the per-tick :meth:`step` path (arrivals/rounds mutate
+        router state the device snapshot mirrors).  Each window stages
+        ``⌊λmax⌋`` candidate tuples per tick up front — inside the scan,
+        backpressure still throttles injection dynamically by masking
+        the batch prefix, so windowing changes *where* sampling happens,
+        not the engine dynamics (with backpressure idle the RNG stream
+        is identical to the per-tick loop, which is what the parity
+        tests pin).  Workloads with a tuple store (snapshot probes /
+        STORED persistence) ingest work the fused step does not model
+        and are rejected.
+        """
+        cfg, mtr = self.cfg, self.metrics
+        router = self.router
+        if not hasattr(router, "fused_host_state"):
+            raise ValueError(
+                f"{type(router).__name__} does not expose fused_host_state; "
+                "the device-resident path supports grid-index routers — "
+                "use run() instead")
+        if getattr(router, "store", None) is not None:
+            raise ValueError(
+                f"workload {router.workload.label!r} keeps a tuple store; "
+                "the fused path covers storeless steady-state ingest — "
+                "use run() instead")
+        b = int(cfg.lambda_max)
+        if b <= 0 or window < 1:
+            for _ in range(ticks):
+                self.step()
+            return self.metrics
+        plane = router.plane
+        t_end = self.tick_no + ticks
+        while self.tick_no < t_end:
+            t = self.tick_no
+            na = self.stream.next_arrival(t)
+            if ((na is not None and na <= t) or mtr.infeasible
+                    or self._mem_infeasible()):
+                # host-boundary tick: arrivals (or a stalled system) go
+                # through the reference path; drain collectors first in
+                # case the tick closes a round
+                self._fused_sync_collectors()
+                self.step()
+                continue
+            r = max(t, 1)
+            if r % cfg.round_every:
+                r = (r // cfg.round_every + 1) * cfg.round_every
+            stop = min(t_end, t + window, r + 1)
+            if na is not None:
+                stop = min(stop, na)
+            w = stop - t
+            # stage W ticks of candidate batches (tick-ordered, so the
+            # source RNG stream matches the per-tick loop)
+            xy = np.stack([self.stream.tuples(b, tt).xy
+                           for tt in range(t, stop)])
+            self._fused_refresh(plane)
+            fp = FusedParams(
+                cap_units=float(cfg.cap_units),
+                lambda_max=float(cfg.lambda_max), bp_high=float(cfg.bp_high),
+                bp_dec=float(cfg.bp_dec), bp_inc=float(cfg.bp_inc),
+                alive=self.alive,
+                track_stats=self._fused["host"].track_stats,
+                n_alloc=self._fused["host"].n_alloc)
+            carry = EngineCarry(self.queue_units, self.queue_tuples,
+                                self.lam_bp)
+            state, carry, outs, ok = plane.run_window(
+                self._fused["state"], router._cost_params(), fp, carry, xy)
+            if ok:
+                self._fused["state"] = state
+                self.queue_units = np.asarray(carry.queue_units, np.float64)
+                self.queue_tuples = np.asarray(carry.queue_tuples,
+                                               np.float64)
+                self.lam_bp = float(carry.lam_bp)
+            else:
+                # backpressure engaged mid-window: the fused window
+                # cannot represent throttled injection — replay the
+                # staged batches through the exact per-tick path
+                outs = self._window_reference(xy)
+            q_total = router.q_total
+            for i in range(w):
+                mtr.units_of_work.append(float(outs.throughput[i]) * q_total)
+                mtr.throughput.append(float(outs.throughput[i]))
+                mtr.latency.append(float(outs.latency[i]))
+                mtr.q_total.append(q_total)
+                mtr.utilization.append(np.asarray(outs.utilization[i],
+                                                  np.float64))
+                mtr.wire_bytes.append(0)
+                mtr.migration_bytes.append(0)
+                mtr.moved_tuples.append(0)
+                mtr.transfers.append(0)
+                mtr.snapshots.append(0)
+                mtr.resident_tuples.append(0.0)
+                mtr.injected.append(int(outs.injected[i]))
+            self.tick_no = stop
+            last = stop - 1
+            if last > 0 and last % cfg.round_every == 0:
+                # round boundary: drain device collectors into the host
+                # stats bank, run the planner round, patch the last
+                # tick's round metrics in place (step() records them on
+                # the same tick row)
+                self._fused_sync_collectors()
+                outcome = router.on_round(last)
+                if outcome.moved_queries:
+                    tgt = int(np.argmin(self.queue_units
+                                        + (~self.alive) * 1e18))
+                    self.queue_units[tgt] += (outcome.moved_queries
+                                              * cfg.migration_unit_cost)
+                mtr.wire_bytes[-1] = outcome.wire_bytes
+                mtr.migration_bytes[-1] = outcome.migration_bytes
+                mtr.moved_tuples[-1] = outcome.moved_tuples
+                mtr.transfers[-1] = len(outcome.transfers)
+        # leave no deltas stranded on device: a later per-tick run()
+        # or direct protocol use must see complete host statistics
+        self._fused_sync_collectors()
+        return mtr
+
+    def _window_reference(self, xy_stack) -> "FusedOutputs":
+        """Replay a staged window through the per-tick path: inject the
+        dynamic backpressure-throttled prefix of each staged batch via
+        ``Router.ingest`` (collectors accumulate host-side) and run the
+        shared tick dynamics.  Used when a fused window declines
+        (``ok=False``) — the congested regime keeps exact semantics."""
+        cfg = self.cfg
+        w = len(xy_stack)
+        m = len(self.queue_units)
+        thr, lat = np.zeros(w), np.zeros(w)
+        util = np.zeros((w, m))
+        inj = np.zeros(w, np.int64)
+        for i in range(w):
+            n = int(min(cfg.lambda_max, self.lam_bp))
+            if n > 0:
+                self._enqueue(self.router.ingest(
+                    TupleBatch(xy_stack[i, :n], self.tick_no + i)))
+            pu, thr[i], lat[i], self.lam_bp = host_process_tick(
+                self.queue_units, self.queue_tuples, self.lam_bp,
+                cfg.cap_units, self.alive, cfg.bp_high, cfg.bp_dec,
+                cfg.bp_inc, cfg.lambda_max)
+            util[i] = pu / np.maximum(cfg.cap_units, 1e-9)
+            inj[i] = n
+        return FusedOutputs(thr, lat, util, inj)
+
+    def _mem_infeasible(self) -> bool:
+        mem = self.router.memory_usage()
+        return (mem.queries.max(initial=0) > self.cfg.mem_queries
+                or float(mem.tuples.max(initial=0)) > self.cfg.mem_tuples)
+
+    def _fused_refresh(self, plane) -> None:
+        """Build or diff-patch the resident device state.  Successive
+        router snapshots are diffed so a rebalance becomes a scatter
+        update of the changed grid cells / owner rows; only a capacity
+        growth forces a rebuild."""
+        host = self.router.fused_host_state()
+        f = self._fused
+        if f is None or f["plane"] is not plane:
+            self._fused = {"plane": plane, "host": host,
+                           "state": plane.make_state(host)}
+            return
+        updates = f["host"].diff(host)
+        if updates is None:                      # capacity grew: rebuild
+            self._fused_sync_collectors()        # (banks change shape)
+            f["state"] = plane.make_state(host)
+        elif updates:
+            f["state"] = plane.scatter_update(f["state"], updates)
+        f["host"] = host
+
+    def _fused_sync_collectors(self) -> None:
+        """Drain device-accumulated N′ collector deltas into the host
+        stats bank (no-op for routers that keep no statistics)."""
+        f = self._fused
+        if not f or not f["host"].track_stats:
+            return
+        cnr = np.asarray(f["state"].cn_rows)
+        cnc = np.asarray(f["state"].cn_cols)
+        if cnr.any() or cnc.any():
+            self.router.fused_absorb(cnr, cnc)
+            f["state"] = f["plane"].reset_collectors(f["state"])
 
 
 # ---------------------------------------------------------------------------

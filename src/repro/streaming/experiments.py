@@ -18,6 +18,12 @@ plane) and the engine from the spec, deriving every rng from
         seeds=(0, 1, 2),
         data_planes=("numpy", "jax"),
     ))
+
+The engine's run mode is part of the spec: ``EngineConfig(
+fused_window=W)`` makes :func:`run` drive the device-resident fused
+path (``StreamingEngine.run_fused``), and — like any non-default
+engine field — it is folded into ``Experiment.label``, so per-tick vs
+fused sweeps cannot collide.
 """
 from __future__ import annotations
 
@@ -115,7 +121,8 @@ class ScenarioSpec:
 
     @property
     def key(self) -> str:
-        peak = "" if self.peak == 0.4 else f",peak={self.peak}"
+        default = type(self).__dataclass_fields__["peak"].default
+        peak = "" if self.peak == default else f",peak={self.peak}"
         return (f"{self.name}[{self.ticks}t,{self.preload_queries}q,"
                 f"{self.query_burst}b{peak}]")
 

@@ -26,19 +26,39 @@ Two implementations:
   only (retired/unallocated rows are zero or never read again, so
   skipping them is exact; the reference closes the whole capacity bank).
 
+Besides the stateless per-call API, both planes implement the
+*device-resident* fused-ingest contract of ``streaming.fused``:
+:meth:`DataPlane.make_state` uploads a router snapshot once,
+:meth:`DataPlane.scatter_update` edits it in place after a rebalance
+(only the changed entries cross the wire), and
+:meth:`DataPlane.run_window` executes a whole window of engine ticks —
+routing, cost terms, SWARM's N′ collector accumulation and the
+engine's queue/backpressure dynamics — in one dispatch
+(``jax.lax.scan`` on the JAX plane; the single-tick :meth:`DataPlane.
+step` additionally donates the state where the backend supports
+aliasing), so the steady state transfers only O(window·machines)
+metrics instead of per-item owners/costs.  The NumPy plane's window is the literal
+per-tick reference loop, sharing ``fused.host_process_tick`` with the
+engine so fused-vs-per-tick metric parity holds by construction.
+
 ``benchmarks/dataplane.py`` records the large-batch routing speedup of
 the JAX plane (``BENCH_dataplane.json``); ``benchmarks/control_plane.py``
-records the round-close/planner speedup (``BENCH_control.json``).
+records the round-close/planner speedup (``BENCH_control.json``);
+``benchmarks/engine_throughput.py`` records the end-to-end fused-engine
+speedup (``BENCH_engine.json``).
 """
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
 
 from ..core import geometry, planner
 from ..core import statistics as S
+from .fused import (DeviceState, EngineCarry, FusedHostState, FusedOutputs,
+                    FusedParams, host_process_tick)
 
 
 def probe_term(mod, q, kappa_probe, q_cache):
@@ -126,6 +146,47 @@ class DataPlane:
         the argmin)."""
         raise NotImplementedError
 
+    # -- device-resident fused ingest (streaming.fused) ---------------------
+    def make_state(self, host: FusedHostState) -> DeviceState:
+        """Upload one router snapshot as a resident :class:`DeviceState`
+        (collector banks start at zero)."""
+        raise NotImplementedError
+
+    def scatter_update(self, state: DeviceState,
+                       updates: dict[str, tuple]) -> DeviceState:
+        """Apply ``FusedHostState.diff`` output in place: scatter the
+        changed entries of each named field (a rebalance touches a few
+        partitions; nothing else is re-transferred)."""
+        raise NotImplementedError
+
+    def reset_collectors(self, state: DeviceState) -> DeviceState:
+        """Zero the N′ collector banks (after the engine drained them
+        into the host stats bank via ``Swarm.absorb_collectors``)."""
+        raise NotImplementedError
+
+    def step(self, state: DeviceState, cp: CostParams, xy,
+             track_stats: bool = False, query_batch=None):
+        """One fused ingest step: route + price ``xy`` and accumulate
+        the N′ collectors on the resident state in a single dispatch.
+        Returns ``(state, (pids, owners, costs))``.  Query registration
+        is a host-boundary event by design (arrivals are rare and touch
+        the partition boxes the planner owns), so ``query_batch`` must
+        be ``None`` — the engine routes ``QueryBatch`` events through
+        the per-tick path between windows."""
+        raise NotImplementedError
+
+    def run_window(self, state: DeviceState, cp: CostParams,
+                   fp: FusedParams, carry: EngineCarry, xy_stack):
+        """Execute ``len(xy_stack)`` fused engine ticks (inject →
+        route/price/collect → process → backpressure).  ``xy_stack`` is
+        (W, B, 2) with B = ⌊λmax⌋ staged candidates per tick.  Returns
+        ``(state, carry, FusedOutputs, ok)``; ``ok`` is False when the
+        window cannot represent the tick dynamics exactly (the JAX
+        plane's histogram factoring assumes backpressure stays idle) —
+        the caller must then discard all four values and replay the
+        staged batches through the per-tick reference path."""
+        raise NotImplementedError
+
 
 # ---------------------------------------------------------------------------
 # NumPy reference plane
@@ -210,6 +271,71 @@ class NumpyPlane(DataPlane):
     def split_costs(self, stats, pids, boxes, r_s, cost_fn):
         return planner.numpy_split_costs(stats, pids, boxes, r_s, cost_fn)
 
+    # -- device-resident fused ingest (reference semantics) -----------------
+    def make_state(self, host: FusedHostState) -> DeviceState:
+        g1 = host.grid.shape[0] + 1
+        z = lambda: np.zeros((host.capacity, g1), np.float32)
+        return DeviceState(host.grid, host.owner, host.qres, host.area_frac,
+                           host.q_machine, z(), z())
+
+    def scatter_update(self, state: DeviceState,
+                       updates: dict[str, tuple]) -> DeviceState:
+        repl = {}
+        for name, (idx, vals) in updates.items():
+            arr = getattr(state, name).copy()
+            arr[idx] = vals
+            repl[name] = arr
+        return state._replace(**repl)
+
+    def reset_collectors(self, state: DeviceState) -> DeviceState:
+        return state._replace(cn_rows=np.zeros_like(state.cn_rows),
+                              cn_cols=np.zeros_like(state.cn_cols))
+
+    def step(self, state: DeviceState, cp: CostParams, xy,
+             track_stats: bool = False, query_batch=None):
+        if query_batch is not None:
+            raise NotImplementedError(
+                "query registration is a host-boundary event; ingest "
+                "QueryBatch through the router between fused windows")
+        pids, owners, costs = self.tuple_costs(
+            xy, state.grid, state.owner, state.qres, state.q_machine,
+            state.area_frac, cp)
+        if track_stats:
+            row, col = geometry.points_to_cells(np.asarray(xy),
+                                                state.grid.shape[0])
+            one = np.ones(len(pids), np.float32)
+            np.add.at(state.cn_rows, (pids, row), one)
+            np.add.at(state.cn_cols, (pids, col), one)
+        return state, (pids, owners, costs)
+
+    def run_window(self, state: DeviceState, cp: CostParams,
+                   fp: FusedParams, carry: EngineCarry, xy_stack):
+        """The per-tick reference loop over pre-staged batches: same
+        float64 host math, same ``np.add.at`` ordering, shared
+        ``host_process_tick`` — metrics-equal to ``StreamingEngine.
+        step`` by construction."""
+        qu = np.asarray(carry.queue_units, np.float64).copy()
+        qt = np.asarray(carry.queue_tuples, np.float64).copy()
+        lam_bp = float(carry.lam_bp)
+        w = len(xy_stack)
+        m = len(qu)
+        thr, lat = np.zeros(w), np.zeros(w)
+        util = np.zeros((w, m))
+        inj = np.zeros(w, np.int64)
+        for i in range(w):
+            n = int(min(fp.lambda_max, lam_bp))
+            state, (_, owners, costs) = self.step(
+                state, cp, xy_stack[i, :n], track_stats=fp.track_stats)
+            np.add.at(qu, owners, costs.astype(np.float64))
+            np.add.at(qt, owners, 1.0)
+            pu, thr[i], lat[i], lam_bp = host_process_tick(
+                qu, qt, lam_bp, fp.cap_units, fp.alive, fp.bp_high,
+                fp.bp_dec, fp.bp_inc, fp.lambda_max)
+            util[i] = pu / np.maximum(fp.cap_units, 1e-9)
+            inj[i] = n
+        return state, EngineCarry(qu, qt, lam_bp), FusedOutputs(
+            thr, lat, util, inj), True
+
 
 # ---------------------------------------------------------------------------
 # JAX plane (jit-fused; Pallas kernel packages for exact match work)
@@ -226,6 +352,41 @@ def _pad64(n: int) -> int:
     return max(64, -(-n // 64) * 64)
 
 
+class _UploadCache:
+    """Content-addressed host→device upload cache for the *state* side
+    of the per-call API (owner table, qres, machine counts, cost
+    scalars).  These arrays are tiny but were re-converted and
+    re-uploaded on every batch, which is what made the JAX plane lose
+    to NumPy at small batch sizes (BENCH_dataplane.json): routers
+    mutate them only at query arrivals and round boundaries, so between
+    rounds every call re-shipped identical bytes.  Keying on the exact
+    content (dtype, shape, bytes) makes the cache safe against in-place
+    mutation — a changed ``qres`` is simply a miss.  Large arrays (the
+    batches themselves) bypass the cache: hashing them would cost more
+    than the transfer saves."""
+
+    MAX_BYTES = 1 << 16
+    MAX_ITEMS = 256
+
+    def __init__(self, jnp):
+        self._jnp = jnp
+        self._items: OrderedDict[tuple, object] = OrderedDict()
+
+    def get(self, arr: np.ndarray):
+        if arr.nbytes > self.MAX_BYTES:
+            return self._jnp.asarray(arr)
+        key = (arr.dtype.str, arr.shape, arr.tobytes())
+        dev = self._items.get(key)
+        if dev is None:
+            dev = self._jnp.asarray(arr)
+            self._items[key] = dev
+            if len(self._items) > self.MAX_ITEMS:
+                self._items.popitem(last=False)
+        else:
+            self._items.move_to_end(key)
+        return dev
+
+
 class JaxPlane(DataPlane):
     name = "jax"
 
@@ -234,11 +395,26 @@ class JaxPlane(DataPlane):
         import jax.numpy as jnp
         self._jax, self._jnp = jax, jnp
         self._on_tpu = jax.default_backend() == "tpu"
+        # input-output buffer aliasing for the resident fused state in
+        # the single-tick step path (run_window deliberately does not
+        # donate — declined windows roll back to the pre-window state);
+        # the CPU runtime has no donation support and would only warn
+        self._donate_step = () if jax.default_backend() == "cpu" else (0,)
+        self._upload = _UploadCache(jnp)
         self._jit_tuple = jax.jit(self._tuple_fn,
                                   static_argnames=("tuple_driven",))
         self._jit_match = jax.jit(self._match_fn)
         self._jit_probe = jax.jit(self._probe_fn)
+        self._jit_probe_route = jax.jit(self._probe_route_fn)
         self._jit_split_terms = jax.jit(self._split_terms_fn)
+        # persistent scatter executables (eager .at[].set would compile
+        # a throwaway program per call); pow2-padded index buckets keep
+        # the per-shape compile count bounded
+        self._jit_set1 = jax.jit(lambda a, i, v: a.at[i].set(v))
+        self._jit_set2 = jax.jit(lambda a, r, c, v: a.at[r, c].set(v))
+        self._jit_zero = jax.jit(lambda a: jnp.zeros_like(a))
+        self._step_cache: dict[tuple, object] = {}
+        self._window_cache: dict[tuple, object] = {}
 
     # -- jit bodies ---------------------------------------------------------
     @staticmethod
@@ -249,11 +425,12 @@ class JaxPlane(DataPlane):
         pids = grid[row, col]
         return pids, owner_table[pids]
 
-    def _tuple_fn(self, xy, grid, owner_table, qres, q_machine, area_frac,
-                  c0, kappa_probe, kappa_match, q_cache, query_area,
-                  match_factor, store_cost, *, tuple_driven: bool):
+    def _cost_body(self, n, pids, owners, qres, q_machine, area_frac,
+                   c0, kappa_probe, kappa_match, q_cache, query_area,
+                   match_factor, store_cost, tuple_driven: bool):
+        """The per-tuple §6 cost terms — one home shared by the legacy
+        per-call path, the fused single step and the scanned window."""
         jnp = self._jnp
-        pids, owners = self._route_fn(jnp, xy, grid, owner_table)
         if tuple_driven:
             q = q_machine[owners].astype(jnp.float32)
             probe = probe_term(jnp, q, kappa_probe, q_cache)
@@ -262,8 +439,19 @@ class JaxPlane(DataPlane):
             match = kappa_match * qres[pids] * cov
             costs = c0 + probe + match_factor * match
         else:
-            costs = jnp.full(xy.shape[0], c0, jnp.float32)
-        return pids, owners, (costs + store_cost).astype(jnp.float32)
+            costs = jnp.full(n, c0, jnp.float32)
+        return (costs + store_cost).astype(jnp.float32)
+
+    def _tuple_fn(self, xy, grid, owner_table, qres, q_machine, area_frac,
+                  c0, kappa_probe, kappa_match, q_cache, query_area,
+                  match_factor, store_cost, *, tuple_driven: bool):
+        jnp = self._jnp
+        pids, owners = self._route_fn(jnp, xy, grid, owner_table)
+        costs = self._cost_body(xy.shape[0], pids, owners, qres, q_machine,
+                                area_frac, c0, kappa_probe, kappa_match,
+                                q_cache, query_area, match_factor,
+                                store_cost, tuple_driven)
+        return pids, owners, costs
 
     def _match_fn(self, xy, grid, qres, area_frac, query_area, kappa_match):
         jnp = self._jnp
@@ -273,8 +461,8 @@ class JaxPlane(DataPlane):
             query_area / jnp.maximum(area_frac[pids], 1e-12), 1.0)
         return pids, kappa_match * qres[pids] * cov
 
-    def _probe_fn(self, rects, pids, owners, store_counts, d_machine,
-                  area_frac, c0, kappa_probe, scan_kappa):
+    def _probe_body(self, rects, pids, owners, store_counts, d_machine,
+                    area_frac, c0, kappa_probe, scan_kappa):
         jnp = self._jnp
         probe = kappa_probe * jnp.log2(
             1.0 + d_machine[owners].astype(jnp.float32))
@@ -284,7 +472,28 @@ class JaxPlane(DataPlane):
         scan = scan_kappa * store_counts[pids] * cov
         return (c0 + probe + scan).astype(jnp.float32)
 
-    # -- padding helpers ----------------------------------------------------
+    def _probe_fn(self, rects, pids, owners, store_counts, d_machine,
+                  area_frac, c0, kappa_probe, scan_kappa):
+        return self._probe_body(rects, pids, owners, store_counts,
+                                d_machine, area_frac, c0, kappa_probe,
+                                scan_kappa)
+
+    def _probe_route_fn(self, rects, grid, owner_table, store_counts,
+                        d_machine, area_frac, c0, kappa_probe, scan_kappa):
+        """Routing fused into the probe pricing: center extraction, the
+        cell gather and the log2 probe term are one XLA executable —
+        one dispatch instead of a host-side route plus a pricing
+        dispatch (the 1.33×-at-1M bottleneck in BENCH_dataplane)."""
+        jnp = self._jnp
+        centers = jnp.stack([(rects[:, 0] + rects[:, 2]) * 0.5,
+                             (rects[:, 1] + rects[:, 3]) * 0.5], axis=1)
+        pids, owners = self._route_fn(jnp, centers, grid, owner_table)
+        costs = self._probe_body(rects, pids, owners, store_counts,
+                                 d_machine, area_frac, c0, kappa_probe,
+                                 scan_kappa)
+        return pids, owners, costs
+
+    # -- padding / upload helpers -------------------------------------------
     def _padded(self, arr, n_pad, fill=0.0):
         jnp = self._jnp
         pad = n_pad - arr.shape[0]
@@ -293,17 +502,29 @@ class JaxPlane(DataPlane):
         widths = ((0, pad),) + ((0, 0),) * (arr.ndim - 1)
         return jnp.pad(jnp.asarray(arr), widths, constant_values=fill)
 
+    def _dev(self, arr, dtype=None):
+        """Device copy of a (small) state array through the
+        content-addressed upload cache: unchanged state is shipped once
+        per round, not once per batch."""
+        return self._upload.get(np.asarray(arr, dtype))
+
+    def _sc(self, v) -> object:
+        """Cached device scalar (float32)."""
+        return self._upload.get(np.float32(v))
+
     # -- interface ----------------------------------------------------------
     def tuple_costs(self, xy, grid, owner_table, qres, q_machine,
                     area_frac, p: CostParams):
         n = len(xy)
         xy_p = self._padded(np.asarray(xy, np.float32), _pad_pow2(n))
         pids, owners, costs = self._jit_tuple(
-            xy_p, grid, np.asarray(owner_table, np.int32),
-            np.asarray(qres, np.float32), np.asarray(q_machine, np.float32),
-            np.asarray(area_frac, np.float32),
-            p.c0, p.kappa_probe, p.kappa_match, p.q_cache, p.query_area,
-            p.match_factor, p.store_cost, tuple_driven=p.tuple_driven)
+            xy_p, self._dev(grid), self._dev(owner_table, np.int32),
+            self._dev(qres, np.float32), self._dev(q_machine, np.float32),
+            self._dev(area_frac, np.float32),
+            self._sc(p.c0), self._sc(p.kappa_probe), self._sc(p.kappa_match),
+            self._sc(p.q_cache), self._sc(p.query_area),
+            self._sc(p.match_factor), self._sc(p.store_cost),
+            tuple_driven=p.tuple_driven)
         return (np.asarray(pids)[:n], np.asarray(owners, np.int32)[:n],
                 np.asarray(costs)[:n])
 
@@ -312,31 +533,34 @@ class JaxPlane(DataPlane):
         n = len(xy)
         xy_p = self._padded(np.asarray(xy, np.float32), _pad_pow2(n))
         pids, match = self._jit_match(
-            xy_p, grid, np.asarray(qres, np.float32),
-            np.asarray(area_frac, np.float32), query_area, kappa_match)
+            xy_p, self._dev(grid), self._dev(qres, np.float32),
+            self._dev(area_frac, np.float32), self._sc(query_area),
+            self._sc(kappa_match))
         return np.asarray(pids)[:n], np.asarray(match)[:n]
 
     def probe_costs(self, rects, grid, owner_table, store_counts,
                     d_machine, area_frac, p: CostParams,
                     pids=None, owners=None):
         rects = np.asarray(rects, np.float32)
-        if pids is None:
-            centers = np.stack([(rects[:, 0] + rects[:, 2]) * 0.5,
-                                (rects[:, 1] + rects[:, 3]) * 0.5], axis=1)
-            g = grid.shape[0]
-            row, col = geometry.points_to_cells(centers, g)
-            pids = grid[row, col]
-            owners = np.asarray(owner_table)[pids]
         n = len(rects)
         n_pad = _pad_pow2(n)
+        state = (self._dev(store_counts, np.float32),
+                 self._dev(d_machine, np.float32),
+                 self._dev(area_frac, np.float32),
+                 self._sc(p.c0), self._sc(p.kappa_probe),
+                 self._sc(p.scan_kappa))
+        if pids is None:
+            # routing fused into the pricing dispatch (one executable)
+            pids_d, owners_d, costs = self._jit_probe_route(
+                self._padded(rects, n_pad), self._dev(grid),
+                self._dev(owner_table, np.int32), *state)
+            return (np.asarray(pids_d, np.int32)[:n],
+                    np.asarray(owners_d, np.int32)[:n],
+                    np.asarray(costs)[:n])
         costs = self._jit_probe(
             self._padded(rects, n_pad),
             self._padded(np.asarray(pids, np.int32), n_pad),
-            self._padded(np.asarray(owners, np.int32), n_pad),
-            np.asarray(store_counts, np.float32),
-            np.asarray(d_machine, np.float32),
-            np.asarray(area_frac, np.float32),
-            p.c0, p.kappa_probe, p.scan_kappa)
+            self._padded(np.asarray(owners, np.int32), n_pad), *state)
         return (np.asarray(pids, np.int32), np.asarray(owners, np.int32),
                 np.asarray(costs)[:n])
 
@@ -427,6 +651,252 @@ class JaxPlane(DataPlane):
         # core.planner.split_terms is backend-neutral: tracing it here
         # compiles the exact reference source
         return planner.split_terms(bank_sub, a1, bank_sub.shape[-1] - 1)
+
+    # -- device-resident fused ingest ---------------------------------------
+    def make_state(self, host: FusedHostState) -> DeviceState:
+        jnp = self._jnp
+        g1 = host.grid.shape[0] + 1
+        z = lambda: jnp.zeros((host.capacity, g1), jnp.float32)
+        return DeviceState(
+            jnp.asarray(host.grid, jnp.int32),
+            jnp.asarray(host.owner, jnp.int32),
+            jnp.asarray(np.asarray(host.qres, np.float32)),
+            jnp.asarray(np.asarray(host.area_frac, np.float32)),
+            jnp.asarray(np.asarray(host.q_machine, np.float32)),
+            z(), z())
+
+    def scatter_update(self, state: DeviceState,
+                       updates: dict[str, tuple]) -> DeviceState:
+        jnp = self._jnp
+        repl = {}
+        for name, (idx, vals) in updates.items():
+            dt = np.int32 if name in ("grid", "owner") else np.float32
+            # pad to pow2 buckets by repeating the *last* update
+            # (mode='edge'): duplicate same-index/same-value .set is
+            # idempotent, and bucketing keeps every diff size from
+            # compiling a fresh scatter executable
+            vals = np.asarray(vals, dt)
+            k, kp = len(vals), _pad_pow2(len(vals))
+            pad = ((0, kp - k),)
+            vals = np.pad(vals, pad, mode="edge")
+            arr = getattr(state, name)
+            if isinstance(idx, tuple):
+                r, c = (np.pad(np.asarray(i), pad, mode="edge")
+                        for i in idx)
+                repl[name] = self._jit_set2(arr, r, c, jnp.asarray(vals))
+            else:
+                idx = np.pad(np.asarray(idx), pad, mode="edge")
+                repl[name] = self._jit_set1(arr, idx, jnp.asarray(vals))
+        return state._replace(**repl)
+
+    def reset_collectors(self, state: DeviceState) -> DeviceState:
+        return state._replace(cn_rows=self._jit_zero(state.cn_rows),
+                              cn_cols=self._jit_zero(state.cn_cols))
+
+    def _cost_scalars(self, cp: CostParams) -> tuple:
+        return (self._sc(cp.c0), self._sc(cp.kappa_probe),
+                self._sc(cp.kappa_match), self._sc(cp.q_cache),
+                self._sc(cp.query_area), self._sc(cp.match_factor),
+                self._sc(cp.store_cost))
+
+    def _step_fn(self, state, xy, n, sc, *, track_stats: bool,
+                 tuple_driven: bool):
+        """Single fused ingest step: route + price + collector scatter.
+        ``n`` masks the valid prefix of the padded batch (padding rows
+        must not pollute the collectors)."""
+        jnp = self._jnp
+        b = xy.shape[0]
+        mask = (jnp.arange(b) < n).astype(jnp.float32)
+        row, col = geometry.points_to_cells(xy, state.grid.shape[0])
+        pids = state.grid[row, col]
+        owners = state.owner[pids]
+        costs = self._cost_body(b, pids, owners, state.qres,
+                                state.q_machine, state.area_frac, *sc,
+                                tuple_driven=tuple_driven)
+        if track_stats:
+            state = state._replace(
+                cn_rows=state.cn_rows.at[pids, row].add(mask),
+                cn_cols=state.cn_cols.at[pids, col].add(mask))
+        return state, (pids, owners, costs)
+
+    def step(self, state: DeviceState, cp: CostParams, xy,
+             track_stats: bool = False, query_batch=None):
+        if query_batch is not None:
+            raise NotImplementedError(
+                "query registration is a host-boundary event; ingest "
+                "QueryBatch through the router between fused windows")
+        n = len(xy)
+        n_pad = _pad_pow2(n)
+        key = (n_pad, state.owner.shape[0], state.grid.shape[0],
+               track_stats, cp.tuple_driven)
+        fn = self._step_cache.get(key)
+        if fn is None:
+            fn = self._jax.jit(
+                functools.partial(self._step_fn, track_stats=track_stats,
+                                  tuple_driven=cp.tuple_driven),
+                donate_argnums=self._donate_step)
+            self._step_cache[key] = fn
+        state, (pids, owners, costs) = fn(
+            state, self._padded(np.asarray(xy, np.float32), n_pad),
+            np.int32(n), self._cost_scalars(cp))
+        return state, (np.asarray(pids, np.int32)[:n],
+                       np.asarray(owners, np.int32)[:n],
+                       np.asarray(costs)[:n])
+
+    def _window_fn(self, state, carry, hists, sc, ep, alive, *,
+                   track_stats: bool, tuple_driven: bool, batch: int,
+                   p_used: int):
+        """One window as one XLA executable, factored through the cell
+        histogram.
+
+        Every per-tuple quantity of the fused tick is a function of the
+        tuple's partition alone (cost terms read only per-partition /
+        per-machine state; the N′ collectors bin by (partition, cell
+        coordinate)), so a tick's whole effect factors through the
+        per-cell count histogram: per-partition counts are a (W, G²) @
+        (G², P) matmul, the per-machine queue aggregates an O(P·M)
+        contraction, and the collector deltas an O(G²·P) einsum — no
+        per-item scatter at all, which XLA CPU serializes (and the TPU
+        MXU turns these matmuls into its native op; cf. the
+        ``kernels/moe_histogram`` counting pattern).  The engine
+        dynamics then run as a ``lax.scan`` over the tiny (W, M)
+        aggregate stack — the float32 mirror of
+        ``fused.host_process_tick``.
+
+        The histograms count *full* staged batches, so the window is
+        valid only while backpressure stays idle (``n_t == batch``
+        every tick, the steady state).  The scan tracks exactly that:
+        the returned ``ok`` is False as soon as the throttled injection
+        ``n_t`` drops below ``batch``, and the caller discards the
+        window and replays it through the reference path — congested
+        regimes take the exact loop, fused windows never approximate.
+
+        ``n_ticks`` masks the valid prefix: windows are padded to pow2
+        tick buckets (with zero histograms) so ragged chunk tails share
+        one compiled executable; masked ticks pass the carry through
+        untouched.
+        """
+        jnp, lax = self._jnp, self._jax.lax
+        g = state.grid.shape[0]
+        m = alive.shape[0]
+        cap_units, lambda_max, bp_high, bp_dec, bp_inc, n_ticks = ep
+        # only the allocated-id prefix participates (ids are never
+        # reused, the grid references live pids only — the same
+        # live-subset principle as close_round), so the window's
+        # matmul work stays flat while the capacity bank grows
+        owner_u = state.owner[:p_used]
+        # HIGHEST precision: counts are exact integers in float32, and
+        # the default TPU matmul precision (bf16 inputs) would round
+        # per-cell counts above 256 — the collector fold must stay
+        # exact (Swarm.absorb_collectors contract)
+        mm = functools.partial(jnp.matmul,
+                               precision=self._jax.lax.Precision.HIGHEST)
+        cell_pid = (state.grid.reshape(-1)[:, None]
+                    == jnp.arange(p_used)[None, :]).astype(jnp.float32)
+        count_wp = mm(hists, cell_pid)                   # exact int counts
+        cost_p = self._cost_body(p_used, jnp.arange(p_used), owner_u,
+                                 state.qres, state.q_machine,
+                                 state.area_frac, *sc,
+                                 tuple_driven=tuple_driven)
+        owner_m = (owner_u[:, None]
+                   == jnp.arange(m)[None, :]).astype(jnp.float32)
+        units_wm = mm(count_wp, cost_p[:, None] * owner_m)
+        tuples_wm = mm(count_wp, owner_m)
+        cap = cap_units * alive
+        ticks = jnp.arange(hists.shape[0])
+
+        def body(c, x):
+            qu0, qt0, lam0 = c
+            du, dt, i = x
+            valid = i < n_ticks
+            n = jnp.floor(jnp.minimum(lambda_max, lam0)).astype(jnp.int32)
+            ok = (n >= batch) | ~valid       # full-batch optimism holds
+            qu = qu0 + du
+            qt = qt0 + dt
+            pu = jnp.minimum(qu, cap)
+            avg = jnp.where(qt > 0, qu / jnp.maximum(qt, 1e-9), 1.0)
+            pt = jnp.minimum(pu / jnp.maximum(avg, 1e-9), qt)
+            qu = qu - pt * avg
+            qt = qt - pt
+            delay = jnp.where(cap > 0,
+                              qu / jnp.maximum(cap, 1e-9)
+                              + avg / jnp.maximum(cap, 1e-9), 0.0)
+            w = pt.sum()
+            latency = jnp.where(
+                w > 0, (delay * pt).sum() / jnp.maximum(w, 1e-9), 0.0)
+            lam = jnp.where(
+                (qu > bp_high * cap_units).any(),
+                jnp.maximum(lam0 * bp_dec, 1.0),
+                jnp.minimum(lam0 + bp_inc * lambda_max, lambda_max))
+            util = pu / jnp.maximum(cap_units, 1e-9)
+            c = (jnp.where(valid, qu, qu0), jnp.where(valid, qt, qt0),
+                 jnp.where(valid, lam, lam0))
+            return c, (w, latency, util, n, ok)
+
+        carry, (w_, lat, util, n_, ok) = lax.scan(
+            body, carry, (units_wm, tuples_wm, ticks))
+        if track_stats:
+            hist2d = hists.sum(0).reshape(g, g)
+            oh3 = cell_pid.reshape(g, g, p_used)
+            hp = self._jax.lax.Precision.HIGHEST
+            state = state._replace(
+                cn_rows=state.cn_rows.at[:p_used, :g].add(
+                    jnp.einsum("rc,rcp->pr", hist2d, oh3, precision=hp)),
+                cn_cols=state.cn_cols.at[:p_used, :g].add(
+                    jnp.einsum("rc,rcp->pc", hist2d, oh3, precision=hp)))
+        return state, carry, (w_, lat, util, n_), ok.all()
+
+    def run_window(self, state: DeviceState, cp: CostParams,
+                   fp: FusedParams, carry: EngineCarry, xy_stack):
+        jnp = self._jnp
+        w, b = xy_stack.shape[:2]
+        g = state.grid.shape[0]
+        wp = _pad_pow2(w)                    # ragged tails share a compile
+        # host pre-pass: full-batch per-tick cell histograms.  The raw
+        # points never cross to the device — only (W, G²) counts do,
+        # shrinking the upload ~batch/G²-fold; geometry.points_to_cells
+        # keeps the cell convention shared with every other path.
+        hists = np.zeros((wp, g * g), np.float32)
+        for i in range(w):
+            row, col = geometry.points_to_cells(
+                np.asarray(xy_stack[i], np.float32), g)
+            hists[i] = np.bincount(row.astype(np.int64) * g + col,
+                                   minlength=g * g)
+        # allocated-id prefix, in 64-row buckets like close_round (the
+        # prefix drifts by a few ids per round; full capacity only as
+        # the fallback when no prefix was provided)
+        p_cap = state.owner.shape[0]
+        p_used = min(_pad64(fp.n_alloc), p_cap) if fp.n_alloc else p_cap
+        key = (wp, b, p_cap, p_used, g, len(fp.alive),
+               fp.track_stats, cp.tuple_driven)
+        fn = self._window_cache.get(key)
+        if fn is None:
+            # deliberately NOT donated: a declined window (ok=False)
+            # rolls back to the pre-window state, which must stay alive
+            # — the mutable part (collector banks) is small
+            fn = self._jax.jit(
+                functools.partial(self._window_fn,
+                                  track_stats=fp.track_stats,
+                                  tuple_driven=cp.tuple_driven, batch=b,
+                                  p_used=p_used))
+            self._window_cache[key] = fn
+        ep = tuple(self._sc(v) for v in (fp.cap_units, fp.lambda_max,
+                                         fp.bp_high, fp.bp_dec, fp.bp_inc)
+                   ) + (self._upload.get(np.int32(w)),)
+        carry_dev = (jnp.asarray(np.asarray(carry.queue_units, np.float32)),
+                     jnp.asarray(np.asarray(carry.queue_tuples, np.float32)),
+                     jnp.float32(carry.lam_bp))
+        state, (qu, qt, lam_bp), outs, ok = fn(
+            state, carry_dev, jnp.asarray(hists),
+            self._cost_scalars(cp), ep, self._dev(fp.alive, np.float32))
+        return (state,
+                EngineCarry(np.asarray(qu, np.float64),
+                            np.asarray(qt, np.float64), float(lam_bp)),
+                FusedOutputs(np.asarray(outs[0], np.float64)[:w],
+                             np.asarray(outs[1], np.float64)[:w],
+                             np.asarray(outs[2], np.float64)[:w],
+                             np.asarray(outs[3], np.int64)[:w]),
+                bool(ok))
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,15 @@ QUERY_SIDE = 0.02
 HOTSPOT_SIDE = 0.15
 
 
+def rects_around(foci: np.ndarray, side: float) -> np.ndarray:
+    """Axis-aligned rects of side ``side`` centered on ``foci``,
+    clipped into the unit space — the one home of the query/probe
+    rectangle convention."""
+    half = side / 2
+    return np.clip(np.concatenate([foci - half, foci + half], axis=1),
+                   0.0, 0.999).astype(np.float32)
+
+
 def make_city_mixture(rng: np.random.Generator, n_cities: int = 24):
     """Weights/centers/scales for the Twitter-like background mixture."""
     centers = rng.uniform(0.05, 0.95, size=(n_cities, 2))
@@ -61,10 +70,7 @@ class TwitterLikeSource:
 
     def sample_queries(self, n: int, side: float = QUERY_SIDE,
                        tick: int = 0) -> np.ndarray:
-        foci = self.sample_points(n, tick)
-        half = side / 2
-        rects = np.concatenate([foci - half, foci + half], axis=1)
-        return np.clip(rects, 0.0, 0.999).astype(np.float32)
+        return rects_around(self.sample_points(n, tick), side)
 
 
 @dataclass
@@ -109,10 +115,7 @@ class Hotspot:
         if self.query_burst <= 0 or t < 0 or t >= burst_ticks:
             return np.zeros((0, 4), np.float32)
         n = self.query_burst // burst_ticks
-        foci = self.sample_inside(rng, n)
-        half = side / 2
-        return np.clip(np.concatenate([foci - half, foci + half], 1),
-                       0.0, 0.999).astype(np.float32)
+        return rects_around(self.sample_inside(rng, n), side)
 
 
 @dataclass
@@ -162,10 +165,66 @@ class ScenarioSource:
         """One-shot probe rectangles for the SNAPSHOT query model."""
         if rate <= 0:
             return np.zeros((0, 4), np.float32)
-        foci = self.sample_points(int(rate), tick)
-        half = side / 2
-        return np.clip(np.concatenate([foci - half, foci + half], axis=1),
-                       0.0, 0.999).astype(np.float32)
+        return rects_around(self.sample_points(int(rate), tick), side)
+
+    def next_query_arrival(self, tick: int) -> int | None:
+        """First tick ≥ ``tick`` whose ``query_arrivals`` is non-empty,
+        or ``None``.  Burst windows are deterministic (hotspot start +
+        the 4-tick first minute), so the fused engine path can cut its
+        scan windows without consuming the RNG."""
+        nxt = None
+        for h in self.hotspots:
+            if h.query_burst < 4:     # burst//4 == 0 emits nothing
+                continue
+            c = max(tick, h.start)
+            if c < h.start + 4 and (nxt is None or c < nxt):
+                nxt = c
+        return nxt
+
+
+@dataclass
+class ReplaySource:
+    """Pre-generated point pool served as cyclic slices.
+
+    Takes source synthesis (mixture sampling is itself a hot loop) off
+    the measured path of engine-throughput benchmarks — a deployed
+    system reads tuples from network buffers, it does not synthesize
+    them.  Queries delegate to a ``TwitterLikeSource`` so routers still
+    see a realistic resident set; the arrival schedule is empty."""
+
+    pool: np.ndarray
+    base: TwitterLikeSource | None = None
+    query_side: float = QUERY_SIDE
+    cursor: int = 0
+
+    def __post_init__(self):
+        if self.base is None:
+            self.base = TwitterLikeSource()
+
+    def sample_points(self, n: int, tick: int = 0) -> np.ndarray:
+        n, size = int(n), len(self.pool)
+        lo = self.cursor
+        self.cursor = (lo + n) % size
+        if lo + n <= size:
+            return self.pool[lo:lo + n]
+        # wraps (possibly several times for n > pool size): gather by
+        # modular index so the batch always has exactly n points
+        return self.pool[(lo + np.arange(n)) % size]
+
+    def sample_queries(self, n: int, tick: int = 0) -> np.ndarray:
+        return self.base.sample_queries(n, side=self.query_side, tick=tick)
+
+    def query_arrivals(self, tick: int) -> np.ndarray:
+        return np.zeros((0, 4), np.float32)
+
+    def snapshot_arrivals(self, tick: int, rate: int,
+                          side: float) -> np.ndarray:
+        if rate <= 0:
+            return np.zeros((0, 4), np.float32)
+        return rects_around(self.sample_points(int(rate), tick), side)
+
+    def next_query_arrival(self, tick: int) -> int | None:
+        return None
 
 
 # ---------------------------------------------------------------------------

@@ -38,7 +38,7 @@ def test_serve_launcher_smoke():
 
 def test_elastic_restore_onto_different_mesh():
     """A checkpoint written on 1 device restores onto a 2×4 mesh with
-    sharded placement (DESIGN §6: elastic resharding on restart)."""
+    sharded placement (DESIGN §7: elastic resharding on restart)."""
     code = r"""
 import os, sys, tempfile
 ckpt_dir = sys.argv[1]
