@@ -22,11 +22,11 @@ def run() -> dict:
     for (name, q), exp in cells.items():
         res = results[exp.label]
         m, a = res.metrics, res.asarrays()
-        uow = float(a["units_of_work"].mean()) if not m.infeasible else 0.0
-        lat = float(np.mean(a["latency"])) if not m.infeasible else np.inf
-        out[(name, q)] = (uow, lat, m.infeasible)
+        uow = float(a["units_of_work"].mean()) if not m.was_infeasible else 0.0
+        lat = float(np.mean(a["latency"])) if not m.was_infeasible else np.inf
+        out[(name, q)] = (uow, lat, m.was_infeasible)
         emit(f"fig11a/{name}/q={q}", res.wall_s / TICKS * 1e6,
-             f"uow={uow:.3e} infeasible={m.infeasible}")
+             f"uow={uow:.3e} infeasible={m.was_infeasible}")
         emit(f"fig11b/{name}/q={q}", res.wall_s / TICKS * 1e6,
              f"lat={lat:.3f}")
     # headline: SWARM vs history grid over |Q| where both are feasible

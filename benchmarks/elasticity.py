@@ -1,0 +1,181 @@
+"""Elastic-membership benchmark: recovery time to balanced utilization
+under a scheduled kill → join → straggler timeline (BENCH_elastic.json).
+
+SWARM and the history-balanced static grid run the *same* deterministic
+membership schedule through ``run_suite`` on both data planes with the
+device-resident fused path on (``fused_window > 0``): a machine is
+killed (heartbeat-detected, planner-evacuated), a standby machine joins
+(load drains onto it through ordinary FSM-gated rounds), and a machine
+turns straggler (its capacity factor folds into C(m) so rounds shed its
+load).  For each event we record the *recovery time*: ticks until the
+trailing-window throughput returns to ≥ ``THR_FRAC`` of its pre-event
+level while the utilization spread (CoV of effective utilization over
+member machines) returns to its pre-event band.  A router that never
+re-balances leaves the dead machine's share of the stream lost, the
+joiner idle and the straggler saturated — it never recovers and scores
+the full segment length.
+
+Before anything is timed the harness *asserts* fused/per-tick metric
+identity across the scheduled timeline on the NumPy plane (and
+tolerance-parity on JAX) — the recovery numbers cannot silently diverge
+from the per-tick reference semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.streaming import (EngineConfig, Experiment, MembershipEvent,
+                             RouterSpec, ScenarioSpec, run_suite, sweep)
+from repro.streaming import run as run_experiment
+
+from .common import emit
+
+G, M = 64, 10
+STANDBY = 1                  # slot 9 starts outside the cluster
+KILLED, JOINER, SLOW = 3, 9, 5
+SLOW_FACTOR = 0.1
+WINDOW = 8
+THR_FRAC = 0.92              # recovered ⇒ trailing throughput ≥ 92 % of pre
+COV_SLACK = 1.3              # … and CoV ≤ 1.3 × pre-event spread (+0.05 abs)
+OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_elastic.json")
+
+
+def timeline(ticks: int) -> tuple[MembershipEvent, ...]:
+    return (MembershipEvent(ticks // 4, "fail", KILLED),
+            MembershipEvent(ticks // 2, "join", JOINER),
+            MembershipEvent((3 * ticks) // 4, "slow", SLOW, SLOW_FACTOR))
+
+
+def _spec(ticks: int) -> ScenarioSpec:
+    return ScenarioSpec("none", ticks=ticks, preload_queries=2000,
+                        query_burst=0, membership=timeline(ticks))
+
+
+def _cfg(fused: bool) -> EngineConfig:
+    return EngineConfig(num_machines=M, cap_units=6e4, lambda_max=4000,
+                        mem_queries=10**8, round_every=1,
+                        standby_machines=STANDBY,
+                        fused_window=WINDOW if fused else 0)
+
+
+ROUTERS = {"swarm": RouterSpec("swarm", beta=4, max_pairs=2),
+           "static_history": RouterSpec("static_history")}
+
+
+MA_W = 5                     # trailing smoothing window (ticks)
+
+
+def _trailing_mean(x: np.ndarray, w: int = MA_W) -> np.ndarray:
+    out = np.empty(len(x))
+    for t in range(len(x)):
+        out[t] = x[max(0, t - w + 1):t + 1].mean()
+    return out
+
+
+def _cov_members(a: dict) -> np.ndarray:
+    """Per-tick CoV of *effective* utilization over member machines
+    (utilization re-normalized by each machine's capacity factor, so a
+    fully-used straggler counts as saturated, not as idle)."""
+    util = np.asarray(a["utilization"], np.float64)
+    alive = np.asarray(a["alive"], bool)
+    eff = util / np.maximum(np.asarray(a["cap_factor"], np.float64), 1e-9)
+    cov = np.zeros(len(util))
+    for t in range(len(util)):
+        u = eff[t][alive[t]]
+        cov[t] = u.std() / max(u.mean(), 1e-9)
+    return cov
+
+
+def recovery_ticks(a: dict, events, horizon: int) -> dict[str, int]:
+    """Ticks from each membership event until both the throughput and
+    the utilization-spread criteria hold again (capped at the segment
+    end = the next event / the horizon: 'never recovered').
+
+    Targets are anchored on the *healthy* window before the first
+    event, not segment-locally — a system that collapsed after an
+    earlier event must climb back to healthy service levels, it cannot
+    'recover' relative to its own collapse."""
+    thr = _trailing_mean(np.asarray(a["throughput"], np.float64))
+    cov = _trailing_mean(_cov_members(a))
+    healthy = slice(max(events[0].tick - 10, 0), events[0].tick)
+    thr_target = THR_FRAC * thr[healthy].mean()
+    cov_target = max(COV_SLACK * cov[healthy].mean(),
+                     cov[healthy].mean() + 0.05)
+    out = {}
+    for i, ev in enumerate(events):
+        t0 = ev.tick
+        seg_end = events[i + 1].tick if i + 1 < len(events) else horizon
+        rec = seg_end - t0
+        # scan only once the trailing window is entirely post-event
+        # (otherwise pre-event smoothing reads as instant recovery)
+        for t in range(t0 + MA_W, seg_end):
+            if thr[t] >= thr_target and cov[t] <= cov_target:
+                rec = t - t0
+                break
+        out[f"{ev.kind}@{ev.tick}"] = int(rec)
+    return out
+
+
+def _assert_fused_identity(ticks: int) -> None:
+    """Fused ≡ per-tick across the scheduled timeline, before timing:
+    exact on the NumPy plane, tolerance on JAX."""
+    for plane, exact in (("numpy", True), ("jax", False)):
+        base = Experiment(router=ROUTERS["swarm"], scenario=_spec(ticks),
+                          engine=_cfg(fused=False), data_plane=plane)
+        fused = base.with_(engine=_cfg(fused=True))
+        ref = run_experiment(base).metrics.asarrays()
+        out = run_experiment(fused).metrics.asarrays()
+        for name in ref:
+            r = np.asarray(ref[name], np.float64)
+            f = np.asarray(out[name], np.float64)
+            if exact:
+                np.testing.assert_array_equal(r, f, err_msg=f"{plane}:{name}")
+            elif name in ("injected", "q_total", "alive", "cap_factor",
+                          "transfers", "wire_bytes"):
+                np.testing.assert_array_equal(r, f, err_msg=f"{plane}:{name}")
+            else:
+                np.testing.assert_allclose(r, f, rtol=1e-3, atol=1e-6,
+                                           err_msg=f"{plane}:{name}")
+        emit(f"elastic/identity/{plane}", 0.0, "fused==pertick")
+
+
+def run(smoke: bool = False) -> dict:
+    ticks = 48 if smoke else 160
+    _assert_fused_identity(min(ticks, 48))
+    events = timeline(ticks)
+    rows = []
+    for plane in ("numpy", "jax"):
+        exps = sweep(routers=list(ROUTERS.values()), scenarios=[_spec(ticks)],
+                     engine=_cfg(fused=True), data_planes=(plane,))
+        results = run_suite(exps)
+        row: dict = {"plane": plane, "ticks": ticks}
+        for name, spec in ROUTERS.items():
+            res = next(r for r in results.values()
+                       if r.experiment.router.kind == spec.kind)
+            rec = recovery_ticks(res.asarrays(), events, ticks)
+            row[name] = rec
+            emit(f"elastic/{plane}/{name}", res.wall_s * 1e6,
+                 " ".join(f"{k}={v}" for k, v in rec.items()))
+        for k in row["swarm"]:
+            row[f"speedup_{k}"] = row["static_history"][k] / max(
+                row["swarm"][k], 1)
+        rows.append(row)
+        if not smoke:
+            for k in row["swarm"]:
+                assert row["swarm"][k] < row["static_history"][k], (
+                    f"SWARM did not out-recover static-history on {k} "
+                    f"({plane}): {row['swarm'][k]} vs "
+                    f"{row['static_history'][k]}")
+    result = {"grid": G, "machines": M, "standby": STANDBY,
+              "window": WINDOW, "smoke": smoke,
+              "events": [dataclasses.asdict(e) for e in events],
+              "results": rows}
+    if not smoke:
+        with open(OUT_JSON, "w") as f:
+            json.dump(result, f, indent=1)
+    return result

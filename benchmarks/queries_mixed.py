@@ -52,7 +52,7 @@ def run(smoke: bool = False) -> dict:
             "latency_mean": float(a["latency"].mean()),
             "migration_bytes": int(a["migration_bytes"].sum()),
             "moved_tuples": int(a["moved_tuples"].sum()),
-            "infeasible": bool(res.metrics.infeasible),
+            "infeasible": bool(res.metrics.was_infeasible),
             "us_per_tick": res.wall_s / ticks * 1e6,
         }
         rows.append(rec)

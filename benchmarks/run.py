@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
   dataplane NumPy vs JAX plane throughput     (benchmarks/dataplane.py)
   control  round-close + planner throughput   (benchmarks/control_plane.py)
   engine   per-tick vs fused engine ingest    (benchmarks/engine_throughput.py)
+  elasticity kill/join/straggler recovery     (benchmarks/elasticity.py)
 
 ``--data-plane`` selects the routing data plane for the experiment
 sections; a comma list (e.g. ``--data-plane=numpy,jax``) repeats the
@@ -26,13 +27,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: capability,hotspots,utilization,"
                          "overheads,stats_network,kernels,roofline,queries,"
-                         "dataplane,control,engine")
+                         "dataplane,control,engine,elasticity")
     ap.add_argument("--smoke", action="store_true",
                     help="short timelines (CI sanity run)")
     ap.add_argument("--data-plane", default="numpy",
                     help="routing data plane(s), comma list: numpy,jax")
     args = ap.parse_args()
-    from . import (capability, common, control_plane, dataplane,
+    from . import (capability, common, control_plane, dataplane, elasticity,
                    engine_throughput, hotspots, kernels, overheads,
                    queries_mixed, roofline, stats_network, utilization)
     sections = {
@@ -47,6 +48,9 @@ def main() -> None:
         "dataplane": dataplane.run,
         "control": control_plane.run,
         "engine": engine_throughput.run,
+        # runs both data planes internally (and asserts fused ≡ per-tick
+        # across a scheduled failure before measuring anything)
+        "elasticity": elasticity.run,
     }
     # sections whose results depend on the routing data plane; the rest
     # run once regardless of how many planes were requested

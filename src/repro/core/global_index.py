@@ -87,12 +87,20 @@ class GlobalIndex:
     # ------------------------------------------------------------------
     @classmethod
     def initialize(cls, grid_size: int, num_machines: int,
-                   p_capacity: int | None = None) -> "GlobalIndex":
+                   p_capacity: int | None = None,
+                   active_machines: int | None = None) -> "GlobalIndex":
+        """``active_machines`` < ``num_machines`` leaves the trailing
+        machine slots standby: partitions are split among (and owned
+        by) the first ``active_machines`` machines only — standby slots
+        receive work only after they join and the balancer re-homes
+        load onto them (elastic scale-out)."""
+        active = num_machines if active_machines is None \
+            else max(1, min(int(active_machines), num_machines))
         cap = p_capacity or max(4 * num_machines, 64)
         parts = PartitionTable.with_capacity(cap)
         root = parts.allocate(0, 0, grid_size - 1, grid_size - 1, owner=0)
         live = [root]
-        while len(live) < num_machines:
+        while len(live) < active:
             areas = [geometry.box_area(parts.r0[p], parts.c0[p], parts.r1[p], parts.c1[p])
                      for p in live]
             tgt = live[int(np.argmax(areas))]
@@ -112,7 +120,7 @@ class GlobalIndex:
             live.remove(tgt)
             live += [a, b]
         for m, pid in enumerate(sorted(live)):
-            parts.owner[pid] = m % num_machines
+            parts.owner[pid] = m % active
         grid = np.full((grid_size, grid_size), NO_PARTITION, np.int32)
         for pid in live:
             grid[parts.r0[pid]:parts.r1[pid] + 1, parts.c0[pid]:parts.c1[pid] + 1] = pid

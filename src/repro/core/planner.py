@@ -78,9 +78,16 @@ class RoundAggregate:
 
 def collect(stats: S.StatsState, parts, num_machines: int, *,
             grid_size: int, smoothing: float = 0.0, cost_fn=product_cost,
-            store_counts=None, data_weight: float = 0.0) -> RoundAggregate:
+            store_counts=None, data_weight: float = 0.0,
+            cap_factor=None) -> RoundAggregate:
     """Batched §4.3.1 report collection: one gather over the live
-    partitions + ``np.bincount`` per machine — no per-machine loop."""
+    partitions + ``np.bincount`` per machine — no per-machine loop.
+
+    ``cap_factor`` (optional, (M,) in (0, 1]) is each machine's
+    effective-capacity factor: C(m) is divided by it, so a straggler at
+    half speed ranks as twice as costly for the same workload and the
+    Fig-9 FSM sheds its load through the ordinary reduction machinery
+    instead of a dedicated straggler path."""
     live = parts.live_ids()
     s = smoothing
     n = stats.rows[S.N, live, parts.r1[live]] + s
@@ -104,6 +111,8 @@ def collect(stats: S.StatsState, parts, num_machines: int, *,
     d_m = np.bincount(owner, weights=d, minlength=num_machines)
     r_s = float(r_m.sum())
     costs = num_m / (r_s if r_s > 0 else 1.0)
+    if cap_factor is not None:
+        costs = costs / np.maximum(np.asarray(cap_factor, np.float64), 1e-6)
     return RoundAggregate(live, n, q, r, d, area, owner,
                           num_m, r_m, d_m, costs, r_s, r_s_local)
 
@@ -181,24 +190,36 @@ def numpy_split_costs(stats: S.StatsState, pids, boxes, r_s: float,
 
 
 def best_splits(stats: S.StatsState, pids, boxes, bases, r_s: float,
-                cost_fn=product_cost, plane=None) -> list[SplitPlan]:
+                cost_fn=product_cost, plane=None, keep_scale=None,
+                move_scale=None) -> list[SplitPlan]:
     """Batched argmin-|C_diff| search over K candidate partitions.
 
-    ``bases`` is the per-candidate constant (C(m_H) − C(p)) − C(m_L).
-    Evaluates every (axis, direction, split point) of every candidate in
-    one array program and returns one :class:`SplitPlan` per candidate —
+    ``bases`` is the per-candidate constant (C(m_H) − C(p)) − C(m_L)
+    (in effective units when capacities are heterogeneous).  Evaluates
+    every (axis, direction, split point) of every candidate in one
+    array program and returns one :class:`SplitPlan` per candidate —
     identical to running ``balancer.find_best_split`` per pid (same
     first-minimum tie-breaking), but one pass instead of K.
+
+    ``keep_scale`` / ``move_scale`` (optional (K,) arrays) convert the
+    raw side costs into per-machine *effective* cost: the kept side
+    stays on m_H (× 1/f_H), the moved side lands on m_L (× 1/f_L) — a
+    split onto a straggler must look as expensive as it will actually
+    be there.  ``None`` is the homogeneous paper case (both 1).
     """
     g = stats.grid_size
     pids = np.asarray(pids)
     fn = plane.split_costs if plane is not None else numpy_split_costs
     c_lo, c_hi, valid = fn(stats, pids, boxes, r_s, cost_fn)
     bases = np.asarray(bases, np.float64)[:, None, None, None]
+    ks = (np.ones(len(pids)) if keep_scale is None
+          else np.asarray(keep_scale, np.float64))[:, None, None, None]
+    ms = (np.ones(len(pids)) if move_scale is None
+          else np.asarray(move_scale, np.float64))[:, None, None, None]
     # (K, axis, move_lo?, G): move_lo=True keeps the hi side
     keep = np.stack([c_hi, c_lo], 2)
     move = np.stack([c_lo, c_hi], 2)
-    c_diff = bases + keep - move
+    c_diff = bases + ks * keep - ms * move
     score = np.where(valid[:, :, None, :], np.abs(c_diff), np.inf)
     flat = score.reshape(len(pids), -1)
     # first-occurrence argmin == find_best_split's axis→direction→sp
@@ -253,10 +274,38 @@ def _splittable(r0, c0, r1, c1) -> bool:
     return not (r1 <= r0 and c1 <= c0)
 
 
+def _plan_evacuation(agg: RoundAggregate, failed: int, dead,
+                     cost_fn, f) -> RoundPlan:
+    """Emergency redistribution of one machine's live partitions onto
+    the surviving machines (see :func:`plan_round` ``evacuate``)."""
+    sel = agg.owner == failed
+    ids = agg.live[sel]
+    if len(ids) == 0:
+        return RoundPlan(agg.costs)
+    survivors = [m for m in range(len(agg.costs))
+                 if m != failed and m not in dead]
+    if not survivors:
+        return RoundPlan(agg.costs)
+    part_cost = np.asarray(cost_fn(agg.n[sel], agg.q[sel], agg.r[sel],
+                                   agg.area[sel], agg.r_s), np.float64)
+    load = {m: float(agg.costs[m]) for m in survivors}
+    assigned: dict[int, list[int]] = {}
+    for k in np.argsort(-part_cost, kind="stable"):
+        m_l = min(survivors, key=lambda m: load[m])
+        assigned.setdefault(m_l, []).append(int(ids[k]))
+        # effective projected cost: a slow receiver fills up faster
+        load[m_l] += float(part_cost[k]) / f[m_l]
+    transfers = tuple(
+        Transfer(failed, m_l, ReductionPlan("subset", tuple(pids)))
+        for m_l, pids in assigned.items())
+    return RoundPlan(agg.costs, transfers)
+
+
 def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
                dead=frozenset(), max_pairs: int = 1,
                use_binary_search: bool = False, cost_fn=product_cost,
-               plane=None) -> RoundPlan:
+               plane=None, evacuate: int | None = None,
+               cap_factor=None) -> RoundPlan:
     """Greedy multi-pair matching (DESIGN.md §5).
 
     Machines are ranked by cost once; the scan walks overloaded
@@ -266,7 +315,31 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
     the *same* m_L is offered to the next m_H — with ``max_pairs=1``
     this is exactly the paper's single-reduction round.  Split-point
     searches for all chosen pairs run as one batched evaluation.
+
+    ``cap_factor`` (optional (M,)) makes transfer *sizing* capacity
+    aware: ``agg.costs`` already ranks by effective cost C(m)/f_m, but
+    raw partition cost c lands as c/f_L on the receiver, so the subset
+    bound generalizes from the paper's (C_H − C_L)/2 to
+    (C_H − C_L)/(1/f_H + 1/f_L) — identical at f ≡ 1 — and split
+    candidates price their kept/moved sides at the owning machine's
+    factor.  Without this a freshly-drained straggler (measured cost
+    ≈ 0) looks like the cheapest m_L and the planner would pile work
+    onto the slowest machine.
+
+    ``evacuate`` switches the planner to the emergency recovery mode of
+    §4.1.1: *every* live partition of the (crash-stopped or departing)
+    machine is re-homed onto the surviving machines — partitions walk
+    cost-descending onto the currently least-loaded survivor, whose
+    projected cost is bumped as it receives, so one failure fans out
+    across several receivers instead of doubling up the single cheapest
+    machine.  One subset :class:`Transfer` is emitted per receiver
+    (multi-pair by construction); ``max_pairs`` is ignored — an
+    evacuation cannot be partial.
     """
+    f = (np.ones(len(agg.costs)) if cap_factor is None
+         else np.maximum(np.asarray(cap_factor, np.float64), 1e-6))
+    if evacuate is not None:
+        return _plan_evacuation(agg, int(evacuate), dead, cost_fn, f)
     order = [m for m in map(int, np.argsort(-agg.costs, kind="stable"))
              if m not in dead]
     if len(order) < 2:
@@ -276,10 +349,10 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
     # executor receiving (C(m_H), C(m_L), R(S)) in the reduction request
     part_cost = np.asarray(cost_fn(agg.n, agg.q, agg.r, agg.area, agg.r_s),
                            np.float64)
-    # transfer slots in pairing order; split slots carry (pid, base) until
-    # the batched evaluation at the end fills them in
+    # transfer slots in pairing order; split slots carry (pid, base,
+    # scales) until the batched evaluation at the end fills them in
     slots: list[Transfer | None] = []
-    pending_split: list[tuple[int, int, int, float]] = []  # m_h, m_l, pid, base
+    pending_split: list[tuple] = []  # m_h, m_l, pid, base, 1/f_h, 1/f_l
     lo_idx = len(order) - 1
     for hi_idx, m_h in enumerate(order):
         if len(slots) >= max_pairs:
@@ -294,7 +367,14 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
         if len(ids) == 0:
             continue
         c_mh, c_ml = float(costs[m_h]), float(costs[m_l])
-        subset, total, sorted_ids = balancer.find_subset(ids, cst, c_mh, c_ml)
+        # heterogeneous capacity: raw cost x leaves m_H as x/f_H and
+        # lands as x/f_L, so "total ≤ (C_H − C_L)/2" becomes
+        # "x ≤ (C_H − C_L)/(1/f_H + 1/f_L)" — scale the part costs so
+        # find_subset's homogeneous bound enforces exactly that
+        inv_fh, inv_fl = 1.0 / f[m_h], 1.0 / f[m_l]
+        scale = (inv_fh + inv_fl) / 2.0
+        subset, total, sorted_ids = balancer.find_subset(
+            ids, cst * scale, c_mh, c_ml)
         if subset and total > 0:
             slots.append(Transfer(m_h, m_l,
                                   ReductionPlan("subset", tuple(subset))))
@@ -309,6 +389,7 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
             if not _splittable(*box):
                 continue
             if use_binary_search:
+                # parity-experiment path; assumes homogeneous capacity
                 plan = balancer.split_binary_search(
                     stats, pid, box, c_mh, c_ml, cost_of[pid], agg.r_s,
                     cost_fn)
@@ -317,8 +398,9 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
                 slots.append(Transfer(m_h, m_l,
                                       ReductionPlan("split", split=plan)))
             else:
-                pending_split.append((m_h, m_l, pid,
-                                      (c_mh - cost_of[pid]) - c_ml))
+                pending_split.append(
+                    (m_h, m_l, pid, (c_mh - cost_of[pid] * inv_fh) - c_ml,
+                     inv_fh, inv_fl))
                 slots.append(None)
             placed = True
             break
@@ -327,18 +409,20 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
         # else: every candidate of m_H failed — try the next m_H against
         # the same m_L (paper behavior)
     if pending_split:
-        pids = np.array([p for _, _, p, _ in pending_split], np.int64)
+        pids = np.array([p for _, _, p, _, _, _ in pending_split], np.int64)
         boxes = (parts.r0[pids].astype(np.int64),
                  parts.c0[pids].astype(np.int64),
                  parts.r1[pids].astype(np.int64),
                  parts.c1[pids].astype(np.int64))
-        bases = [b for _, _, _, b in pending_split]
+        bases = [b for _, _, _, b, _, _ in pending_split]
+        ks = [k for _, _, _, _, k, _ in pending_split]
+        ms = [m for _, _, _, _, _, m in pending_split]
         plans = iter(best_splits(stats, pids, boxes, bases, agg.r_s, cost_fn,
-                                 plane))
+                                 plane, keep_scale=ks, move_scale=ms))
         filled = iter(pending_split)
         for i, slot in enumerate(slots):
             if slot is None:
-                m_h, m_l, _, _ = next(filled)
+                m_h, m_l = next(filled)[:2]
                 slots[i] = Transfer(m_h, m_l,
                                     ReductionPlan("split", split=next(plans)))
     return RoundPlan(agg.costs, tuple(slots))

@@ -58,7 +58,7 @@ class Swarm:
                  decay: float = 0.5, window_rounds: int = 4,
                  use_binary_search: bool = False, smoothing: float = 0.0,
                  cost_fn=None, seed: int = 0, max_pairs: int = 1,
-                 data_plane=None):
+                 data_plane=None, active_machines: int | None = None):
         self.g = grid_size
         self.m = num_machines
         self.beta = beta
@@ -80,12 +80,22 @@ class Swarm:
         # Optional streaming.planes.DataPlane serving the round-close /
         # split-evaluation array math; None = NumPy reference.
         self.plane = data_plane
-        self.index = GlobalIndex.initialize(grid_size, num_machines)
+        self.index = GlobalIndex.initialize(grid_size, num_machines,
+                                            active_machines=active_machines)
         self.stats = S.StatsState.zeros(self.index.parts.capacity, grid_size)
         self.decision = balancer.DecisionState()
         self.round_no = 0
         self.reports: list[RoundReport] = []
         self.dead: set[int] = set()   # crash-stop machines (ft layer)
+        # standby slots: not yet members — they neither report nor
+        # receive load until a MachineJoin activates them (elasticity)
+        active = num_machines if active_machines is None \
+            else max(1, min(int(active_machines), num_machines))
+        self.standby: set[int] = set(range(active, num_machines))
+        # per-machine effective-capacity factor (stragglers < 1); folds
+        # into C(m) at collection so the ordinary reduction machinery
+        # sheds a slow machine's load (no dedicated straggler path)
+        self.cap_factor = np.ones(num_machines, np.float64)
         # Data-persistence hook (repro.queries): when a TupleStore is
         # attached, plan changes re-home its per-partition counts and
         # D(p) enters the cost product with weight ``data_weight``.
@@ -194,19 +204,22 @@ class Swarm:
         per_machine = (cost_model.CostReport.WIRE_BYTES_STORED
                        if self.store is not None and self.data_weight > 0
                        else cost_model.CostReport.WIRE_BYTES)
-        # only live executors report to the Coordinator: crash-stopped
-        # machines send nothing (Fig 20 accounting)
-        reporting = self.m - sum(1 for d in self.dead if 0 <= d < self.m)
+        # only member executors report to the Coordinator: crash-stopped
+        # machines send nothing, standby slots are not members yet
+        # (Fig 20 accounting)
+        reporting = self.m - sum(1 for d in self.excluded
+                                 if 0 <= d < self.m)
         wire = reporting * per_machine
         self.decision, decision = balancer.step_decision(self.decision,
                                                          agg.r_s, self.beta)
         rep = RoundReport(self.round_no, decision, agg.r_s, wire_bytes=wire)
         if decision == balancer.REBALANCE:
             plan = planner.plan_round(
-                self.stats, agg, self.index.parts, dead=self.dead,
+                self.stats, agg, self.index.parts, dead=self.excluded,
                 max_pairs=self.max_pairs,
                 use_binary_search=self.use_binary_search,
-                cost_fn=self.cost_fn, plane=self.plane)
+                cost_fn=self.cost_fn, plane=self.plane,
+                cap_factor=self.cap_factor)
             self._apply_plan(plan, rep)
         integrity.expire_chains(self.index.parts, self.round_no, self.window_rounds)
         self._finish_round(rep)
@@ -229,19 +242,60 @@ class Swarm:
             self.stats, self.index.parts, self.m, grid_size=self.g,
             smoothing=self.smoothing, cost_fn=self.cost_fn,
             store_counts=self.store.counts if self.store is not None else None,
-            data_weight=self.data_weight)
+            data_weight=self.data_weight, cap_factor=self.cap_factor)
 
     def _finish_round(self, rep: RoundReport) -> None:
-        """Fold the data-migration accounting (includes emergency
-        failure moves done since the previous round) and log the round."""
+        """Fold the data-migration accounting (emergency failure moves
+        bill on their own recovery report) and log the round."""
         rep.moved_tuples, self._moved_tuples = self._moved_tuples, 0
         if self.bill_data_migration and self.store is not None:
             rep.data_bytes = rep.moved_tuples * self.store.bytes_per_tuple
         self.reports.append(rep)
 
+    @property
+    def excluded(self) -> set[int]:
+        """Machines outside the working set: crashed or standby."""
+        return self.dead | self.standby
+
     def mark_dead(self, machine: int) -> None:
         """Crash-stop: the machine is excluded from m_H/m_L selection."""
         self.dead.add(int(machine))
+
+    def mark_alive(self, machine: int, capacity_factor: float = 1.0) -> None:
+        """A machine slot (re)joins the working set: it reports from the
+        next round on and is immediately eligible as an m_L target —
+        re-homing onto it runs through the ordinary ``plan_round``
+        reduction rounds, not a dedicated join path."""
+        m = int(machine)
+        self.dead.discard(m)
+        self.standby.discard(m)
+        self.cap_factor[m] = float(capacity_factor)
+
+    def set_capacity_factor(self, machine: int, factor: float) -> None:
+        """Effective-capacity change (straggler when < 1): folds into
+        C(m) at collection — see ``planner.collect``."""
+        self.cap_factor[int(machine)] = float(factor)
+
+    def recover_machine(self, machine: int) -> RoundReport:
+        """Crash-stop recovery (§4.1.1): mark the machine dead and
+        emergency-redistribute its live partitions over the survivors
+        through ``planner.plan_round(evacuate=...)`` — the same
+        multi-pair redistribution machinery as rebalancing, applied
+        outside the round cadence.  Statistics are *not* closed (the
+        failure does not end the round); migration accounting bills on
+        the returned report immediately."""
+        m = int(machine)
+        self.mark_dead(m)
+        rep = RoundReport(self.round_no, balancer.REBALANCE, 0.0)
+        agg = self._collect()
+        rep.r_s = agg.r_s
+        plan = planner.plan_round(
+            self.stats, agg, self.index.parts, dead=self.excluded,
+            cost_fn=self.cost_fn, plane=self.plane, evacuate=m,
+            cap_factor=self.cap_factor)
+        self._apply_plan(plan, rep)
+        self._finish_round(rep)
+        return rep
 
     # ------------------------------------------------------------------
     # Plan application (the only mutating half of the round)

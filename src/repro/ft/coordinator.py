@@ -25,6 +25,12 @@ class CoordinatorGroup:
     def beat(self, member: int) -> None:
         self.last_beat[member] = self.clock
 
+    def suspend(self, member: int) -> None:
+        """Declare ``member`` non-live immediately (standby slots that
+        have not joined yet, or an out-of-band failure notification
+        that should not wait out the heartbeat timeout)."""
+        self.last_beat[member] = self.clock - self.heartbeat_timeout
+
     def tick(self) -> None:
         self.clock += 1
 

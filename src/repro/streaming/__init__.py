@@ -6,9 +6,10 @@ experiment suite (``experiments``).  Every router runs any (query model
 for convenience)."""
 from ..queries import (PersistenceModel, QueryModel, TupleStore,
                        WorkloadSpec, all_workloads)
-from .api import (EventBatch, EventStream, MachineFailure, MemoryUsage,
-                  ProbeBatch, QueryBatch, Router, RoundOutcome,
-                  RoutingDecision, TupleBatch)
+from .api import (EventBatch, EventStream, MachineFailure, MachineJoin,
+                  MachineSlow, MembershipChange, MemoryUsage, ProbeBatch,
+                  QueryBatch, Router, RoundOutcome, RoutingDecision,
+                  TupleBatch)
 from .baselines import (ReplicatedRouter, RoundInfo, StaticHistoryRouter,
                         StaticUniformRouter, SwarmRouter)
 from .engine import EngineConfig, Metrics, StreamingEngine, run_experiment
@@ -19,12 +20,13 @@ from .fused import (DeviceState, EngineCarry, FusedHostState, FusedOutputs,
                     FusedParams)
 from .planes import DataPlane, JaxPlane, NumpyPlane, available_planes, \
     get_plane
-from .sources import (Hotspot, ReplaySource, ScenarioSource,
-                      TwitterLikeSource, scenario)
+from .sources import (Hotspot, MembershipEvent, ReplaySource,
+                      ScenarioSource, TwitterLikeSource, scenario)
 
 __all__ = [
     # events / decisions
-    "TupleBatch", "QueryBatch", "ProbeBatch", "MachineFailure", "EventBatch",
+    "TupleBatch", "QueryBatch", "ProbeBatch", "MachineFailure",
+    "MachineJoin", "MachineSlow", "MembershipChange", "EventBatch",
     "RoutingDecision", "RoundOutcome", "MemoryUsage", "Router", "EventStream",
     # data planes
     "DataPlane", "NumpyPlane", "JaxPlane", "get_plane", "available_planes",
@@ -40,8 +42,8 @@ __all__ = [
     "Experiment", "ExperimentResult", "RouterSpec", "ScenarioSpec",
     "run", "run_suite", "sweep", "workload_query_side",
     # sources
-    "Hotspot", "ReplaySource", "ScenarioSource", "TwitterLikeSource",
-    "scenario",
+    "Hotspot", "MembershipEvent", "ReplaySource", "ScenarioSource",
+    "TwitterLikeSource", "scenario",
     # workloads
     "QueryModel", "PersistenceModel", "WorkloadSpec", "TupleStore",
     "all_workloads",

@@ -9,10 +9,19 @@ one formal entry point::
 * ``QueryBatch``     — continuous queries to register as resident state.
 * ``ProbeBatch``     — one-shot snapshot probes over stored tuples.
 * ``MachineFailure`` — crash-stop notification for one executor.
+* ``MachineJoin``    — an executor (re)joins the cluster, optionally at
+  a non-unit capacity factor (elastic scale-out, §4.1.1 / CheetahGIS).
+* ``MachineSlow``    — an executor's effective capacity changes (a
+  straggler appears or recovers); adaptive routers fold the factor into
+  their cost model so the Fig-9 FSM sheds the machine's load.
 
 ``ingest`` answers with a :class:`RoutingDecision` (owner machine, work
 cost and partition per item) for work-carrying batches, and ``None`` for
-pure state changes (query registration, failures).  Per-round control
+pure state changes (query registration, joins, slowdowns).  A
+``MachineFailure`` may instead answer with a :class:`RoundOutcome`
+describing the emergency re-homing it triggered (recovery transfers,
+moved queries, migration bytes) so the engine can bill the receivers'
+install work like any rebalancing round.  Per-round control
 traffic is typed as :class:`RoundOutcome`; executor memory accounting as
 :class:`MemoryUsage`.  The engine contains **no** per-query-model
 branches: which events a workload emits is decided here, by
@@ -85,7 +94,31 @@ class MachineFailure:
     tick: int = 0
 
 
-EventBatch = Union[TupleBatch, QueryBatch, ProbeBatch, MachineFailure]
+@dataclass(frozen=True)
+class MachineJoin:
+    """Executor ``machine`` (re)joins the cluster at ``capacity_factor``
+    × nominal per-tick capacity.  Joining a slot that is already alive
+    only updates the factor."""
+
+    machine: int
+    tick: int = 0
+    capacity_factor: float = 1.0
+
+
+@dataclass(frozen=True)
+class MachineSlow:
+    """Effective-capacity change of executor ``machine``: ``factor`` < 1
+    is a straggler, ``factor`` = 1 restores nominal speed."""
+
+    machine: int
+    factor: float
+    tick: int = 0
+
+
+MembershipChange = Union[MachineFailure, MachineJoin, MachineSlow]
+
+EventBatch = Union[TupleBatch, QueryBatch, ProbeBatch, MachineFailure,
+                   MachineJoin, MachineSlow]
 
 
 # ---------------------------------------------------------------------------
@@ -120,7 +153,11 @@ class RoundOutcome:
     ``transfers`` carries every m_H→m_L reduction the round applied —
     one per concurrently rebalanced machine pair since the multi-pair
     planner (``core.planner``); ``action`` keeps the first transfer's
-    kind for the legacy single-pair view.
+    kind for the legacy single-pair view.  ``moved_by_transfer`` (when
+    provided, aligned with ``transfers``) says how many resident
+    queries each transfer delivered to its receiver ``m_L`` — the
+    engine bills the per-query install work there, on the machine that
+    actually receives it.
     """
 
     wire_bytes: int = 0        # coordinator statistics traffic (Fig 20)
@@ -129,10 +166,13 @@ class RoundOutcome:
     moved_tuples: int = 0      # stored tuples re-homed this round
     action: str = "none"
     transfers: tuple[TransferRecord, ...] = ()
+    moved_by_transfer: tuple[int, ...] = ()   # per-transfer receiver counts
 
     @classmethod
     def from_report(cls, rep: RoundReport, *, moved_queries: int = 0,
-                    bytes_per_query: int = 0) -> "RoundOutcome":
+                    bytes_per_query: int = 0,
+                    moved_by_transfer: tuple[int, ...] = ()
+                    ) -> "RoundOutcome":
         """Consume a typed ``core.protocol.RoundReport``: fold the
         coordinator wire bytes, STORED data shipment, the transfer set
         and the caller's moved-query count into one engine-facing
@@ -144,6 +184,7 @@ class RoundOutcome:
             moved_tuples=rep.moved_tuples,
             action=rep.action,
             transfers=rep.transfers,
+            moved_by_transfer=moved_by_transfer,
         )
 
 
@@ -175,7 +216,8 @@ class Router(Protocol):
     @property
     def q_total(self) -> int: ...
 
-    def ingest(self, batch: EventBatch) -> RoutingDecision | None: ...
+    def ingest(self, batch: EventBatch
+               ) -> "RoutingDecision | RoundOutcome | None": ...
 
     def on_round(self, tick: int) -> RoundOutcome: ...
 
@@ -221,17 +263,47 @@ class EventStream:
         """First tick ≥ ``tick`` that will emit query/probe arrivals,
         ``None`` if there are none.  The fused engine path cuts its
         scan windows here — *predicting* arrivals must not consume the
-        source RNG, so sources expose their deterministic schedule via
-        ``next_query_arrival``; a source without one conservatively
-        reports ``tick`` (every tick is a potential arrival, forcing
-        the per-tick path)."""
+        source RNG, so sources expose their deterministic schedules via
+        ``next_query_arrival`` / ``next_probe_arrival``; a source
+        without one conservatively reports ``tick`` (every tick is a
+        potential arrival, forcing the per-tick path)."""
         wl = self.workload
         if wl.spec.snapshot:
-            return tick if wl.snapshot_rate > 0 else None
+            if wl.snapshot_rate <= 0:
+                return None
+            sched = getattr(self.source, "next_probe_arrival", None)
+            return tick if sched is None else sched(tick)
         sched = getattr(self.source, "next_query_arrival", None)
         if sched is None:
             return tick
         return sched(tick)
+
+    # -- cluster-membership schedule (elasticity) -----------------------
+    def membership(self, tick: int) -> list[MembershipChange]:
+        """Scheduled membership changes firing at exactly ``tick``,
+        as typed events (sources carry plain ``MembershipEvent``
+        schedule entries; the kind→event mapping lives here)."""
+        sched = getattr(self.source, "membership_events", None)
+        if sched is None:
+            return []
+        out: list[MembershipChange] = []
+        for ev in sched(tick):
+            if ev.kind == "fail":
+                out.append(MachineFailure(ev.machine, tick))
+            elif ev.kind == "join":
+                out.append(MachineJoin(ev.machine, tick, ev.factor))
+            elif ev.kind == "slow":
+                out.append(MachineSlow(ev.machine, ev.factor, tick))
+            else:
+                raise ValueError(f"unknown membership kind {ev.kind!r}")
+        return out
+
+    def next_membership(self, tick: int) -> int | None:
+        """First tick ≥ ``tick`` with a scheduled membership change
+        (deterministic — the fused path cuts windows here, exactly as
+        at query arrivals)."""
+        sched = getattr(self.source, "next_membership_event", None)
+        return sched(tick) if sched is not None else None
 
     def preload(self, n: int) -> QueryBatch | None:
         """Initial resident queries — only continuous models have any."""

@@ -35,9 +35,9 @@ import numpy as np
 from ..core import Swarm, balancer, geometry
 from ..core.global_index import GlobalIndex
 from ..queries import QueryModel, TupleStore, WorkloadSpec
-from .api import (NO_ROUND, EventBatch, MachineFailure, MemoryUsage,
-                  ProbeBatch, QueryBatch, RoundOutcome, RoutingDecision,
-                  TupleBatch)
+from .api import (NO_ROUND, EventBatch, MachineFailure, MachineJoin,
+                  MachineSlow, MemoryUsage, ProbeBatch, QueryBatch,
+                  RoundOutcome, RoutingDecision, TupleBatch)
 from .fused import FusedHostState
 from .planes import CostParams, DataPlane, get_plane
 from .sources import QUERY_SIDE
@@ -66,8 +66,12 @@ class _Base:
                  kappa_match: float = 1.0, c0: float = 1.0,
                  query_area: float | None = None, q_cache: int = 1500,
                  workload: WorkloadSpec | None = None,
-                 data_plane: DataPlane | str | None = None):
+                 data_plane: DataPlane | str | None = None,
+                 standby: int = 0):
         self.m = num_machines
+        # trailing machine slots that have not joined the cluster yet
+        # (elastic scale-out targets); a MachineJoin event activates one
+        self.standby = max(0, min(int(standby), num_machines - 1))
         self.kappa_probe = kappa_probe
         self.kappa_match = kappa_match
         self.c0 = c0
@@ -90,10 +94,13 @@ class _Base:
         self.store: TupleStore | None = None   # set where capacity is known
 
     # -- the typed entry point --------------------------------------------
-    def ingest(self, batch: EventBatch) -> RoutingDecision | None:
+    def ingest(self, batch: EventBatch
+               ) -> RoutingDecision | RoundOutcome | None:
         """Route one event batch.  Work-carrying batches (tuples,
         probes) return a :class:`RoutingDecision`; state changes (query
-        registration, machine failures) return ``None``."""
+        registration, joins, slowdowns) return ``None``; a failure may
+        return the :class:`RoundOutcome` of the emergency re-homing it
+        triggered (adaptive routers only)."""
         if isinstance(batch, TupleBatch):
             return self._route_tuples(batch.xy)
         if isinstance(batch, QueryBatch):
@@ -102,8 +109,12 @@ class _Base:
         if isinstance(batch, ProbeBatch):
             return self._route_probes(batch.rects)
         if isinstance(batch, MachineFailure):
-            self.on_machine_failed(batch.machine)
-            return None
+            return self.on_machine_failed(batch.machine)
+        if isinstance(batch, MachineJoin):
+            return self.on_machine_joined(batch.machine,
+                                          batch.capacity_factor)
+        if isinstance(batch, MachineSlow):
+            return self.on_machine_slow(batch.machine, batch.factor)
         raise TypeError(f"unknown event batch type {type(batch).__name__}")
 
     def _cost_params(self) -> CostParams:
@@ -142,8 +153,20 @@ class _Base:
     def on_round(self, tick: int) -> RoundOutcome:
         return NO_ROUND
 
-    def on_machine_failed(self, m: int) -> None:
-        pass
+    def on_machine_failed(self, m: int) -> RoundOutcome | None:
+        """Static plans cannot re-home a dead machine's partitions —
+        its share of the stream is simply lost (the comparison point
+        the elasticity benchmark measures)."""
+        return None
+
+    def on_machine_joined(self, m: int,
+                          capacity_factor: float = 1.0) -> None:
+        """Static plans never route to a late joiner."""
+        return None
+
+    def on_machine_slow(self, m: int, factor: float) -> None:
+        """Static plans cannot shed a straggler's load."""
+        return None
 
     def end_tick(self) -> None:
         """Per-tick persistence upkeep (ephemeral probe-window decay)."""
@@ -190,19 +213,37 @@ class ReplicatedRouter(_Base):
     def __init__(self, num_machines: int, grid_size: int = 64, **kw):
         super().__init__(num_machines, **kw)
         self._rr = 0
+        # queries are replicated on every *member* machine; the spray
+        # rotation tracks membership (dead machines leave it, joiners
+        # enter) — replication makes elasticity trivial for this router
+        self._active = list(range(num_machines - self.standby))
         self._shadow = StaticUniformRouter(grid_size, num_machines,
                                            query_area=self.query_area,
                                            workload=self.workload,
-                                           data_plane=self.plane)
+                                           data_plane=self.plane,
+                                           standby=self.standby)
         self.store = self._shadow.store
 
     def _index_queries(self, rects: np.ndarray) -> None:
         self._shadow.register_queries(rects)
 
+    def on_machine_failed(self, m: int) -> None:
+        if m in self._active and len(self._active) > 1:
+            self._active.remove(m)
+        return None
+
+    def on_machine_joined(self, m: int,
+                          capacity_factor: float = 1.0) -> None:
+        if m not in self._active:
+            self._active.append(m)
+            self._active.sort()
+        return None
+
     def _route_tuples(self, xy: np.ndarray) -> RoutingDecision:
         n = len(xy)
-        owners = ((self._rr + np.arange(n)) % self.m).astype(np.int32)
-        self._rr = int((self._rr + n) % self.m)
+        active = np.asarray(self._active, np.int32)
+        owners = active[(self._rr + np.arange(n)) % len(active)]
+        self._rr = int((self._rr + n) % len(active))
         wl = self.workload
         probe = self._probe_cost(self.q_total) if wl.spec.tuple_driven else 0.0
         pids, match = self._shadow._match_terms(xy)
@@ -347,8 +388,11 @@ class _GridRouter(_Base):
 
 class StaticUniformRouter(_GridRouter):
     def __init__(self, grid_size: int, num_machines: int, **kw):
-        super().__init__(GlobalIndex.initialize(grid_size, num_machines),
-                         num_machines, **kw)
+        active = num_machines - int(kw.get("standby", 0) or 0)
+        super().__init__(
+            GlobalIndex.initialize(grid_size, num_machines,
+                                   active_machines=active),
+            num_machines, **kw)
 
 
 class StaticHistoryRouter(_GridRouter):
@@ -358,7 +402,9 @@ class StaticHistoryRouter(_GridRouter):
     def __init__(self, grid_size: int, num_machines: int,
                  history_points: np.ndarray, history_queries: np.ndarray,
                  rounds: int = 40, **kw):
-        sw = Swarm(grid_size, num_machines, decay=1.0, beta=2)
+        active = num_machines - int(kw.get("standby", 0) or 0)
+        sw = Swarm(grid_size, num_machines, decay=1.0, beta=2,
+                   active_machines=active)
         chunks = max(rounds, 1)
         pt_chunks = np.array_split(history_points, chunks)
         q_chunks = np.array_split(history_queries, chunks)
@@ -382,9 +428,10 @@ class SwarmRouter(_GridRouter):
     def __init__(self, grid_size: int, num_machines: int, *, beta: int = 20,
                  decay: float = 0.5, use_binary_search: bool = False,
                  max_pairs: int = 1, **kw):
+        active = num_machines - int(kw.get("standby", 0) or 0)
         self.swarm = Swarm(grid_size, num_machines, beta=beta, decay=decay,
                            use_binary_search=use_binary_search,
-                           max_pairs=max_pairs)
+                           max_pairs=max_pairs, active_machines=active)
         super().__init__(self.swarm.index, num_machines, **kw)
         self.swarm.plane = self.plane
         if self.store is not None:
@@ -418,29 +465,55 @@ class SwarmRouter(_GridRouter):
             pids, owners = self.swarm.ingest_snapshot_probes(rects)
         return super()._route_probes(rects, pids=pids, owners=owners)
 
-    def on_round(self, tick: int) -> RoundOutcome:
-        rep = self.swarm.run_round()
-        moved_queries = 0
+    def _outcome(self, rep) -> RoundOutcome:
+        """Typed outcome of a plan change, with receiver-side
+        moved-query accounting: after re-indexing, each transfer's
+        moved queries are the resident counts of its *new* partitions
+        owned by the receiver m_L — the machine that pays the install
+        work (the engine bills ``moved_by_transfer`` there)."""
+        moved_by: tuple[int, ...] = ()
         if rep.did_rebalance:
-            # queries move with their partitions
-            moved_queries = int(self.qres[list(rep.moved_pids)].sum())
             self.reindex_all_queries()
-        return RoundOutcome.from_report(rep, moved_queries=moved_queries,
-                                        bytes_per_query=BYTES_PER_QUERY)
+            p = self.index.parts
+            moved_by = tuple(
+                int(self.qres[[pid for pid in t.new_pids
+                               if p.owner[pid] == t.m_l]].sum())
+                for t in rep.transfers)
+        return RoundOutcome.from_report(
+            rep, moved_queries=int(sum(moved_by)),
+            bytes_per_query=BYTES_PER_QUERY, moved_by_transfer=moved_by)
 
-    def on_machine_failed(self, m: int) -> None:
-        """Crash-stop handling: emergency-move the failed machine's
-        partitions to the current lowest-cost machine (chained, so any
-        surviving replicas of old data can still be consulted)."""
-        self.swarm.mark_dead(m)
-        loads = self.swarm.machine_loads()
-        loads[m] = np.inf
-        target = int(np.argmin(loads))
-        pids = self.swarm.index.machine_partitions(m)
-        new = [self.swarm._move_partition(int(pid), target) for pid in pids]
-        if new:
-            self.swarm.index.apply_changes(new)
-            self.reindex_all_queries()
+    def on_round(self, tick: int) -> RoundOutcome:
+        return self._outcome(self.swarm.run_round())
+
+    def on_machine_failed(self, m: int) -> RoundOutcome | None:
+        """Crash-stop handling (§4.1.1): emergency multi-pair
+        redistribution of the dead machine's partitions over the
+        survivors, through the same ``core.planner`` round machinery as
+        rebalancing (``plan_round(evacuate=m)``); partition chains keep
+        pointing at the previous machine, so surviving replicas of old
+        data can still be consulted.  Returns the recovery's
+        :class:`RoundOutcome` (``None`` when the machine owned
+        nothing)."""
+        rep = self.swarm.recover_machine(m)
+        if not rep.transfers:
+            return None
+        return self._outcome(rep)
+
+    def on_machine_joined(self, m: int,
+                          capacity_factor: float = 1.0) -> None:
+        """(Re)join: the machine becomes a reporting member and an
+        eligible m_L — load flows to it through the ordinary FSM-gated
+        reduction rounds (no dedicated join path)."""
+        self.swarm.mark_alive(m, capacity_factor)
+        return None
+
+    def on_machine_slow(self, m: int, factor: float) -> None:
+        """Straggler notification: the capacity factor folds into C(m)
+        (``planner.collect``), so the Fig-9 FSM sheds the machine's
+        load via normal reductions instead of crashing it."""
+        self.swarm.set_capacity_factor(m, factor)
+        return None
 
 
 def force_rebalance_round(sw: Swarm):
@@ -453,9 +526,9 @@ def force_rebalance_round(sw: Swarm):
     agg = sw._collect()
     rep = RoundReport(sw.round_no, balancer.REBALANCE, agg.r_s)
     plan = planner.plan_round(
-        sw.stats, agg, sw.index.parts, dead=sw.dead, max_pairs=sw.max_pairs,
-        use_binary_search=sw.use_binary_search, cost_fn=sw.cost_fn,
-        plane=sw.plane)
+        sw.stats, agg, sw.index.parts, dead=sw.excluded,
+        max_pairs=sw.max_pairs, use_binary_search=sw.use_binary_search,
+        cost_fn=sw.cost_fn, plane=sw.plane)
     sw._apply_plan(plan, rep)
     sw._finish_round(rep)
     return rep

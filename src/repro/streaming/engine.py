@@ -10,8 +10,21 @@ slow additive recovery — which produces the sawtooth of Fig 14).
 
 Metrics per tick: units of work (= processed tuples × Q_total, §6.1),
 mean execution latency, per-machine utilization, network bytes.
-Machine failures (crash-stop) are injected as typed ``MachineFailure``
-events to exercise the fault-tolerance path.
+
+Cluster membership is elastic (§4.1.1): scenario sources may carry a
+deterministic schedule of ``MachineFailure`` / ``MachineJoin`` /
+``MachineSlow`` events, applied at the top of each tick.  A scheduled
+failure silences the machine (it stops heartbeating and its queue is
+lost); the ``ft.CoordinatorGroup`` driven by the engine's per-tick
+heartbeats *detects* the silence after ``EngineConfig.heartbeat_timeout``
+beats and only then notifies the router, which re-homes the dead
+machine's partitions through the planner's emergency redistribution —
+rank-order Coordinator failover is billed as wire bytes when the dead
+machine led the group.  Joins and slowdowns adjust the per-machine
+effective capacity (``cap_factor``); adaptive routers fold the factor
+into their cost model and shed a straggler's load through ordinary
+FSM-gated rounds.  ``StreamingEngine.fail_machine`` remains the
+immediate (out-of-band notification) path.
 
 The engine is workload-agnostic: it drives the typed event/decision API
 of ``streaming.api`` and contains no per-query-model branches.  Which
@@ -36,8 +49,12 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .api import (NO_ROUND, EventStream, MachineFailure, ProbeBatch,
-                  QueryBatch, Router, RoutingDecision, TupleBatch)
+from ..core import geometry
+from ..core.cost_model import CostReport
+from ..ft import CoordinatorGroup
+from .api import (NO_ROUND, EventStream, MachineFailure, MachineJoin,
+                  MachineSlow, MembershipChange, ProbeBatch, QueryBatch,
+                  Router, RoundOutcome, RoutingDecision, TupleBatch)
 from .fused import (EngineCarry, FusedOutputs, FusedParams,
                     host_process_tick)
 from .sources import ScenarioSource
@@ -56,6 +73,9 @@ class EngineConfig:
     round_every: int = 1            # ticks per load-balancing round
     migration_unit_cost: float = 2.0  # work units to install one moved query
     fused_window: int = 0           # >0: run() scans W-tick fused windows
+    heartbeat_timeout: int = 3      # missed beats before a machine is dead
+    standby_machines: int = 0       # trailing slots that start outside
+    #                                 the cluster (elastic join targets)
 
 
 @dataclass
@@ -72,7 +92,17 @@ class Metrics:
     snapshots: list = field(default_factory=list)     # one-shot probes/tick
     resident_tuples: list = field(default_factory=list)  # max per machine
     injected: list = field(default_factory=list)
-    infeasible: bool = False
+    alive: list = field(default_factory=list)         # (M,) membership mask
+    cap_factor: list = field(default_factory=list)    # (M,) effective speed
+    # any tick ever hit a memory wall (Fig-11 reporting); injection is
+    # gated by the *per-tick* check, so pressure that recedes (decay,
+    # rebalancing) lets the stream resume instead of latching it off
+    was_infeasible: bool = False
+
+    @property
+    def infeasible(self) -> bool:
+        """Legacy alias of :attr:`was_infeasible`."""
+        return self.was_infeasible
 
     def asarrays(self) -> dict:
         return {k: np.asarray(v) for k, v in self.__dict__.items()
@@ -90,26 +120,157 @@ class StreamingEngine:
         self.queue_units = np.zeros(m)
         self.queue_tuples = np.zeros(m)
         self.alive = np.ones(m, bool)
+        # per-machine effective-capacity factor: 1 = nominal, < 1 is a
+        # straggler; a join may bring heterogeneous hardware
+        self.cap_factor = np.ones(m)
+        standby = max(0, min(self.cfg.standby_machines, m - 1))
+        if standby:
+            self.alive[m - standby:] = False
         self.lam_bp = self.cfg.lambda_max
         self.metrics = Metrics()
         self.tick_no = 0
         self._fused = None   # device-resident state cache (run_fused)
+        # heartbeat table (ft layer): every member beats once per tick;
+        # the group detects silent machines and elects by rank order
+        self.coord = CoordinatorGroup(
+            m, heartbeat_timeout=max(self.cfg.heartbeat_timeout, 1))
+        for s in range(m - standby, m):
+            self.coord.suspend(s)
+        self._coordinator = self.coord.coordinator()
+        self._pending_detect: dict[int, int] = {}  # machine → detect tick
+        # control/migration traffic of membership changes, folded into
+        # the metrics row of the tick that records next
+        self._acc = np.zeros(4, np.int64)  # wire, migration, tuples, pairs
+
+    def _eff_alive(self) -> np.ndarray:
+        """The (M,) effective per-machine capacity mask: the alive mask
+        scaled by each machine's capacity factor (stragglers < 1)."""
+        return self.alive * self.cap_factor
 
     # ------------------------------------------------------------------
     def preload_queries(self, rects: np.ndarray) -> None:
         self.router.ingest(QueryBatch(rects, self.tick_no))
 
     def fail_machine(self, m: int) -> None:
+        """Immediate crash-stop (out-of-band notification): the machine
+        is silenced *and* the router learns right away — the legacy
+        test/benchmark entry point.  Scheduled failures instead go
+        through heartbeat detection (``EngineConfig.heartbeat_timeout``
+        ticks of silence before the router is told)."""
         # drain device-held collector deltas before the failure handler
         # re-homes partitions (their stats rows move with them)
         self._fused_sync_collectors()
+        self._silence(m)
+        self.coord.suspend(m)
+        self._pending_detect.pop(m, None)
+        self._notify_failure(m)
+
+    def _silence(self, m: int) -> None:
+        """The machine stops working and heartbeating; queued work on a
+        crashed machine is lost (at-most-once spouts)."""
         self.alive[m] = False
-        self.router.ingest(MachineFailure(m, self.tick_no))
-        # queued work on a crashed machine is re-queued via the router's
-        # new plan on subsequent ticks; drop its local queue (data loss is
-        # bounded by one tick of tuples — matches at-most-once spouts).
         self.queue_units[m] = 0.0
         self.queue_tuples[m] = 0.0
+
+    def _notify_failure(self, m: int) -> None:
+        """Tell the router about a (detected) crash-stop and absorb the
+        emergency re-homing it answers with; fail over the Coordinator
+        by rank order if the dead machine led the group."""
+        self._absorb_outcome(self.router.ingest(
+            MachineFailure(m, self.tick_no)))
+        # work routed at the stale plan between failure and detection
+        # piled up on the silent machine — it is lost with the crash
+        self.queue_units[m] = 0.0
+        self.queue_tuples[m] = 0.0
+        self._refresh_coordinator()
+
+    def _refresh_coordinator(self) -> None:
+        """Rank-order failover (§4.1.1, DESIGN.md §3): the lowest-ranked
+        live member leads.  A leadership change makes every live member
+        re-send its per-round report to the new Coordinator — billed as
+        wire bytes on the current tick."""
+        try:
+            new = self.coord.coordinator()
+        except RuntimeError:
+            return    # whole group silent; keep the stale leader
+        if new != self._coordinator:
+            self._coordinator = new
+            live = len(self.coord.live_members())
+            self._acc[0] += live * CostReport.WIRE_BYTES
+
+    def apply_membership(self, ev: MembershipChange) -> None:
+        """Apply one scheduled membership change at the current tick."""
+        t = self.tick_no
+        if isinstance(ev, MachineFailure):
+            m = ev.machine
+            if self.alive[m]:
+                self._silence(m)
+                self._pending_detect[m] = \
+                    t + max(self.cfg.heartbeat_timeout, 1) - 1
+        elif isinstance(ev, MachineJoin):
+            m = ev.machine
+            if not self.alive[m]:
+                # fresh/standby slot: nothing queued survives a (re)join
+                self.queue_units[m] = 0.0
+                self.queue_tuples[m] = 0.0
+            self.alive[m] = True
+            self.cap_factor[m] = float(ev.capacity_factor)
+            self._pending_detect.pop(m, None)
+            self.coord.beat(m)
+            self._absorb_outcome(self.router.ingest(
+                MachineJoin(m, t, float(ev.capacity_factor))))
+            self._refresh_coordinator()
+        elif isinstance(ev, MachineSlow):
+            self.cap_factor[ev.machine] = float(ev.factor)
+            self._absorb_outcome(self.router.ingest(
+                MachineSlow(ev.machine, float(ev.factor), t)))
+        else:
+            raise TypeError(f"not a membership change: {ev!r}")
+
+    def _membership_tick(self, t: int) -> None:
+        """Top-of-tick membership processing: scheduled events, one
+        heartbeat round, and heartbeat-timeout failure detection."""
+        for ev in self.stream.membership(t):
+            self.apply_membership(ev)
+        self.coord.tick()
+        for m in np.nonzero(self.alive)[0]:
+            self.coord.beat(int(m))
+        if self._pending_detect:
+            live = set(self.coord.live_members())
+            for m in [m for m in self._pending_detect if m not in live]:
+                del self._pending_detect[m]
+                self._fused_sync_collectors()
+                self._notify_failure(m)
+
+    def _absorb_outcome(self, out) -> None:
+        """Fold a membership change's RoundOutcome (emergency re-homing)
+        into the current tick's traffic accounting and bill the moved
+        queries' install work on their receivers."""
+        if not isinstance(out, RoundOutcome):
+            return
+        self._install_moved_queries(out)
+        self._acc += (out.wire_bytes, out.migration_bytes,
+                      out.moved_tuples, len(out.transfers))
+
+    def _take_acc(self) -> np.ndarray:
+        acc, self._acc = self._acc, np.zeros(4, np.int64)
+        return acc
+
+    def _install_moved_queries(self, outcome: RoundOutcome) -> None:
+        """Bill the install work of moved queries on the machines that
+        *receive* them — one entry per transfer (the receiver ``m_L``).
+        Outcomes without per-transfer detail fall back to the least
+        loaded live machine (legacy single-target billing)."""
+        if not outcome.moved_queries:
+            return
+        c = self.cfg.migration_unit_cost
+        if (outcome.moved_by_transfer
+                and len(outcome.moved_by_transfer) == len(outcome.transfers)):
+            for tr, n in zip(outcome.transfers, outcome.moved_by_transfer):
+                self.queue_units[tr.m_l] += n * c
+        else:
+            tgt = int(np.argmin(self.queue_units + (~self.alive) * 1e18))
+            self.queue_units[tgt] += outcome.moved_queries * c
 
     def _enqueue(self, decision: RoutingDecision) -> None:
         np.add.at(self.queue_units, decision.owners,
@@ -118,11 +279,13 @@ class StreamingEngine:
 
     # ------------------------------------------------------------------
     def fused_supported(self) -> bool:
-        """Whether this (router, workload) pair can run fused windows:
-        a grid-index router exposing the ``fused_host_state`` seam and
-        a storeless workload."""
-        return (hasattr(self.router, "fused_host_state")
-                and getattr(self.router, "store", None) is None)
+        """Whether this router can run fused windows: any grid-index
+        router exposing the ``fused_host_state`` seam.  Store-keeping
+        workloads (snapshot probes / STORED persistence) fuse too —
+        probe arrivals follow the sources' deterministic schedule
+        (window boundaries), and the engine replays each window's
+        deposits into the host-side store."""
+        return hasattr(self.router, "fused_host_state")
 
     def run(self, ticks: int) -> Metrics:
         # fused_window is an execution knob, not a semantics change:
@@ -138,6 +301,8 @@ class StreamingEngine:
     def step(self) -> None:
         cfg, mtr = self.cfg, self.metrics
         t = self.tick_no
+        # 0. scheduled membership changes, heartbeats, failure detection
+        self._membership_tick(t)
         # 1. query/probe arrivals — whatever events the workload's
         #    EventStream emits for this tick.
         n_snap = 0
@@ -148,53 +313,60 @@ class StreamingEngine:
                 if isinstance(event, ProbeBatch):
                     n_snap += len(decision)
         # 2. memory feasibility (Fig 11: Replicated dies at high |Q|;
-        #    STORED persistence adds the resident-data wall)
+        #    STORED persistence adds the resident-data wall).  The check
+        #    is per tick: pressure that recedes — retention decay, a
+        #    rebalance spreading resident state — lets injection resume;
+        #    ``was_infeasible`` keeps the latched view for reporting.
         mem = self.router.memory_usage()
-        if mem.queries.max(initial=0) > cfg.mem_queries:
-            mtr.infeasible = True
         d_max = float(mem.tuples.max(initial=0))
-        if d_max > cfg.mem_tuples:
-            mtr.infeasible = True
+        infeasible = (mem.queries.max(initial=0) > cfg.mem_queries
+                      or d_max > cfg.mem_tuples)
+        if infeasible:
+            mtr.was_infeasible = True
         # 3. inject tuples (backpressure-throttled)
-        lam = 0.0 if mtr.infeasible else min(cfg.lambda_max, self.lam_bp)
+        lam = 0.0 if infeasible else min(cfg.lambda_max, self.lam_bp)
         n = int(lam)
         if n > 0:
             self._enqueue(self.router.ingest(self.stream.tuples(n, t)))
         # 4–6. process, latency, backpressure — the shared tick dynamics
         # (fused.host_process_tick is the single home; the fused window
-        # paths run the very same function / its float32 mirror)
+        # paths run the very same function / its float32 mirror).  The
+        # capacity mask folds each machine's effective speed, so a
+        # straggler processes proportionally less per tick.
         processed_units, w, latency, self.lam_bp = host_process_tick(
             self.queue_units, self.queue_tuples, self.lam_bp,
-            cfg.cap_units, self.alive, cfg.bp_high, cfg.bp_dec,
+            cfg.cap_units, self._eff_alive(), cfg.bp_high, cfg.bp_dec,
             cfg.bp_inc, cfg.lambda_max)
         # 7. load-balancing round — at the end of each full interval
         #    (never at tick 0, when no load has accumulated yet)
         outcome = NO_ROUND
         if t > 0 and t % cfg.round_every == 0:
             outcome = self.router.on_round(t)
-            if outcome.moved_queries:
-                # installing moved queries costs work on the receiver
-                tgt = int(np.argmin(self.queue_units + (~self.alive) * 1e18))
-                self.queue_units[tgt] += (outcome.moved_queries
-                                          * cfg.migration_unit_cost)
+            # installing moved queries costs work on their receivers
+            self._install_moved_queries(outcome)
         # 8. persistence upkeep (ephemeral probe-window decay)
         self.router.end_tick()
         # 9. record.  The units-of-work factor is the query load served:
         # resident queries for continuous models plus this tick's
-        # one-shot probes.
+        # one-shot probes.  Membership traffic (emergency re-homing,
+        # Coordinator failover) accumulated since the last record is
+        # folded into this tick's row.
+        acc = self._take_acc()
         q_total = self.router.q_total
         mtr.units_of_work.append(float(w) * (q_total + n_snap))
         mtr.throughput.append(float(w))
         mtr.latency.append(latency)
         mtr.q_total.append(q_total)
         mtr.utilization.append(processed_units / np.maximum(cfg.cap_units, 1e-9))
-        mtr.wire_bytes.append(outcome.wire_bytes)
-        mtr.migration_bytes.append(outcome.migration_bytes)
-        mtr.moved_tuples.append(outcome.moved_tuples)
-        mtr.transfers.append(len(outcome.transfers))
+        mtr.wire_bytes.append(outcome.wire_bytes + int(acc[0]))
+        mtr.migration_bytes.append(outcome.migration_bytes + int(acc[1]))
+        mtr.moved_tuples.append(outcome.moved_tuples + int(acc[2]))
+        mtr.transfers.append(len(outcome.transfers) + int(acc[3]))
         mtr.snapshots.append(n_snap)
         mtr.resident_tuples.append(d_max)
         mtr.injected.append(n)
+        mtr.alive.append(self.alive.copy())
+        mtr.cap_factor.append(self.cap_factor.copy())
         self.tick_no += 1
 
     # ------------------------------------------------------------------
@@ -205,18 +377,25 @@ class StreamingEngine:
         the router's data plane.
 
         The timeline is cut into scan windows of up to ``window`` ticks;
-        a window ends early at the next query/probe arrival tick or just
-        after the next round boundary, and those host-boundary ticks run
-        through the per-tick :meth:`step` path (arrivals/rounds mutate
-        router state the device snapshot mirrors).  Each window stages
-        ``⌊λmax⌋`` candidate tuples per tick up front — inside the scan,
+        a window ends early at the next query/probe arrival tick, the
+        next scheduled membership change or heartbeat-detection tick, or
+        just after the next round boundary — those host-boundary ticks
+        run through the per-tick :meth:`step` path (arrivals, membership
+        and rounds mutate router state the device snapshot mirrors, and
+        a rebalance/recovery becomes a ``scatter_update`` patch of the
+        resident state, never a rebuild).  Each window stages ``⌊λmax⌋``
+        candidate tuples per tick up front — inside the scan,
         backpressure still throttles injection dynamically by masking
         the batch prefix, so windowing changes *where* sampling happens,
         not the engine dynamics (with backpressure idle the RNG stream
         is identical to the per-tick loop, which is what the parity
         tests pin).  Workloads with a tuple store (snapshot probes /
-        STORED persistence) ingest work the fused step does not model
-        and are rejected.
+        STORED persistence) run fused too: the fused step does not model
+        deposits, so the engine replays each window's injected batches
+        into the host-side store (counts only) and applies the per-tick
+        retention decay — and under STORED persistence windows are
+        additionally shortened so the resident-data memory wall can
+        never engage inside one.
         """
         cfg, mtr = self.cfg, self.metrics
         router = self.router
@@ -225,26 +404,22 @@ class StreamingEngine:
                 f"{type(router).__name__} does not expose fused_host_state; "
                 "the device-resident path supports grid-index routers — "
                 "use run() instead")
-        if getattr(router, "store", None) is not None:
-            raise ValueError(
-                f"workload {router.workload.label!r} keeps a tuple store; "
-                "the fused path covers storeless steady-state ingest — "
-                "use run() instead")
         b = int(cfg.lambda_max)
         if b <= 0 or window < 1:
             for _ in range(ticks):
                 self.step()
             return self.metrics
         plane = router.plane
+        store = getattr(router, "store", None)
         t_end = self.tick_no + ticks
         while self.tick_no < t_end:
             t = self.tick_no
-            na = self.stream.next_arrival(t)
-            if ((na is not None and na <= t) or mtr.infeasible
-                    or self._mem_infeasible()):
-                # host-boundary tick: arrivals (or a stalled system) go
-                # through the reference path; drain collectors first in
-                # case the tick closes a round
+            nb = self._next_boundary(t)
+            if (nb is not None and nb <= t) or self._mem_infeasible():
+                # host-boundary tick: arrivals, membership changes and
+                # stalled (memory-infeasible) ticks go through the
+                # reference path; drain collectors first in case the
+                # tick closes a round or re-homes partitions
                 self._fused_sync_collectors()
                 self.step()
                 continue
@@ -252,8 +427,20 @@ class StreamingEngine:
             if r % cfg.round_every:
                 r = (r // cfg.round_every + 1) * cfg.round_every
             stop = min(t_end, t + window, r + 1)
-            if na is not None:
-                stop = min(stop, na)
+            if nb is not None:
+                stop = min(stop, nb)
+            if store is not None and router.workload.stored:
+                # shorten the window so the per-machine resident-data
+                # wall cannot engage mid-window (conservative: all of a
+                # tick's deposits could land on the fullest machine)
+                d_now = float(self.router.memory_usage()
+                              .tuples.max(initial=0))
+                room = int((cfg.mem_tuples - d_now) // max(b, 1))
+                if room < 1:
+                    self._fused_sync_collectors()
+                    self.step()
+                    continue
+                stop = min(stop, t + room)
             w = stop - t
             # stage W ticks of candidate batches (tick-ordered, so the
             # source RNG stream matches the per-tick loop)
@@ -264,7 +451,7 @@ class StreamingEngine:
                 cap_units=float(cfg.cap_units),
                 lambda_max=float(cfg.lambda_max), bp_high=float(cfg.bp_high),
                 bp_dec=float(cfg.bp_dec), bp_inc=float(cfg.bp_inc),
-                alive=self.alive,
+                alive=self._eff_alive(),
                 track_stats=self._fused["host"].track_stats,
                 n_alloc=self._fused["host"].n_alloc)
             carry = EngineCarry(self.queue_units, self.queue_tuples,
@@ -277,11 +464,20 @@ class StreamingEngine:
                 self.queue_tuples = np.asarray(carry.queue_tuples,
                                                np.float64)
                 self.lam_bp = float(carry.lam_bp)
+                # store-keeping workloads: the fused step priced the
+                # batches but did not deposit them — replay counts into
+                # the host-side store (+ per-tick retention decay)
+                resid = self._replay_store(xy, outs.injected)
             else:
                 # backpressure engaged mid-window: the fused window
                 # cannot represent throttled injection — replay the
                 # staged batches through the exact per-tick path
-                outs = self._window_reference(xy)
+                outs, resid = self._window_reference(xy)
+            # heartbeats advance through the window (membership is
+            # constant inside one: boundaries are cut at every
+            # scheduled event and detection tick)
+            self._advance_heartbeats(w)
+            acc = self._take_acc()
             q_total = router.q_total
             for i in range(w):
                 mtr.units_of_work.append(float(outs.throughput[i]) * q_total)
@@ -290,13 +486,15 @@ class StreamingEngine:
                 mtr.q_total.append(q_total)
                 mtr.utilization.append(np.asarray(outs.utilization[i],
                                                   np.float64))
-                mtr.wire_bytes.append(0)
-                mtr.migration_bytes.append(0)
-                mtr.moved_tuples.append(0)
-                mtr.transfers.append(0)
+                mtr.wire_bytes.append(int(acc[0]) if i == 0 else 0)
+                mtr.migration_bytes.append(int(acc[1]) if i == 0 else 0)
+                mtr.moved_tuples.append(int(acc[2]) if i == 0 else 0)
+                mtr.transfers.append(int(acc[3]) if i == 0 else 0)
                 mtr.snapshots.append(0)
-                mtr.resident_tuples.append(0.0)
+                mtr.resident_tuples.append(float(resid[i]))
                 mtr.injected.append(int(outs.injected[i]))
+                mtr.alive.append(self.alive.copy())
+                mtr.cap_factor.append(self.cap_factor.copy())
             self.tick_no = stop
             last = stop - 1
             if last > 0 and last % cfg.round_every == 0:
@@ -306,44 +504,95 @@ class StreamingEngine:
                 # the same tick row)
                 self._fused_sync_collectors()
                 outcome = router.on_round(last)
-                if outcome.moved_queries:
-                    tgt = int(np.argmin(self.queue_units
-                                        + (~self.alive) * 1e18))
-                    self.queue_units[tgt] += (outcome.moved_queries
-                                              * cfg.migration_unit_cost)
-                mtr.wire_bytes[-1] = outcome.wire_bytes
-                mtr.migration_bytes[-1] = outcome.migration_bytes
-                mtr.moved_tuples[-1] = outcome.moved_tuples
-                mtr.transfers[-1] = len(outcome.transfers)
+                self._install_moved_queries(outcome)
+                mtr.wire_bytes[-1] += outcome.wire_bytes
+                mtr.migration_bytes[-1] += outcome.migration_bytes
+                mtr.moved_tuples[-1] += outcome.moved_tuples
+                mtr.transfers[-1] += len(outcome.transfers)
         # leave no deltas stranded on device: a later per-tick run()
         # or direct protocol use must see complete host statistics
         self._fused_sync_collectors()
         return mtr
 
-    def _window_reference(self, xy_stack) -> "FusedOutputs":
+    def _window_reference(self, xy_stack):
         """Replay a staged window through the per-tick path: inject the
         dynamic backpressure-throttled prefix of each staged batch via
-        ``Router.ingest`` (collectors accumulate host-side) and run the
-        shared tick dynamics.  Used when a fused window declines
-        (``ok=False``) — the congested regime keeps exact semantics."""
+        ``Router.ingest`` (collectors accumulate host-side, stores
+        deposit as usual) and run the shared tick dynamics + per-tick
+        persistence upkeep.  Used when a fused window declines
+        (``ok=False``) — the congested regime keeps exact semantics.
+        Returns ``(FusedOutputs, resident-tuples per tick)``."""
         cfg = self.cfg
         w = len(xy_stack)
         m = len(self.queue_units)
         thr, lat = np.zeros(w), np.zeros(w)
         util = np.zeros((w, m))
         inj = np.zeros(w, np.int64)
+        resid = np.zeros(w)
         for i in range(w):
+            resid[i] = float(self.router.memory_usage()
+                             .tuples.max(initial=0))
             n = int(min(cfg.lambda_max, self.lam_bp))
             if n > 0:
                 self._enqueue(self.router.ingest(
                     TupleBatch(xy_stack[i, :n], self.tick_no + i)))
             pu, thr[i], lat[i], self.lam_bp = host_process_tick(
                 self.queue_units, self.queue_tuples, self.lam_bp,
-                cfg.cap_units, self.alive, cfg.bp_high, cfg.bp_dec,
+                cfg.cap_units, self._eff_alive(), cfg.bp_high, cfg.bp_dec,
                 cfg.bp_inc, cfg.lambda_max)
             util[i] = pu / np.maximum(cfg.cap_units, 1e-9)
             inj[i] = n
-        return FusedOutputs(thr, lat, util, inj)
+            self.router.end_tick()
+        return FusedOutputs(thr, lat, util, inj), resid
+
+    def _replay_store(self, xy_stack, injected) -> np.ndarray:
+        """Post-window store replay for store-keeping workloads: route
+        each tick's injected prefix on the host grid snapshot, deposit
+        the per-partition counts, apply the tick's retention decay.
+        Bit-equal to what the per-tick loop's ``_route_tuples`` deposits
+        (integer counts; same grid, static within the window).  Returns
+        the per-tick resident-tuple metric (pre-deposit, like step 2 of
+        the per-tick loop records it)."""
+        w = len(xy_stack)
+        resid = np.zeros(w)
+        store = getattr(self.router, "store", None)
+        if store is None:
+            return resid
+        host = self._fused["host"]
+        grid = host.grid
+        g = grid.shape[0]
+        parts = self.router.index.parts
+        stored = self.router.workload.stored
+        for i in range(w):
+            if stored:
+                resid[i] = float(store.by_machine(parts,
+                                                  len(self.alive)).max())
+            n = int(injected[i])
+            if n > 0:
+                row, col = geometry.points_to_cells(
+                    np.asarray(xy_stack[i, :n], np.float32), g)
+                store.deposit(grid[row, col], parts.capacity)
+            store.expire()
+        return resid
+
+    def _next_boundary(self, t: int) -> int | None:
+        """First tick ≥ ``t`` that must run on the host: a query/probe
+        arrival, a scheduled membership change, or the heartbeat
+        detection of a pending failure.  All three schedules are
+        deterministic, so fused windows cut exactly there."""
+        cands = [self.stream.next_arrival(t), self.stream.next_membership(t)]
+        cands += list(self._pending_detect.values())
+        cands = [c for c in cands if c is not None]
+        return min(cands) if cands else None
+
+    def _advance_heartbeats(self, ticks: int) -> None:
+        """Fast-forward the heartbeat table across a fused window: the
+        membership is constant inside one, so beating once at the final
+        clock equals beating every tick."""
+        for _ in range(ticks):
+            self.coord.tick()
+        for m in np.nonzero(self.alive)[0]:
+            self.coord.beat(int(m))
 
     def _mem_infeasible(self) -> bool:
         mem = self.router.memory_usage()

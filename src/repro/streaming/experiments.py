@@ -38,8 +38,8 @@ from .api import Router
 from .baselines import (ReplicatedRouter, StaticHistoryRouter,
                         StaticUniformRouter, SwarmRouter)
 from .engine import EngineConfig, Metrics, StreamingEngine
-from .sources import (QUERY_SIDE, ScenarioSource, TwitterLikeSource,
-                      scenario)
+from .sources import (QUERY_SIDE, MembershipEvent, ScenarioSource,
+                      TwitterLikeSource, scenario)
 
 ROUTER_KINDS = ("replicated", "static_uniform", "static_history", "swarm")
 
@@ -83,8 +83,10 @@ class RouterSpec:
 
     def build(self, *, num_machines: int,
               workload: WorkloadSpec | None = None,
-              data_plane: str | None = None, seed: int = 0) -> Router:
-        kw = {"workload": workload, "data_plane": data_plane}
+              data_plane: str | None = None, seed: int = 0,
+              standby: int = 0) -> Router:
+        kw = {"workload": workload, "data_plane": data_plane,
+              "standby": standby}
         if self.kind == "replicated":
             return ReplicatedRouter(num_machines, self.grid_size, **kw)
         if self.kind == "static_uniform":
@@ -111,26 +113,47 @@ class RouterSpec:
 
 @dataclass(frozen=True)
 class ScenarioSpec:
-    """How to build one scenario timeline (paper Figs 11–16)."""
+    """How to build one scenario timeline (paper Figs 11–16).
+
+    ``membership`` is a deterministic schedule of cluster-membership
+    changes (:class:`~repro.streaming.sources.MembershipEvent`): kills,
+    joins and capacity changes become a sweepable dimension of the
+    experiment suite, exactly like hotspots.  ``snapshot_every`` sets
+    the probe-arrival period of snapshot workloads (probes burst every
+    k ticks at rate×k, so the mean rate is period-invariant and fused
+    windows can run between arrivals)."""
 
     name: str = "uniform_normal"
     ticks: int = 90
     preload_queries: int = 3000
     query_burst: int = 500
     peak: float = 0.4
+    membership: tuple[MembershipEvent, ...] = ()
+    snapshot_every: int = 1
 
     @property
     def key(self) -> str:
         default = type(self).__dataclass_fields__["peak"].default
         peak = "" if self.peak == default else f",peak={self.peak}"
+        mb = ""
+        if self.membership:
+            mb = "," + "+".join(
+                f"{e.kind}@{e.tick}:m{e.machine}"
+                + (f"x{e.factor}" if e.kind != "fail" and e.factor != 1.0
+                   else "")
+                for e in self.membership)
+        snap = ("" if self.snapshot_every == 1
+                else f",snap/{self.snapshot_every}")
         return (f"{self.name}[{self.ticks}t,{self.preload_queries}q,"
-                f"{self.query_burst}b{peak}]")
+                f"{self.query_burst}b{peak}{mb}{snap}]")
 
     def build(self, *, seed: int = 0,
               workload: WorkloadSpec | None = None) -> ScenarioSource:
         return scenario(self.name, seed=seed, horizon=self.ticks,
                         peak=self.peak, query_burst=self.query_burst,
-                        query_side=workload_query_side(workload))
+                        query_side=workload_query_side(workload),
+                        membership=self.membership,
+                        snapshot_every=self.snapshot_every)
 
 
 @dataclass(frozen=True)
@@ -183,7 +206,8 @@ def run(exp: Experiment) -> ExperimentResult:
     source = exp.scenario.build(seed=exp.seed, workload=exp.workload)
     router = exp.router.build(num_machines=exp.engine.num_machines,
                               workload=exp.workload,
-                              data_plane=exp.data_plane, seed=exp.seed)
+                              data_plane=exp.data_plane, seed=exp.seed,
+                              standby=exp.engine.standby_machines)
     eng = StreamingEngine(router, source, exp.engine)
     t0 = time.perf_counter()
     preload = eng.stream.preload(exp.scenario.preload_queries)

@@ -126,7 +126,10 @@ class FusedParams:
     bp_high: float
     bp_dec: float
     bp_inc: float
-    alive: np.ndarray        # (M,) float mask
+    # (M,) effective-capacity mask: alive × per-machine capacity factor
+    # (0 = dead/standby, <1 = straggler) — membership and slowdowns
+    # reach the fused tick dynamics through this one array
+    alive: np.ndarray
     track_stats: bool = False
     n_alloc: int = 0         # allocated-id prefix of the state banks
 
@@ -136,7 +139,9 @@ def host_process_tick(queue_units: np.ndarray, queue_tuples: np.ndarray,
                       bp_high: float, bp_dec: float, bp_inc: float,
                       lambda_max: float):
     """Steps 4–6 of one engine tick: process queued work against
-    capacity, derive latency, update global backpressure.
+    capacity, derive latency, update global backpressure.  ``alive`` is
+    the effective-capacity mask (alive × capacity factor), so dead
+    machines process nothing and stragglers proportionally less.
 
     Mutates ``queue_units``/``queue_tuples`` in place and returns
     ``(processed_units, processed_total, latency, lam_bp)``.  This is

@@ -179,7 +179,12 @@ class DataPlane:
                    fp: FusedParams, carry: EngineCarry, xy_stack):
         """Execute ``len(xy_stack)`` fused engine ticks (inject →
         route/price/collect → process → backpressure).  ``xy_stack`` is
-        (W, B, 2) with B = ⌊λmax⌋ staged candidates per tick.  Returns
+        (W, B, 2) with B = ⌊λmax⌋ staged candidates per tick.
+        ``fp.alive`` is the effective-capacity mask (alive × capacity
+        factor): elastic membership — kills, joins, stragglers — reaches
+        the window's tick dynamics through that one per-window array,
+        while plan changes from recovery/rebalancing arrive as
+        ``scatter_update`` patches of the resident state.  Returns
         ``(state, carry, FusedOutputs, ok)``; ``ok`` is False when the
         window cannot represent the tick dynamics exactly (the JAX
         plane's histogram factoring assumes backpressure stays idle) —

@@ -25,6 +25,25 @@ QUERY_SIDE = 0.02
 HOTSPOT_SIDE = 0.15
 
 
+@dataclass(frozen=True)
+class MembershipEvent:
+    """One scheduled cluster-membership change on a scenario timeline.
+
+    ``kind`` is ``"fail"`` (crash-stop), ``"join"`` (a machine slot
+    becomes/returns active at ``factor`` × nominal capacity) or
+    ``"slow"`` (the slot's capacity factor changes — a straggler when
+    < 1, recovery when back to 1).  ``streaming.api.EventStream``
+    converts entries into the typed ``MachineFailure`` / ``MachineJoin``
+    / ``MachineSlow`` events the engine applies; the schedule is fully
+    deterministic, so the fused engine path cuts scan windows at these
+    ticks without consuming any RNG."""
+
+    tick: int
+    kind: str          # "fail" | "join" | "slow"
+    machine: int
+    factor: float = 1.0
+
+
 def rects_around(foci: np.ndarray, side: float) -> np.ndarray:
     """Axis-aligned rects of side ``side`` centered on ``foci``,
     clipped into the unit space — the one home of the query/probe
@@ -133,6 +152,8 @@ class ScenarioSource:
     base: TwitterLikeSource
     hotspots: list[Hotspot] = field(default_factory=list)
     query_side: float = QUERY_SIDE
+    membership: tuple[MembershipEvent, ...] = ()
+    snapshot_every: int = 1     # probe-arrival period (ticks)
 
     def sample_points(self, n: int, tick: int) -> np.ndarray:
         rng = self.base.rng
@@ -162,10 +183,30 @@ class ScenarioSource:
 
     def snapshot_arrivals(self, tick: int, rate: int,
                           side: float) -> np.ndarray:
-        """One-shot probe rectangles for the SNAPSHOT query model."""
-        if rate <= 0:
+        """One-shot probe rectangles for the SNAPSHOT query model.
+        Probes arrive every ``snapshot_every`` ticks (a burst of
+        ``rate × snapshot_every`` probes, so the mean probe rate is
+        period-invariant); off-schedule ticks emit nothing, which is
+        what lets probe workloads fuse between arrivals."""
+        if rate <= 0 or tick % max(self.snapshot_every, 1):
             return np.zeros((0, 4), np.float32)
-        return rects_around(self.sample_points(int(rate), tick), side)
+        n = int(rate) * max(self.snapshot_every, 1)
+        return rects_around(self.sample_points(n, tick), side)
+
+    def next_probe_arrival(self, tick: int) -> int:
+        """First tick ≥ ``tick`` on the deterministic probe schedule
+        (every ``snapshot_every`` ticks) — consumes no RNG, so the
+        fused engine path can cut its scan windows here."""
+        k = max(self.snapshot_every, 1)
+        return tick if tick % k == 0 else (tick // k + 1) * k
+
+    def membership_events(self, tick: int) -> list[MembershipEvent]:
+        """Scheduled membership changes firing at exactly ``tick``."""
+        return [e for e in self.membership if e.tick == tick]
+
+    def next_membership_event(self, tick: int) -> int | None:
+        ts = [e.tick for e in self.membership if e.tick >= tick]
+        return min(ts) if ts else None
 
     def next_query_arrival(self, tick: int) -> int | None:
         """First tick ≥ ``tick`` whose ``query_arrivals`` is non-empty,
@@ -196,6 +237,7 @@ class ReplaySource:
     base: TwitterLikeSource | None = None
     query_side: float = QUERY_SIDE
     cursor: int = 0
+    snapshot_every: int = 1
 
     def __post_init__(self):
         if self.base is None:
@@ -219,9 +261,14 @@ class ReplaySource:
 
     def snapshot_arrivals(self, tick: int, rate: int,
                           side: float) -> np.ndarray:
-        if rate <= 0:
+        if rate <= 0 or tick % max(self.snapshot_every, 1):
             return np.zeros((0, 4), np.float32)
-        return rects_around(self.sample_points(int(rate), tick), side)
+        n = int(rate) * max(self.snapshot_every, 1)
+        return rects_around(self.sample_points(n, tick), side)
+
+    def next_probe_arrival(self, tick: int) -> int:
+        k = max(self.snapshot_every, 1)
+        return tick if tick % k == 0 else (tick // k + 1) * k
 
     def next_query_arrival(self, tick: int) -> int | None:
         return None
@@ -234,7 +281,9 @@ class ReplaySource:
 
 def scenario(name: str, seed: int = 0, horizon: int = 240,
              peak: float = 0.4, query_burst: int = 2000,
-             query_side: float = QUERY_SIDE) -> ScenarioSource:
+             query_side: float = QUERY_SIDE,
+             membership: tuple[MembershipEvent, ...] = (),
+             snapshot_every: int = 1) -> ScenarioSource:
     base = TwitterLikeSource(seed=seed)
     lo, hi = (0.05, 0.05), (0.80, 0.80)  # lower-left / upper-right corners
     span = (horizon // 3, horizon // 3)  # hotspot occupies the middle third
@@ -262,4 +311,6 @@ def scenario(name: str, seed: int = 0, horizon: int = 240,
         hs = []
     else:
         raise ValueError(f"unknown scenario {name!r}")
-    return ScenarioSource(base, hs, query_side=query_side)
+    return ScenarioSource(base, hs, query_side=query_side,
+                          membership=tuple(membership),
+                          snapshot_every=snapshot_every)

@@ -1,0 +1,347 @@
+"""Elastic cluster membership: scheduled kill/join/straggler timelines
+through the experiment suite, heartbeat-driven failure detection with
+rank-order Coordinator failover, planner-routed emergency recovery,
+receiver-side moved-query billing, and the per-tick (unlatched)
+memory-feasibility gate."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core.cost_model import CostReport
+from repro.core.planner import TransferRecord
+from repro.ft import CoordinatorGroup
+from repro.queries import WorkloadSpec
+from repro.streaming import (EngineConfig, EventStream, Experiment,
+                             MachineFailure, MachineSlow, MembershipEvent,
+                             MemoryUsage, RoundOutcome, RouterSpec,
+                             RoutingDecision, ScenarioSpec, StreamingEngine,
+                             SwarmRouter, TupleBatch, run, run_suite,
+                             scenario, sweep)
+from repro.streaming.api import NO_ROUND
+
+G, M = 64, 10
+
+TIMELINE = (MembershipEvent(9, "fail", 3),
+            MembershipEvent(17, "join", 9),
+            MembershipEvent(23, "slow", 5, 0.5))
+
+CFG = EngineConfig(num_machines=M, cap_units=1e9, lambda_max=2000,
+                   mem_queries=10**8, round_every=3, standby_machines=1)
+
+
+def _spec(**kw):
+    return ScenarioSpec("uniform_normal", ticks=30, preload_queries=400,
+                        query_burst=150, membership=TIMELINE, **kw)
+
+
+# ---------------------------------------------------------------------------
+# The scheduled timeline end to end, through run_suite, on both planes
+# ---------------------------------------------------------------------------
+
+def test_kill_join_straggler_timeline_through_run_suite():
+    exps = sweep(routers=[RouterSpec("swarm", beta=4),
+                          RouterSpec("static_history")],
+                 scenarios=[_spec()],
+                 engine=dataclasses.replace(CFG, fused_window=8),
+                 data_planes=("numpy", "jax"))
+    results = run_suite(exps)
+    assert len(results) == 4
+    for res in results.values():
+        a = res.asarrays()
+        for name, arr in a.items():
+            assert np.isfinite(np.asarray(arr, np.float64)).all(), name
+        # the engine-side membership view is identical for every router
+        assert not a["alive"][10][3] and a["alive"][8][3]   # detected kill
+        assert a["alive"][17][9] and not a["alive"][16][9]  # join
+        assert a["cap_factor"][23][5] == 0.5                # straggler
+    swarm = next(r for k, r in results.items()
+                 if k.startswith("swarm") and "/numpy/" in k).router
+    # dead machine fully evacuated at detection; the joiner owns load
+    assert len(swarm.swarm.index.machine_partitions(3)) == 0
+    assert len(swarm.swarm.index.machine_partitions(9)) > 0
+    assert swarm.swarm.cap_factor[5] == 0.5
+    static = next(r for k, r in results.items()
+                  if k.startswith("static_history") and "/numpy/" in k).router
+    # the static plan cannot adapt: the dead machine keeps its
+    # partitions and the joiner never receives any
+    assert len(static.index.machine_partitions(3)) > 0
+    assert len(static.index.machine_partitions(9)) == 0
+
+
+@pytest.mark.parametrize("plane", ["numpy", "jax"])
+def test_membership_inside_fused_run_matches_per_tick(plane):
+    """Satellite: failure *during* a fused run — windows are cut at the
+    scheduled event and at the heartbeat-detection tick, collectors are
+    drained before the emergency re-homing, and the fused metrics match
+    the per-tick reference (exactly on the NumPy plane)."""
+    base = Experiment(router=RouterSpec("swarm", beta=4), scenario=_spec(),
+                      engine=CFG, data_plane=plane)
+    fused = base.with_(engine=dataclasses.replace(CFG, fused_window=8))
+    ref = run(base).metrics.asarrays()
+    out = run(fused).metrics.asarrays()
+    if plane == "numpy":
+        for name in ref:
+            np.testing.assert_array_equal(ref[name], out[name], err_msg=name)
+        return
+    for name in ("injected", "q_total", "transfers", "alive", "cap_factor",
+                 "wire_bytes"):
+        np.testing.assert_array_equal(ref[name], out[name], err_msg=name)
+    for name in ("units_of_work", "throughput", "latency", "utilization"):
+        np.testing.assert_allclose(
+            np.asarray(ref[name], np.float64),
+            np.asarray(out[name], np.float64),
+            rtol=1e-3, atol=1e-6, err_msg=name)
+
+
+def test_fused_membership_patches_state_without_rebuild(monkeypatch):
+    """The resident device state survives kill → recovery → join by
+    scatter patches: make_state runs once per plane/capacity epoch, not
+    once per membership change."""
+    import repro.streaming.planes as planes_mod
+    calls = {"make": 0, "scatter": 0}
+    orig_make = planes_mod.NumpyPlane.make_state
+    orig_scatter = planes_mod.NumpyPlane.scatter_update
+
+    def count_make(self, host):
+        calls["make"] += 1
+        return orig_make(self, host)
+
+    def count_scatter(self, state, updates):
+        calls["scatter"] += 1
+        return orig_scatter(self, state, updates)
+
+    monkeypatch.setattr(planes_mod.NumpyPlane, "make_state", count_make)
+    monkeypatch.setattr(planes_mod.NumpyPlane, "scatter_update",
+                        count_scatter)
+    fused = Experiment(router=RouterSpec("swarm", beta=4), scenario=_spec(),
+                       engine=dataclasses.replace(CFG, fused_window=8))
+    run(fused)
+    assert calls["make"] == 1       # no rebuild across the whole timeline
+    assert calls["scatter"] >= 2    # recovery + rebalances patched in place
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat detection and Coordinator failover
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detection_delay_and_rank_order_failover():
+    """A scheduled failure is only acted on after heartbeat_timeout
+    silent ticks; killing the Coordinator (rank 0) fails the group over
+    to rank 1, billed as one report per live member."""
+    events = (MembershipEvent(5, "fail", 0),)
+    spec = ScenarioSpec("none", ticks=14, preload_queries=200,
+                        query_burst=0, membership=events)
+    cfg = EngineConfig(num_machines=8, cap_units=1e9, lambda_max=1000,
+                       mem_queries=10**8, heartbeat_timeout=3)
+    src = spec.build(seed=0)
+    router = RouterSpec("swarm", beta=4).build(num_machines=8)
+    eng = StreamingEngine(router, src, cfg)
+    for _ in range(6):
+        eng.step()
+    # silenced but not yet detected: partitions still owned by 0
+    assert not eng.alive[0]
+    assert len(router.swarm.index.machine_partitions(0)) > 0
+    eng.step()   # tick 6: still within the timeout
+    assert len(router.swarm.index.machine_partitions(0)) > 0
+    eng.step()   # tick 7 = 5 + timeout − 1: detection fires
+    assert len(router.swarm.index.machine_partitions(0)) == 0
+    assert eng.coord.coordinator() == 1
+    eng.step()   # one settled round after the failover
+    # before detection the Coordinator's view is stale: all 8 machines
+    # still "report"; after it, 7 do — and the detection tick carries
+    # the rank-order failover resync (one report per live member) on
+    # top of its ordinary round traffic
+    assert eng.metrics.wire_bytes[6] == 8 * CostReport.WIRE_BYTES
+    assert eng.metrics.wire_bytes[8] == 7 * CostReport.WIRE_BYTES
+    assert eng.metrics.wire_bytes[7] == (7 + 7) * CostReport.WIRE_BYTES
+    # the emergency redistribution rode the detection tick's row
+    assert eng.metrics.transfers[7] >= 1
+
+
+def test_emergency_recovery_outcome_is_billed_to_receivers():
+    src = scenario("none", horizon=40, seed=2)
+    router = SwarmRouter(G, 8, beta=4)
+    eng = StreamingEngine(router, src,
+                          EngineConfig(num_machines=8, cap_units=1e9,
+                                       lambda_max=2000, mem_queries=10**8))
+    eng.preload_queries(src.sample_queries(800))
+    for _ in range(6):
+        eng.step()
+    before = eng.queue_units.copy()
+    out = router.ingest(MachineFailure(3))
+    assert isinstance(out, RoundOutcome)
+    assert len(out.moved_by_transfer) == len(out.transfers)
+    assert sum(out.moved_by_transfer) == out.moved_queries > 0
+    eng._install_moved_queries(out)
+    delta = eng.queue_units - before
+    for tr, n in zip(out.transfers, out.moved_by_transfer):
+        assert delta[tr.m_l] >= n * eng.cfg.migration_unit_cost - 1e-9
+    assert delta[3] == 0.0          # nothing billed to the dead machine
+
+
+def test_coordinator_group_suspend():
+    g = CoordinatorGroup(num_members=4)
+    assert g.coordinator() == 0
+    g.suspend(0)
+    assert g.coordinator() == 1
+    g.tick()
+    g.beat(0)                        # rejoining restores rank order
+    assert g.coordinator() == 0
+
+
+# ---------------------------------------------------------------------------
+# Receiver-side install billing (satellite bugfix) — pinned via a stub
+# ---------------------------------------------------------------------------
+
+class _StubRouter:
+    """Minimal Router: round-robin unit-cost tuples, a crafted round
+    outcome, and a scriptable memory_usage."""
+
+    def __init__(self, m, outcome=NO_ROUND, mem=None):
+        self.m = m
+        self.workload = WorkloadSpec()
+        self.outcome = outcome
+        self.mem = mem or (lambda t: np.zeros(m))
+        self.tick = 0
+
+    @property
+    def q_total(self):
+        return 0
+
+    def ingest(self, batch):
+        if isinstance(batch, TupleBatch):
+            n = len(batch)
+            owners = (np.arange(n) % self.m).astype(np.int32)
+            return RoutingDecision(owners, np.ones(n, np.float32),
+                                   np.full(n, -1, np.int32))
+        return None
+
+    def on_round(self, tick):
+        out, self.outcome = self.outcome, NO_ROUND
+        return out
+
+    def end_tick(self):
+        self.tick += 1
+
+    def memory_usage(self):
+        return MemoryUsage(queries=self.mem(self.tick),
+                           tuples=np.zeros(self.m))
+
+
+def test_round_install_cost_billed_per_transfer_receiver():
+    m = 6
+    transfers = (TransferRecord(0, 4, "subset", (1,), (2,)),
+                 TransferRecord(1, 5, "subset", (3,), (4,)))
+    outcome = RoundOutcome(moved_queries=30, transfers=transfers,
+                           moved_by_transfer=(10, 20), action="subset")
+    router = _StubRouter(m, outcome=outcome)
+    eng = StreamingEngine(router, scenario("none", horizon=8),
+                          EngineConfig(num_machines=m, cap_units=0.0,
+                                       lambda_max=0.0))
+    eng.step()
+    eng.step()                       # round fires at tick 1
+    # receivers m_L = 4 and 5 pay exactly their own install work — not
+    # the globally least-loaded machine (the old argmin bug billed 0)
+    assert eng.queue_units[4] == 10 * eng.cfg.migration_unit_cost
+    assert eng.queue_units[5] == 20 * eng.cfg.migration_unit_cost
+    assert eng.queue_units[0] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Memory-feasibility gate: per tick, not latched (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_infeasibility_unlatches_when_pressure_recedes():
+    m = 4
+    wall = 100
+    # over the wall on ticks 2–4 only
+    mem = lambda t: np.full(m, 500 if 2 <= t <= 4 else 10, np.float64)
+    router = _StubRouter(m, mem=mem)
+    eng = StreamingEngine(router, scenario("none", horizon=12),
+                          EngineConfig(num_machines=m, cap_units=1e9,
+                                       lambda_max=50, mem_queries=wall))
+    eng.run(10)
+    inj = np.asarray(eng.metrics.injected)
+    assert (inj[2:5] == 0).all()       # gated while over the wall
+    assert (inj[5:] > 0).all()         # resumes once pressure recedes
+    assert eng.metrics.was_infeasible  # the latched view survives (Fig 11)
+    assert eng.metrics.infeasible      # legacy alias
+
+
+# ---------------------------------------------------------------------------
+# Planner: emergency evacuation mode
+# ---------------------------------------------------------------------------
+
+def test_plan_round_evacuate_rehomes_everything_multi_pair():
+    router = SwarmRouter(G, 6, beta=4)
+    sw = router.swarm
+    rng = np.random.default_rng(0)
+    sw.ingest_points(rng.random((4000, 2)).astype(np.float32))
+    router.register_queries(
+        scenario("none").base.sample_queries(500))
+    sw._close_stats()
+    agg = sw._collect()
+    pids = set(map(int, sw.index.machine_partitions(2)))
+    assert pids
+    plan = planner.plan_round(sw.stats, agg, sw.index.parts,
+                              dead={2}, evacuate=2)
+    moved = [p for t in plan.transfers for p in t.plan.subset]
+    assert set(moved) == pids                      # everything re-homed
+    assert all(t.m_h == 2 and t.m_l != 2 for t in plan.transfers)
+    receivers = {t.m_l for t in plan.transfers}
+    assert len(receivers) == min(len(pids), 5)     # fans out, no doubling
+
+
+def test_straggler_sheds_load_via_fsm_rounds():
+    """A MachineSlow factor folds into C(m): the slowed machine ranks
+    as m_H and ordinary FSM-gated rounds shed its load until it keeps
+    up at its reduced speed — it never becomes the system bottleneck
+    (no backpressure collapse), which is exactly what the unfixed
+    latched path could not do."""
+    factor = 0.1
+    src = scenario("none", horizon=60, seed=1)
+    router = SwarmRouter(G, 8, beta=4)
+    eng = StreamingEngine(router, src,
+                          EngineConfig(num_machines=8, cap_units=6e4,
+                                       lambda_max=4000, mem_queries=10**8))
+    eng.preload_queries(src.sample_queries(1500))
+    for _ in range(10):
+        eng.step()
+    slow = int(np.argmax(router.swarm.machine_loads()))   # hottest machine
+    raw_before = router.swarm.machine_loads()[slow]
+    router.ingest(MachineSlow(slow, factor))
+    eng.cap_factor[slow] = factor
+    for _ in range(40):
+        eng.step()
+    assert router.swarm.cap_factor[slow] == factor
+    # its raw workload share dropped (effective C folded the factor in)
+    raw_after = router.swarm.machine_loads()[slow] * factor
+    assert raw_after < 0.05 * raw_before
+    util = np.asarray(eng.metrics.utilization)
+    # the straggler keeps up at its reduced speed: it is not pinned at
+    # its effective capacity and holds no backlog — it stopped being
+    # the system bottleneck (the unfixed path crashed it instead)
+    assert util[-5:, slow].mean() < factor
+    assert eng.queue_units[slow] < eng.cfg.cap_units * factor
+
+
+# ---------------------------------------------------------------------------
+# Snapshot probe schedule (satellite: fused between arrivals)
+# ---------------------------------------------------------------------------
+
+def test_next_arrival_respects_probe_schedule():
+    wl = WorkloadSpec(query_model="snapshot", snapshot_rate=50)
+    src = scenario("none", horizon=20, snapshot_every=4)
+    stream = EventStream(src, wl)
+    assert stream.next_arrival(0) == 0
+    assert stream.next_arrival(1) == 4     # fused windows fit between
+    assert stream.next_arrival(4) == 4
+    assert stream.next_arrival(5) == 8
+    silent = EventStream(src, WorkloadSpec(query_model="snapshot",
+                                           snapshot_rate=0))
+    assert silent.next_arrival(3) is None
+    # the emitted probes follow the same schedule, at rate × period
+    assert len(src.snapshot_arrivals(4, 50, 0.02)) == 200
+    assert len(src.snapshot_arrivals(5, 50, 0.02)) == 0

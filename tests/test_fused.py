@@ -214,13 +214,27 @@ def test_scatter_update_patches_device_state(plane):
     np.testing.assert_array_equal(np.asarray(st.grid), new_grid)
 
 
-def test_run_fused_rejects_store_workloads():
-    wl = WorkloadSpec(query_model="snapshot")
-    src = scenario("none", horizon=4)
-    r = SwarmRouter(G, M, workload=wl)
-    eng = StreamingEngine(r, src, CFG)
-    with pytest.raises(ValueError, match="tuple store"):
-        eng.run_fused(2)
+@pytest.mark.parametrize("persistence", ["ephemeral", "stored"])
+def test_snapshot_workloads_fuse_between_probe_arrivals(persistence):
+    """Store-keeping workloads run fused: probes arrive on the sources'
+    deterministic ``snapshot_every`` schedule (window boundaries), the
+    engine replays each window's deposits into the host-side store, and
+    the metrics match the per-tick reference exactly."""
+    import dataclasses
+
+    from repro.streaming import Experiment, RouterSpec, ScenarioSpec, run
+    wl = WorkloadSpec(query_model="snapshot", persistence=persistence,
+                      snapshot_rate=100)
+    spec = ScenarioSpec("none", ticks=16, preload_queries=0, query_burst=0,
+                        snapshot_every=4)
+    base = Experiment(router=RouterSpec("swarm", beta=4), scenario=spec,
+                      engine=CFG, workload=wl)
+    fused = base.with_(engine=dataclasses.replace(CFG, fused_window=8))
+    ref = run(base).metrics.asarrays()
+    out = run(fused).metrics.asarrays()
+    for name in ref:
+        np.testing.assert_array_equal(ref[name], out[name], err_msg=name)
+    assert np.asarray(ref["snapshots"]).max() > 0   # probes did arrive
 
 
 def test_run_fused_rejects_routers_without_seam():

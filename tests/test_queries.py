@@ -208,4 +208,4 @@ def test_stored_memory_wall():
                         mem_queries=100_000, mem_tuples=5_000)
     _, m = _run("static_uniform", wl, ticks=30, cfg=tiny, scen="none",
                 preload=0)
-    assert m.infeasible
+    assert m.was_infeasible
