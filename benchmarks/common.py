@@ -7,12 +7,16 @@ The active data plane is process-global (set by ``benchmarks.run
 """
 from __future__ import annotations
 
+import dataclasses
+
 from repro.queries import WorkloadSpec
 from repro.streaming import (EngineConfig, Experiment, RouterSpec,
-                             ScenarioSpec, run, workload_query_side)
+                             ScenarioSpec, TelemetryConfig, run,
+                             workload_query_side)
 
 __all__ = ["G", "M", "CFG", "SYSTEMS", "emit", "experiment", "run_system",
-           "set_data_plane", "data_plane", "workload_query_side"]
+           "set_data_plane", "data_plane", "set_trace_dir", "trace_dir",
+           "workload_query_side"]
 
 G, M = 64, 8
 CFG = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20_000,
@@ -20,6 +24,7 @@ CFG = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20_000,
 SYSTEMS = ("replicated", "static_uniform", "static_history", "swarm")
 
 _DATA_PLANE = "numpy"
+_TRACE_DIR: str | None = None
 
 
 def set_data_plane(name: str) -> None:
@@ -31,6 +36,18 @@ def data_plane() -> str:
     return _DATA_PLANE
 
 
+def set_trace_dir(directory: str | None) -> None:
+    """``benchmarks.run --trace=DIR``: every experiment cell built after
+    this call runs with telemetry on and exports its JSONL + Perfetto
+    trace under DIR (one pair of files per experiment label)."""
+    global _TRACE_DIR
+    _TRACE_DIR = directory
+
+
+def trace_dir() -> str | None:
+    return _TRACE_DIR
+
+
 def experiment(name: str, scen: str, *, ticks: int = 90, preload: int = 3000,
                query_burst: int = 500, cfg: EngineConfig = CFG, seed: int = 0,
                beta: int = 8,
@@ -38,6 +55,9 @@ def experiment(name: str, scen: str, *, ticks: int = 90, preload: int = 3000,
     """One benchmark cell as an Experiment spec.  ``history_seed=1``
     keeps the pre-redesign history sample (drawn from a fixed seed
     regardless of the run seed)."""
+    if _TRACE_DIR is not None and cfg.telemetry is None:
+        cfg = dataclasses.replace(
+            cfg, telemetry=TelemetryConfig(trace_dir=_TRACE_DIR))
     return Experiment(
         router=RouterSpec(name, grid_size=G, beta=beta, history_seed=1),
         scenario=ScenarioSpec(scen, ticks=ticks, preload_queries=preload,

@@ -17,12 +17,12 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import numpy as np
 
 from repro.streaming import (EngineConfig, ReplaySource, StreamingEngine,
                              SwarmRouter, TwitterLikeSource)
+from repro.telemetry import Stopwatch
 
 from .common import emit
 
@@ -51,10 +51,9 @@ def _events_per_s(plane: str, batch: int, pool: np.ndarray, fused: bool,
     runner = (lambda t: eng.run_fused(t, window=WINDOW)) if fused \
         else eng.run
     runner(warm)
-    t0 = time.perf_counter()
-    runner(ticks)
-    dt = time.perf_counter() - t0
-    return sum(eng.metrics.injected[-ticks:]) / dt
+    with Stopwatch() as sw:
+        runner(ticks)
+    return sum(eng.metrics.injected[-ticks:]) / sw.s
 
 
 def _assert_counts_equal(plane: str, batch: int, pool: np.ndarray,

@@ -1,8 +1,10 @@
-"""Render EXPERIMENTS.md tables from dry-run artifacts, and the
-mixed-workload query table from BENCH_queries.json.
+"""Render EXPERIMENTS.md tables from dry-run artifacts, the
+mixed-workload query table from BENCH_queries.json, and the planner
+decision timeline from flight-recorder traces.
 
 Usage: PYTHONPATH=src python -m benchmarks.make_tables [baseline_dir] [final_dir]
        PYTHONPATH=src python -m benchmarks.make_tables --queries [BENCH_queries.json]
+       PYTHONPATH=src python -m benchmarks.make_tables --decisions TRACE_DIR
 """
 import glob
 import json
@@ -92,7 +94,51 @@ def queries_table(path="BENCH_queries.json"):
         print(f"| {wl} | " + " | ".join(cells) + f" | {ratio:.2f}x |")
 
 
+def decisions_table(trace_dir):
+    """Per-run planner decision timeline from the flight-recorder JSONL
+    exports (``benchmarks.run --trace=DIR``): one row per round the
+    coordinator closed, with FSM state, R(S), and what moved."""
+    paths = sorted(glob.glob(os.path.join(trace_dir, "*.jsonl")))
+    if not paths:
+        print(f"no *.jsonl traces under {trace_dir}")
+        return
+    for path in paths:
+        rows = []
+        label = os.path.basename(path)[:-len(".jsonl")]
+        with open(path) as f:
+            for line in f:
+                row = json.loads(line)
+                if row.get("kind") == "decision":
+                    rows.append(row)
+        if not rows:
+            continue
+        print(f"\n### Decision timeline — {label}\n")
+        print("| tick | round | kind | stage | decision | R(S) | Δ | "
+              "pair | action | pids moved | wire B | moved queries |")
+        print("|---" * 12 + "|")
+        for row in rows:
+            rec = row["record"]
+            fsm = rec.get("fsm_after") or {}
+            trend = ("improved" if rec.get("improved")
+                     else "-" if rec.get("r_s_prev", -1) < 0 else "worse")
+            transfers = rec.get("transfers") or []
+            pair = ", ".join(f"m{t['m_h']}→m{t['m_l']}" for t in transfers) \
+                or "-"
+            action = ", ".join(sorted({t["action"] for t in transfers})) \
+                or "-"
+            pids = sum(len(t["moved_pids"]) for t in transfers)
+            mq = rec.get("moved_queries", -1)
+            print(f"| {row['tick']} | {rec['round_no']} | {rec['kind']} "
+                  f"| {fsm.get('stage', '?')} | {rec['decision']} "
+                  f"| {rec['r_s']:.3f} | {trend} | {pair} | {action} "
+                  f"| {pids or '-'} | {rec.get('wire_bytes', 0)} "
+                  f"| {mq if mq >= 0 else '-'} |")
+
+
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "--decisions":
+        decisions_table(sys.argv[2] if len(sys.argv) > 2 else "traces")
+        return
     if len(sys.argv) > 1 and sys.argv[1] == "--queries":
         queries_table(sys.argv[2] if len(sys.argv) > 2
                       else "BENCH_queries.json")

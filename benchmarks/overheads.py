@@ -1,24 +1,120 @@
 """Figs 18–19: per-operation overheads of SWARM's own machinery,
 measured as µs/op on this host (relative magnitudes mirror the paper:
-routing ≪ stats update ≪ reduction search ≪ plan install)."""
+routing ≪ stats update ≪ reduction search ≪ plan install), plus the
+disabled-telemetry overhead guard: engine ticks with the no-op tracer
+must stay within 2% of the uninstrumented hot path (DESIGN.md §9
+zero-overhead contract).  Timing comes from the shared
+``repro.telemetry.timers`` implementation.
+"""
 from __future__ import annotations
 
-import time
+import dataclasses
+import json
+import os
 
 import numpy as np
 
 from repro.core import Swarm, balancer, cost_model
 from repro.core import statistics as S
+from repro.telemetry import NOOP, TelemetryConfig, time_us
+from repro.telemetry.tracer import _NoopTracer
 
-from .common import emit
+from .common import emit, experiment
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_telemetry.json")
+
+# the guard's acceptance bound: disabled-telemetry instrumentation may
+# cost at most this fraction of a steady-state engine tick
+MAX_DISABLED_OVERHEAD = 0.02
 
 
 def _time(fn, n=20):
-    fn()  # warm
-    t0 = time.perf_counter()
-    for _ in range(n):
-        fn()
-    return (time.perf_counter() - t0) / n * 1e6
+    # kept as a local alias so the section code below reads like the
+    # figures it reproduces; the implementation is the shared timer
+    return time_us(fn, n=n)
+
+
+class _CountingNoop(_NoopTracer):
+    """A no-op tracer whose ``enabled`` reads are counted — measures
+    how many guard checks the disabled hot path performs per tick."""
+
+    def __init__(self):
+        self.checks = 0
+
+    @property
+    def enabled(self):  # type: ignore[override]
+        self.checks += 1
+        return False
+
+
+def telemetry_overhead_guard(ticks: int = 40) -> dict:
+    """The disabled-telemetry overhead guard.
+
+    The pre-telemetry seed path no longer exists in this tree, so the
+    guard measures the disabled path from both ends and asserts the 2%
+    bound on the *stronger* of the two:
+
+    * wall clock: µs/tick with the no-op tracer vs. µs/tick with a live
+      (buffering) tracer — reported for context, and
+    * instrumentation audit: the number of per-tick ``enabled`` guard
+      checks (counted by a counting no-op tracer) × the microbenched
+      cost of one no-op call, as a fraction of the disabled tick time.
+      This bounds what the telemetry seams can possibly cost the seed
+      path, independent of run-to-run wall noise.
+    """
+    from repro.streaming import StreamingEngine
+
+    def build_engine(telemetry):
+        # horizon well past warmup + timed ticks so the source never
+        # runs dry mid-measurement
+        exp = experiment("swarm", "uniform_normal", ticks=4 * ticks,
+                         preload=2000)
+        cfg = dataclasses.replace(exp.engine, telemetry=telemetry)
+        source = exp.scenario.build(seed=exp.seed, workload=exp.workload)
+        router = exp.router.build(num_machines=cfg.num_machines,
+                                  workload=exp.workload,
+                                  data_plane=exp.data_plane, seed=exp.seed)
+        eng = StreamingEngine(router, source, cfg)
+        preload = eng.stream.preload(exp.scenario.preload_queries)
+        if preload is not None:
+            router.ingest(preload)
+        return eng
+
+    off_us = time_us(build_engine(None).step, n=ticks, warmup=3)
+    on_us = time_us(build_engine(TelemetryConfig()).step, n=ticks, warmup=3)
+
+    # audit: count the disabled path's per-tick guard checks …
+    counting = _CountingNoop()
+    eng = build_engine(None)
+    eng.tracer = counting
+    audit_ticks = 10
+    for _ in range(audit_ticks):
+        eng.step()
+    checks_per_tick = counting.checks / audit_ticks
+    # … and microbench what one disabled-tracer touch costs (guard
+    # check + the no-op span call that follows the worst-case branch)
+    per_check_us = time_us(
+        lambda: NOOP.enabled or NOOP.span("tick", tick=0), n=100_000)
+    audited_us = checks_per_tick * per_check_us
+    audited_frac = audited_us / max(off_us, 1e-9)
+    wall_frac = max(on_us - off_us, 0.0) / max(off_us, 1e-9)
+
+    result = {
+        "ticks": ticks,
+        "us_per_tick_disabled": off_us,
+        "us_per_tick_enabled": on_us,
+        "enabled_overhead_frac": wall_frac,
+        "disabled_checks_per_tick": checks_per_tick,
+        "noop_call_us": per_check_us,
+        "disabled_overhead_us": audited_us,
+        "disabled_overhead_frac": audited_frac,
+        "bound": MAX_DISABLED_OVERHEAD,
+    }
+    assert audited_frac < MAX_DISABLED_OVERHEAD, (
+        f"disabled-telemetry overhead {audited_frac:.4f} exceeds "
+        f"{MAX_DISABLED_OVERHEAD:.0%} of a {off_us:.0f}µs tick")
+    return result
 
 
 def run() -> dict:
@@ -78,4 +174,17 @@ def run() -> dict:
     pid = int(live[0])
     emit("fig18_2/index_update", _time(
         lambda: sw2.index.apply_changes([pid]), 50), "grid repaint, G=256")
+
+    # telemetry §9: the disabled-tracer 2% guard (BENCH artifact)
+    guard = telemetry_overhead_guard()
+    out["telemetry_guard"] = guard
+    emit("telemetry/disabled_guard", guard["disabled_overhead_us"],
+         f"frac={guard['disabled_overhead_frac']:.5f} "
+         f"checks/tick={guard['disabled_checks_per_tick']:.0f} "
+         f"bound={guard['bound']:.0%}")
+    emit("telemetry/enabled_tick", guard["us_per_tick_enabled"],
+         f"disabled={guard['us_per_tick_disabled']:.0f}us "
+         f"enabled_frac={guard['enabled_overhead_frac']:.3f}")
+    with open(OUT_JSON, "w") as f:
+        json.dump(guard, f, indent=1)
     return out

@@ -16,7 +16,10 @@ Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
 
 ``--data-plane`` selects the routing data plane for the experiment
 sections; a comma list (e.g. ``--data-plane=numpy,jax``) repeats the
-chosen sections once per plane.
+chosen sections once per plane.  ``--trace=DIR`` turns the flight
+recorder on for every experiment cell and exports JSONL + Perfetto
+traces into DIR (validate/inspect with ``benchmarks.validate_trace``
+and ``benchmarks.make_tables --decisions``).
 """
 import argparse
 import inspect
@@ -32,6 +35,9 @@ def main() -> None:
                     help="short timelines (CI sanity run)")
     ap.add_argument("--data-plane", default="numpy",
                     help="routing data plane(s), comma list: numpy,jax")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="export telemetry traces (JSONL + Perfetto) for "
+                         "every experiment cell into DIR")
     args = ap.parse_args()
     from . import (capability, common, control_plane, dataplane, elasticity,
                    engine_throughput, hotspots, kernels, overheads,
@@ -56,6 +62,8 @@ def main() -> None:
     # run once regardless of how many planes were requested
     plane_sensitive = {"capability", "hotspots", "utilization", "queries"}
     chosen = (args.only.split(",") if args.only else list(sections))
+    if args.trace:
+        common.set_trace_dir(args.trace)
     planes = args.data_plane.split(",")
     print("name,us_per_call,derived")
     for i, plane in enumerate(planes):

@@ -1,0 +1,78 @@
+"""Validate exported flight-recorder traces (CI trace-smoke gate).
+
+Checks every ``*.trace.json`` under a directory against the checked-in
+Perfetto schema (``repro/telemetry/perfetto_schema.json``) and scans the
+paired ``*.jsonl`` files for planner DecisionRecords, requiring at least
+``--min-rebalances`` records that actually moved partitions.
+
+Usage: PYTHONPATH=src python -m benchmarks.validate_trace DIR \
+           [--min-rebalances N]
+
+Exit status is non-zero on any schema violation, unparseable file, or a
+rebalance count below the floor.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro.telemetry import validate_trace_file
+
+
+def validate_dir(directory: str, min_rebalances: int = 0) -> tuple[int, int]:
+    """Returns (num_errors, num_rebalance_records); prints per-file
+    summaries as it goes."""
+    traces = sorted(glob.glob(os.path.join(directory, "*.trace.json")))
+    jsonls = sorted(glob.glob(os.path.join(directory, "*.jsonl")))
+    if not traces:
+        print(f"validate_trace: no *.trace.json under {directory}")
+        return 1, 0
+    errors = 0
+    for path in traces:
+        errs = validate_trace_file(path)
+        n_events = len(json.load(open(path))["traceEvents"]) if not errs \
+            else 0
+        status = "ok" if not errs else "; ".join(errs[:5])
+        print(f"{os.path.basename(path)}: {n_events} events, {status}")
+        errors += len(errs)
+    rebalances = 0
+    decisions = 0
+    for path in jsonls:
+        with open(path) as f:
+            for line in f:
+                try:
+                    row = json.loads(line)
+                except json.JSONDecodeError:
+                    print(f"{os.path.basename(path)}: unparseable line")
+                    errors += 1
+                    continue
+                if row.get("kind") != "decision":
+                    continue
+                decisions += 1
+                if row["record"].get("transfers"):
+                    rebalances += 1
+    print(f"validate_trace: {len(traces)} traces, {decisions} decision "
+          f"records, {rebalances} with transfers, {errors} errors")
+    if rebalances < min_rebalances:
+        print(f"validate_trace: expected >= {min_rebalances} rebalance "
+              f"records, found {rebalances}")
+        errors += 1
+    return errors, rebalances
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("directory", help="trace dir (benchmarks.run --trace)")
+    ap.add_argument("--min-rebalances", type=int, default=0,
+                    help="fail unless this many DecisionRecords moved "
+                         "partitions")
+    args = ap.parse_args()
+    errors, _ = validate_dir(args.directory, args.min_rebalances)
+    sys.exit(1 if errors else 0)
+
+
+if __name__ == "__main__":
+    main()

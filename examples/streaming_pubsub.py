@@ -2,20 +2,25 @@
 
 Streams Twitter-like geotagged points against continuous range queries
 under a moving hotspot, comparing all four systems via the declarative
-experiment suite and printing a Units-of-Work timeline.  The
-tuple-vs-query matching itself runs through the data plane's
-``match_counts`` surface (the ``repro.kernels.spatial_match`` package:
-Pallas-compiled on TPU, its jnp reference elsewhere).
+experiment suite.  The Units-of-Work timeline is read back from the
+flight recorder (``Tracer.counter_series``) rather than by scraping
+``Metrics``, rebalance rounds are annotated from the planner's
+DecisionRecords, and ``--trace DIR`` exports each run's Perfetto file
+(open it at https://ui.perfetto.dev).  The tuple-vs-query matching
+itself runs through the data plane's ``match_counts`` surface (the
+``repro.kernels.spatial_match`` package: Pallas-compiled on TPU, its
+jnp reference elsewhere).
 
 Run:  PYTHONPATH=src python examples/streaming_pubsub.py
-      [--ticks 90] [--data-plane jax]
+      [--ticks 90] [--data-plane jax] [--trace traces/]
 """
 import argparse
 
 import numpy as np
 
 from repro.streaming import (EngineConfig, Experiment, RouterSpec,
-                             ScenarioSpec, get_plane, run_suite, scenario)
+                             ScenarioSpec, TelemetryConfig, get_plane,
+                             run_suite, scenario)
 
 G, M = 64, 8
 SYSTEMS = ("replicated", "static_uniform", "static_history", "swarm")
@@ -26,9 +31,12 @@ def main() -> None:
     ap.add_argument("--ticks", type=int, default=90)
     ap.add_argument("--data-plane", default="numpy",
                     choices=("numpy", "jax"))
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="export Perfetto + JSONL traces per system")
     args = ap.parse_args()
     cfg = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20_000,
-                       mem_queries=100_000)
+                       mem_queries=100_000,
+                       telemetry=TelemetryConfig(trace_dir=args.trace))
     scen = ScenarioSpec("uniform_normal", ticks=args.ticks,
                         preload_queries=3000, query_burst=500)
     exps = {name: Experiment(router=RouterSpec(name, grid_size=G,
@@ -38,15 +46,20 @@ def main() -> None:
             for name in SYSTEMS}
     suite = run_suite(exps.values())
 
-    results = {}
+    results, tracers = {}, {}
     for name, exp in exps.items():
-        m = suite[exp.label].metrics
-        results[name] = np.asarray(m.units_of_work)
+        tr = suite[exp.label].tracer
+        tracers[name] = tr
+        _, uow = tr.counter_series("units_of_work")
+        _, lat = tr.counter_series("latency")
+        results[name] = np.asarray(uow)
         print(f"{name:16s} mean UoW = {results[name].mean():.3e}  "
-              f"mean latency = {np.mean(m.latency):.3f} ticks")
+              f"mean latency = {np.mean(lat):.3f} ticks")
 
+    rebalanced = {t for t, rec in tracers["swarm"].decisions
+                  if rec.did_rebalance}
     print("\nUnits-of-Work timeline (each row = 3 ticks, # = SWARM, "
-          "+ = static-history):")
+          "+ = static-history, R = SWARM rebalance round):")
     s, h = results["swarm"], results["static_history"]
     top = max(s.max(), h.max())
     for t in range(0, args.ticks, 3):
@@ -57,7 +70,20 @@ def main() -> None:
             line[i] = "+"
         if bar_s < 61:
             line[bar_s] = "#"
-        print(f"t={t:3d} |{''.join(line)}|")
+        mark = "R" if rebalanced & {t, t + 1, t + 2} else " "
+        print(f"t={t:3d} {mark}|{''.join(line)}|")
+
+    moved = [rec for _, rec in tracers["swarm"].decisions
+             if rec.did_rebalance]
+    print(f"\nSWARM rebalanced {len(moved)} of "
+          f"{len(tracers['swarm'].decisions)} rounds; last decision: "
+          + (", ".join(
+              f"m{tt.m_h}->m{tt.m_l} ({tt.action}, "
+              f"{tt.moved_queries} queries)"
+              for tt in moved[-1].transfers) if moved else "none"))
+    if args.trace:
+        print(f"traces exported to {args.trace}/ "
+              f"(open *.trace.json at https://ui.perfetto.dev)")
 
     # one real pub/sub matching tick through the data plane's kernel surface
     plane = get_plane(args.data_plane)

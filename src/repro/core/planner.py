@@ -40,6 +40,7 @@ import numpy as np
 
 from . import balancer, geometry
 from . import statistics as S
+from ..telemetry.records import CandidateDecision
 from .balancer import ReductionPlan, SplitPlan, product_cost
 from .cost_model import effective_n
 
@@ -263,10 +264,15 @@ class TransferRecord:
 
 @dataclass(frozen=True)
 class RoundPlan:
-    """The round's full decision: machine costs + the transfer set."""
+    """The round's full decision: machine costs + the transfer set.
+
+    ``candidates`` is the flight-recorder trail — every (m_H, m_L)
+    pairing the scan considered, in order, with its outcome
+    (:class:`~repro.telemetry.records.CandidateDecision`)."""
 
     costs: np.ndarray
     transfers: tuple[Transfer, ...] = ()
+    candidates: tuple[CandidateDecision, ...] = ()
 
 
 def _splittable(r0, c0, r1, c1) -> bool:
@@ -290,15 +296,22 @@ def _plan_evacuation(agg: RoundAggregate, failed: int, dead,
                                    agg.area[sel], agg.r_s), np.float64)
     load = {m: float(agg.costs[m]) for m in survivors}
     assigned: dict[int, list[int]] = {}
+    moved: dict[int, float] = {}
     for k in np.argsort(-part_cost, kind="stable"):
         m_l = min(survivors, key=lambda m: load[m])
         assigned.setdefault(m_l, []).append(int(ids[k]))
+        moved[m_l] = moved.get(m_l, 0.0) + float(part_cost[k])
         # effective projected cost: a slow receiver fills up faster
         load[m_l] += float(part_cost[k]) / f[m_l]
     transfers = tuple(
         Transfer(failed, m_l, ReductionPlan("subset", tuple(pids)))
         for m_l, pids in assigned.items())
-    return RoundPlan(agg.costs, transfers)
+    cands = tuple(
+        CandidateDecision(failed, m_l, float(agg.costs[failed]),
+                          float(agg.costs[m_l]), "evacuate",
+                          pids=tuple(pids), moved_cost=moved[m_l])
+        for m_l, pids in assigned.items())
+    return RoundPlan(agg.costs, transfers, cands)
 
 
 def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
@@ -353,6 +366,7 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
     # scales) until the batched evaluation at the end fills them in
     slots: list[Transfer | None] = []
     pending_split: list[tuple] = []  # m_h, m_l, pid, base, 1/f_h, 1/f_l
+    cands: list[CandidateDecision] = []   # flight-recorder trail
     lo_idx = len(order) - 1
     for hi_idx, m_h in enumerate(order):
         if len(slots) >= max_pairs:
@@ -361,12 +375,17 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
             break
         m_l = order[lo_idx]
         if costs[m_h] <= costs[m_l]:
+            cands.append(CandidateDecision(
+                m_h, m_l, float(costs[m_h]), float(costs[m_l]),
+                "skip", reason="balanced"))
             break
         sel = agg.owner == m_h
         ids, cst = agg.live[sel], part_cost[sel]
-        if len(ids) == 0:
-            continue
         c_mh, c_ml = float(costs[m_h]), float(costs[m_l])
+        if len(ids) == 0:
+            cands.append(CandidateDecision(m_h, m_l, c_mh, c_ml, "skip",
+                                           reason="no_partitions"))
+            continue
         # heterogeneous capacity: raw cost x leaves m_H as x/f_H and
         # lands as x/f_L, so "total ≤ (C_H − C_L)/2" becomes
         # "x ≤ (C_H − C_L)/(1/f_H + 1/f_L)" — scale the part costs so
@@ -378,6 +397,10 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
         if subset and total > 0:
             slots.append(Transfer(m_h, m_l,
                                   ReductionPlan("subset", tuple(subset))))
+            cands.append(CandidateDecision(
+                m_h, m_l, c_mh, c_ml, "subset",
+                pids=tuple(int(p) for p in subset),
+                moved_cost=float(total)))
             lo_idx -= 1
             continue
         # no subset fits → split the largest-cost splittable partition
@@ -402,12 +425,18 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
                     (m_h, m_l, pid, (c_mh - cost_of[pid] * inv_fh) - c_ml,
                      inv_fh, inv_fl))
                 slots.append(None)
+            cands.append(CandidateDecision(
+                m_h, m_l, c_mh, c_ml, "split", pids=(pid,),
+                moved_cost=cost_of[pid]))
             placed = True
             break
         if placed:
             lo_idx -= 1
-        # else: every candidate of m_H failed — try the next m_H against
-        # the same m_L (paper behavior)
+        else:
+            # every candidate of m_H failed — try the next m_H against
+            # the same m_L (paper behavior)
+            cands.append(CandidateDecision(m_h, m_l, c_mh, c_ml, "skip",
+                                           reason="no_splittable"))
     if pending_split:
         pids = np.array([p for _, _, p, _, _, _ in pending_split], np.int64)
         boxes = (parts.r0[pids].astype(np.int64),
@@ -425,4 +454,4 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
                 m_h, m_l = next(filled)[:2]
                 slots[i] = Transfer(m_h, m_l,
                                     ReductionPlan("split", split=next(plans)))
-    return RoundPlan(agg.costs, tuple(slots))
+    return RoundPlan(agg.costs, tuple(slots), tuple(cands))

@@ -19,10 +19,13 @@ partitions.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 
 import numpy as np
 
+from ..telemetry import records as trec
+from ..telemetry.tracer import current as _tracer
 from . import balancer, cost_model, geometry, integrity, planner
 from . import statistics as S
 from .global_index import GlobalIndex
@@ -43,6 +46,10 @@ class RoundReport:
     moved_tuples: int = 0             # stored tuples re-homed by plan changes
     data_bytes: int = 0               # …billed as wire bytes (STORED mode)
     transfers: tuple[planner.TransferRecord, ...] = ()
+    # flight-recorder trail for this round (telemetry.records); always
+    # populated by run_round/recover_machine, None only for reports
+    # built outside the protocol (e.g. hand-rolled tests)
+    record: trec.DecisionRecord | None = None
 
     @property
     def did_rebalance(self) -> bool:
@@ -86,6 +93,9 @@ class Swarm:
         self.decision = balancer.DecisionState()
         self.round_no = 0
         self.reports: list[RoundReport] = []
+        # always-on flight recorder: the last rounds' DecisionRecords
+        # (rounds are rare relative to ingest, so recording is cheap)
+        self.decision_log: deque[trec.DecisionRecord] = deque(maxlen=512)
         self.dead: set[int] = set()   # crash-stop machines (ft layer)
         # standby slots: not yet members — they neither report nor
         # receive load until a MachineJoin activates them (elasticity)
@@ -198,32 +208,81 @@ class Swarm:
     # Coordinator round (Figs 8–10): close → collect → decide → apply
     # ------------------------------------------------------------------
     def run_round(self) -> RoundReport:
-        self.round_no += 1
-        self._close_stats()
-        agg = self._collect()
-        per_machine = (cost_model.CostReport.WIRE_BYTES_STORED
-                       if self.store is not None and self.data_weight > 0
-                       else cost_model.CostReport.WIRE_BYTES)
-        # only member executors report to the Coordinator: crash-stopped
-        # machines send nothing, standby slots are not members yet
-        # (Fig 20 accounting)
-        reporting = self.m - sum(1 for d in self.excluded
-                                 if 0 <= d < self.m)
-        wire = reporting * per_machine
-        self.decision, decision = balancer.step_decision(self.decision,
-                                                         agg.r_s, self.beta)
-        rep = RoundReport(self.round_no, decision, agg.r_s, wire_bytes=wire)
-        if decision == balancer.REBALANCE:
-            plan = planner.plan_round(
-                self.stats, agg, self.index.parts, dead=self.excluded,
-                max_pairs=self.max_pairs,
-                use_binary_search=self.use_binary_search,
-                cost_fn=self.cost_fn, plane=self.plane,
-                cap_factor=self.cap_factor)
-            self._apply_plan(plan, rep)
-        integrity.expire_chains(self.index.parts, self.round_no, self.window_rounds)
-        self._finish_round(rep)
+        tr = _tracer()
+        with tr.span("round_close", round=self.round_no + 1) as sp:
+            self.round_no += 1
+            self._close_stats()
+            agg = self._collect()
+            per_machine = (cost_model.CostReport.WIRE_BYTES_STORED
+                           if self.store is not None and self.data_weight > 0
+                           else cost_model.CostReport.WIRE_BYTES)
+            # only member executors report to the Coordinator:
+            # crash-stopped machines send nothing, standby slots are not
+            # members yet (Fig 20 accounting)
+            reporting = self.m - sum(1 for d in self.excluded
+                                     if 0 <= d < self.m)
+            wire = reporting * per_machine
+            fsm_before = trec.FsmState.capture(self.decision)
+            self.decision, decision = balancer.step_decision(
+                self.decision, agg.r_s, self.beta)
+            fsm_after = trec.FsmState.capture(self.decision)
+            if tr.enabled and (fsm_after.stage != fsm_before.stage
+                               or fsm_after.decision != fsm_before.decision):
+                tr.instant("fsm_transition", round=self.round_no,
+                           stage_from=fsm_before.stage,
+                           stage_to=fsm_after.stage,
+                           decision=decision, r_s=agg.r_s)
+            rep = RoundReport(self.round_no, decision, agg.r_s,
+                              wire_bytes=wire)
+            plan = None
+            if decision == balancer.REBALANCE:
+                with tr.span("plan_round", round=self.round_no):
+                    plan = planner.plan_round(
+                        self.stats, agg, self.index.parts,
+                        dead=self.excluded, max_pairs=self.max_pairs,
+                        use_binary_search=self.use_binary_search,
+                        cost_fn=self.cost_fn, plane=self.plane,
+                        cap_factor=self.cap_factor)
+                with tr.span("apply_plan", round=self.round_no,
+                             transfers=len(plan.transfers)):
+                    self._apply_plan(plan, rep)
+            integrity.expire_chains(self.index.parts, self.round_no,
+                                    self.window_rounds)
+            self._finish_round(rep)
+            self._record_decision("round", rep, plan, fsm_before, fsm_after)
+            if tr.enabled:
+                sp.set(decision=decision, r_s=agg.r_s,
+                       transfers=len(rep.transfers))
         return rep
+
+    def _record_decision(self, kind: str, rep: RoundReport, plan,
+                         fsm_before=None, fsm_after=None,
+                         evacuated: int = -1) -> trec.DecisionRecord:
+        """Assemble the flight-recorder record for one round/recovery
+        and attach it to both the report and the decision log."""
+        rec = trec.DecisionRecord(
+            round_no=rep.round_no, kind=kind, decision=int(rep.decision),
+            r_s=float(rep.r_s),
+            r_s_prev=fsm_before.pre_rs if fsm_before is not None else -1.0,
+            improved=bool(fsm_before is not None
+                          and rep.r_s > fsm_before.pre_rs),
+            fsm_before=fsm_before, fsm_after=fsm_after,
+            costs=(tuple(float(c) for c in rep.costs)
+                   if rep.costs is not None else ()),
+            candidates=tuple(plan.candidates) if plan is not None else (),
+            transfers=(trec.transfer_traces(plan.transfers, rep.transfers)
+                       if plan is not None else ()),
+            wire_bytes=int(rep.wire_bytes), data_bytes=int(rep.data_bytes),
+            moved_tuples=int(rep.moved_tuples), evacuated=evacuated)
+        rep.record = rec
+        self.decision_log.append(rec)
+        return rec
+
+    def replace_last_decision(self, rec: trec.DecisionRecord) -> None:
+        """Swap the newest log entry for an enriched copy (the router
+        folds in query-migration accounting after it reindexes)."""
+        if self.decision_log:
+            self.decision_log[-1] = rec
 
     def _close_stats(self) -> None:
         """Algorithm-2 round close, served by the data plane when one is
@@ -285,16 +344,25 @@ class Swarm:
         failure does not end the round); migration accounting bills on
         the returned report immediately."""
         m = int(machine)
-        self.mark_dead(m)
-        rep = RoundReport(self.round_no, balancer.REBALANCE, 0.0)
-        agg = self._collect()
-        rep.r_s = agg.r_s
-        plan = planner.plan_round(
-            self.stats, agg, self.index.parts, dead=self.excluded,
-            cost_fn=self.cost_fn, plane=self.plane, evacuate=m,
-            cap_factor=self.cap_factor)
-        self._apply_plan(plan, rep)
-        self._finish_round(rep)
+        tr = _tracer()
+        with tr.span("failover", machine_failed=m) as sp:
+            self.mark_dead(m)
+            rep = RoundReport(self.round_no, balancer.REBALANCE, 0.0)
+            agg = self._collect()
+            rep.r_s = agg.r_s
+            with tr.span("plan_round", round=self.round_no, evacuate=m):
+                plan = planner.plan_round(
+                    self.stats, agg, self.index.parts, dead=self.excluded,
+                    cost_fn=self.cost_fn, plane=self.plane, evacuate=m,
+                    cap_factor=self.cap_factor)
+            with tr.span("apply_plan", round=self.round_no,
+                         transfers=len(plan.transfers)):
+                self._apply_plan(plan, rep)
+            self._finish_round(rep)
+            self._record_decision("recovery", rep, plan, evacuated=m)
+            if tr.enabled:
+                sp.set(transfers=len(rep.transfers),
+                       moved_pids=len(rep.moved_pids))
         return rep
 
     # ------------------------------------------------------------------

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from ..telemetry.tracer import current as _tracer
+
 
 @dataclass
 class CoordinatorGroup:
@@ -33,6 +35,20 @@ class CoordinatorGroup:
 
     def tick(self) -> None:
         self.clock += 1
+        tr = _tracer()
+        if tr.enabled:
+            # the engine beats its live members *after* ticking, so a
+            # healthy machine sits at delta == 1 here; anything quieter
+            # is missing beats, and delta reaching the timeout is the
+            # suspicion edge (fires exactly once per silence)
+            to = self.heartbeat_timeout
+            for m, last in self.last_beat.items():
+                delta = self.clock - last
+                if 2 <= delta < to:
+                    tr.instant("heartbeat_miss", machine=m,
+                               missed=delta - 1)
+                elif delta == to:
+                    tr.instant("suspect", machine=m, silent_for=delta)
 
     def live_members(self) -> list[int]:
         return [m for m in range(self.num_members)

@@ -6,6 +6,7 @@ experiment suite (``experiments``).  Every router runs any (query model
 for convenience)."""
 from ..queries import (PersistenceModel, QueryModel, TupleStore,
                        WorkloadSpec, all_workloads)
+from ..telemetry import DecisionRecord, TelemetryConfig, Tracer
 from .api import (EventBatch, EventStream, MachineFailure, MachineJoin,
                   MachineSlow, MembershipChange, MemoryUsage, ProbeBatch,
                   QueryBatch, Router, RoundOutcome, RoutingDecision,
@@ -47,4 +48,6 @@ __all__ = [
     # workloads
     "QueryModel", "PersistenceModel", "WorkloadSpec", "TupleStore",
     "all_workloads",
+    # telemetry (repro.telemetry re-exports)
+    "TelemetryConfig", "Tracer", "DecisionRecord",
 ]

@@ -43,6 +43,7 @@ import numpy as np
 from ..core.planner import TransferRecord
 from ..core.protocol import RoundReport
 from ..queries import WorkloadSpec
+from ..telemetry.records import DecisionRecord
 
 if TYPE_CHECKING:  # pragma: no cover
     from .sources import ScenarioSource
@@ -167,11 +168,16 @@ class RoundOutcome:
     action: str = "none"
     transfers: tuple[TransferRecord, ...] = ()
     moved_by_transfer: tuple[int, ...] = ()   # per-transfer receiver counts
+    # flight-recorder record for this round (telemetry.records) — the
+    # full why of the decision; None for no-op rounds of non-adaptive
+    # routers (NO_ROUND)
+    decision_record: DecisionRecord | None = None
 
     @classmethod
     def from_report(cls, rep: RoundReport, *, moved_queries: int = 0,
                     bytes_per_query: int = 0,
-                    moved_by_transfer: tuple[int, ...] = ()
+                    moved_by_transfer: tuple[int, ...] = (),
+                    record: DecisionRecord | None = None
                     ) -> "RoundOutcome":
         """Consume a typed ``core.protocol.RoundReport``: fold the
         coordinator wire bytes, STORED data shipment, the transfer set
@@ -185,6 +191,7 @@ class RoundOutcome:
             action=rep.action,
             transfers=rep.transfers,
             moved_by_transfer=moved_by_transfer,
+            decision_record=record if record is not None else rep.record,
         )
 
 

@@ -30,6 +30,8 @@ wrappers returning ``(owners, costs)``; new code should ingest
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from ..core import Swarm, balancer, geometry
@@ -479,9 +481,27 @@ class SwarmRouter(_GridRouter):
                 int(self.qres[[pid for pid in t.new_pids
                                if p.owner[pid] == t.m_l]].sum())
                 for t in rep.transfers)
+        moved_queries = int(sum(moved_by))
+        rec = rep.record
+        if rec is not None:
+            # enrich the flight-recorder record with the router-side
+            # migration accounting (known only after reindexing), and
+            # keep the protocol's decision log pointing at the enriched
+            # copy
+            rec = dataclasses.replace(
+                rec, moved_queries=moved_queries,
+                migration_bytes=(rep.data_bytes
+                                 + moved_queries * BYTES_PER_QUERY),
+                moved_by_transfer=moved_by,
+                transfers=tuple(
+                    dataclasses.replace(t, moved_queries=int(mq))
+                    for t, mq in zip(rec.transfers, moved_by)))
+            rep.record = rec
+            self.swarm.replace_last_decision(rec)
         return RoundOutcome.from_report(
-            rep, moved_queries=int(sum(moved_by)),
-            bytes_per_query=BYTES_PER_QUERY, moved_by_transfer=moved_by)
+            rep, moved_queries=moved_queries,
+            bytes_per_query=BYTES_PER_QUERY, moved_by_transfer=moved_by,
+            record=rec)
 
     def on_round(self, tick: int) -> RoundOutcome:
         return self._outcome(self.swarm.run_round())
@@ -531,4 +551,5 @@ def force_rebalance_round(sw: Swarm):
         cost_fn=sw.cost_fn, plane=sw.plane)
     sw._apply_plan(plan, rep)
     sw._finish_round(rep)
+    sw._record_decision("forced", rep, plan)
     return rep

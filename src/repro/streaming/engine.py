@@ -52,6 +52,7 @@ import numpy as np
 from ..core import geometry
 from ..core.cost_model import CostReport
 from ..ft import CoordinatorGroup
+from ..telemetry import NOOP, TelemetryConfig, Tracer, activate
 from .api import (NO_ROUND, EventStream, MachineFailure, MachineJoin,
                   MachineSlow, MembershipChange, ProbeBatch, QueryBatch,
                   Router, RoundOutcome, RoutingDecision, TupleBatch)
@@ -76,6 +77,10 @@ class EngineConfig:
     heartbeat_timeout: int = 3      # missed beats before a machine is dead
     standby_machines: int = 0       # trailing slots that start outside
     #                                 the cluster (elastic join targets)
+    # None (default) keeps the zero-overhead no-op tracer; a
+    # TelemetryConfig turns on spans/counters and (via trace_dir) the
+    # JSONL + Perfetto exporters — see repro.telemetry / DESIGN.md §9
+    telemetry: TelemetryConfig | None = None
 
 
 @dataclass
@@ -129,6 +134,12 @@ class StreamingEngine:
         self.lam_bp = self.cfg.lambda_max
         self.metrics = Metrics()
         self.tick_no = 0
+        # the tracer: a live buffering Tracer only when the config asks
+        # for one, otherwise the shared no-op singleton (zero-overhead
+        # contract — hot paths guard on ``tracer.enabled``)
+        tcfg = self.cfg.telemetry
+        self.tracer = (Tracer(tcfg)
+                       if tcfg is not None and tcfg.enabled else NOOP)
         self._fused = None   # device-resident state cache (run_fused)
         # heartbeat table (ft layer): every member beats once per tick;
         # the group detects silent machines and elects by rank order
@@ -159,11 +170,12 @@ class StreamingEngine:
         ticks of silence before the router is told)."""
         # drain device-held collector deltas before the failure handler
         # re-homes partitions (their stats rows move with them)
-        self._fused_sync_collectors()
-        self._silence(m)
-        self.coord.suspend(m)
-        self._pending_detect.pop(m, None)
-        self._notify_failure(m)
+        with activate(self.tracer):
+            self._fused_sync_collectors()
+            self._silence(m)
+            self.coord.suspend(m)
+            self._pending_detect.pop(m, None)
+            self._notify_failure(m)
 
     def _silence(self, m: int) -> None:
         """The machine stops working and heartbeating; queued work on a
@@ -176,6 +188,9 @@ class StreamingEngine:
         """Tell the router about a (detected) crash-stop and absorb the
         emergency re-homing it answers with; fail over the Coordinator
         by rank order if the dead machine led the group."""
+        if self.tracer.enabled:
+            self.tracer.instant("failure_detected", tick=self.tick_no,
+                                machine=m)
         self._absorb_outcome(self.router.ingest(
             MachineFailure(m, self.tick_no)))
         # work routed at the stale plan between failure and detection
@@ -197,10 +212,19 @@ class StreamingEngine:
             self._coordinator = new
             live = len(self.coord.live_members())
             self._acc[0] += live * CostReport.WIRE_BYTES
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "coordinator_failover", tick=self.tick_no,
+                    new_leader=new,
+                    billed_bytes=live * CostReport.WIRE_BYTES)
 
     def apply_membership(self, ev: MembershipChange) -> None:
         """Apply one scheduled membership change at the current tick."""
         t = self.tick_no
+        if self.tracer.enabled:
+            kind = type(ev).__name__
+            self.tracer.instant(f"membership:{kind}", tick=t,
+                                machine=ev.machine)
         if isinstance(ev, MachineFailure):
             m = ev.machine
             if self.alive[m]:
@@ -232,15 +256,17 @@ class StreamingEngine:
         heartbeat round, and heartbeat-timeout failure detection."""
         for ev in self.stream.membership(t):
             self.apply_membership(ev)
-        self.coord.tick()
-        for m in np.nonzero(self.alive)[0]:
-            self.coord.beat(int(m))
-        if self._pending_detect:
-            live = set(self.coord.live_members())
-            for m in [m for m in self._pending_detect if m not in live]:
-                del self._pending_detect[m]
-                self._fused_sync_collectors()
-                self._notify_failure(m)
+        with self.tracer.span("heartbeat_scan", tick=t):
+            self.coord.tick()
+            for m in np.nonzero(self.alive)[0]:
+                self.coord.beat(int(m))
+            if self._pending_detect:
+                live = set(self.coord.live_members())
+                for m in [m for m in self._pending_detect
+                          if m not in live]:
+                    del self._pending_detect[m]
+                    self._fused_sync_collectors()
+                    self._notify_failure(m)
 
     def _absorb_outcome(self, out) -> None:
         """Fold a membership change's RoundOutcome (emergency re-homing)
@@ -248,6 +274,9 @@ class StreamingEngine:
         queries' install work on their receivers."""
         if not isinstance(out, RoundOutcome):
             return
+        if self.tracer.enabled and out.decision_record is not None:
+            self.tracer.record_decision(out.decision_record,
+                                        tick=self.tick_no)
         self._install_moved_queries(out)
         self._acc += (out.wire_bytes, out.migration_bytes,
                       out.moved_tuples, len(out.transfers))
@@ -292,15 +321,36 @@ class StreamingEngine:
         # routers/workloads outside the fused envelope (replicated,
         # tuple stores) silently take the per-tick loop so mixed
         # sweeps complete; calling run_fused directly still raises
-        if self.cfg.fused_window > 0 and self.fused_supported():
-            return self.run_fused(ticks, self.cfg.fused_window)
-        for _ in range(ticks):
-            self.step()
-        return self.metrics
+        with self._profiler_hook():
+            if self.cfg.fused_window > 0 and self.fused_supported():
+                return self.run_fused(ticks, self.cfg.fused_window)
+            for _ in range(ticks):
+                self.step()
+            return self.metrics
+
+    def _profiler_hook(self):
+        """Optional ``jax.profiler`` capture around a run (device-level
+        detail beneath our spans); a no-op nullcontext otherwise."""
+        import contextlib
+        tcfg = self.cfg.telemetry
+        if tcfg is None or not tcfg.jax_profiler_dir:
+            return contextlib.nullcontext()
+        try:
+            import jax
+            return jax.profiler.trace(tcfg.jax_profiler_dir)
+        except Exception:
+            return contextlib.nullcontext()
 
     def step(self) -> None:
+        with activate(self.tracer):
+            self._step_body()
+
+    def _step_body(self) -> None:
         cfg, mtr = self.cfg, self.metrics
+        tr = self.tracer
         t = self.tick_no
+        tick_span = tr.span("tick", tick=t) if tr.enabled else None
+        t0 = tr.now()
         # 0. scheduled membership changes, heartbeats, failure detection
         self._membership_tick(t)
         # 1. query/probe arrivals — whatever events the workload's
@@ -342,6 +392,13 @@ class StreamingEngine:
         outcome = NO_ROUND
         if t > 0 and t % cfg.round_every == 0:
             outcome = self.router.on_round(t)
+            if tr.enabled and outcome.decision_record is not None:
+                tr.record_decision(outcome.decision_record, tick=t)
+                if outcome.transfers:
+                    tr.instant("rebalance", tick=t,
+                               transfers=len(outcome.transfers),
+                               moved_queries=outcome.moved_queries,
+                               migration_bytes=outcome.migration_bytes)
             # installing moved queries costs work on their receivers
             self._install_moved_queries(outcome)
         # 8. persistence upkeep (ephemeral probe-window decay)
@@ -367,7 +424,38 @@ class StreamingEngine:
         mtr.injected.append(n)
         mtr.alive.append(self.alive.copy())
         mtr.cap_factor.append(self.cap_factor.copy())
+        if tick_span is not None:
+            self._tick_telemetry(t, t0, w, latency, n, q_total,
+                                 mtr.units_of_work[-1], processed_units)
+            tick_span.set(injected=n, throughput=float(w))
+            tick_span.__exit__(None, None, None)
         self.tick_no += 1
+
+    def _tick_telemetry(self, t: int, t0: int, w: float, latency: float,
+                        injected: int, q_total: int, uow: float,
+                        processed_units: np.ndarray) -> None:
+        """Per-tick spans/counters (enabled tracer only): one synthetic
+        span per live machine on its own track (the tick's wall bounds —
+        machine work is simulated in one vectorized host step) plus the
+        headline counter tracks."""
+        tr = self.tracer
+        if not tr.config.tick_spans:
+            return
+        t1 = tr.now()
+        cap = max(self.cfg.cap_units, 1e-9)
+        for m in np.nonzero(self.alive)[0]:
+            m = int(m)
+            tr.emit_span("tick", t0, t1, machine=m, tick=t,
+                         queue_units=float(self.queue_units[m]),
+                         utilization=float(processed_units[m] / cap))
+            tr.counter("queue_units", float(self.queue_units[m]),
+                       machine=m, tick=t, t0=t1)
+        tr.counter("units_of_work", uow, tick=t, t0=t1)
+        tr.counter("throughput", float(w), tick=t, t0=t1)
+        tr.counter("latency", latency, tick=t, t0=t1)
+        tr.counter("q_total", q_total, tick=t, t0=t1)
+        tr.counter("lam_bp", self.lam_bp, tick=t, t0=t1)
+        tr.counter("injected", injected, tick=t, t0=t1)
 
     # ------------------------------------------------------------------
     # Device-resident fast path (streaming.fused / planes.run_window)
@@ -409,6 +497,14 @@ class StreamingEngine:
             for _ in range(ticks):
                 self.step()
             return self.metrics
+        with activate(self.tracer):
+            return self._run_fused_windows(ticks, window)
+
+    def _run_fused_windows(self, ticks: int, window: int) -> Metrics:
+        cfg, mtr = self.cfg, self.metrics
+        router = self.router
+        tr = self.tracer
+        b = int(cfg.lambda_max)
         plane = router.plane
         store = getattr(router, "store", None)
         t_end = self.tick_no + ticks
@@ -442,6 +538,9 @@ class StreamingEngine:
                     continue
                 stop = min(stop, t + room)
             w = stop - t
+            win_span = (tr.span("fused_window", tick=t, ticks=w)
+                        if tr.enabled else None)
+            w0 = tr.now()
             # stage W ticks of candidate batches (tick-ordered, so the
             # source RNG stream matches the per-tick loop)
             xy = np.stack([self.stream.tuples(b, tt).xy
@@ -477,6 +576,11 @@ class StreamingEngine:
             # constant inside one: boundaries are cut at every
             # scheduled event and detection tick)
             self._advance_heartbeats(w)
+            if win_span is not None:
+                win_span.set(ok=bool(ok),
+                             throughput=float(outs.throughput.sum()))
+                win_span.__exit__(None, None, None)
+                self._fused_tick_telemetry(t, w, w0, tr.now(), outs)
             acc = self._take_acc()
             q_total = router.q_total
             for i in range(w):
@@ -504,6 +608,13 @@ class StreamingEngine:
                 # the same tick row)
                 self._fused_sync_collectors()
                 outcome = router.on_round(last)
+                if tr.enabled and outcome.decision_record is not None:
+                    tr.record_decision(outcome.decision_record, tick=last)
+                    if outcome.transfers:
+                        tr.instant("rebalance", tick=last,
+                                   transfers=len(outcome.transfers),
+                                   moved_queries=outcome.moved_queries,
+                                   migration_bytes=outcome.migration_bytes)
                 self._install_moved_queries(outcome)
                 mtr.wire_bytes[-1] += outcome.wire_bytes
                 mtr.migration_bytes[-1] += outcome.migration_bytes
@@ -513,6 +624,34 @@ class StreamingEngine:
         # or direct protocol use must see complete host statistics
         self._fused_sync_collectors()
         return mtr
+
+    def _fused_tick_telemetry(self, t: int, w: int, w0: int, w1: int,
+                              outs: FusedOutputs) -> None:
+        """Per-tick spans/counters for a fused window (enabled tracer
+        only).  Within-window per-tick wall times do not exist — the
+        whole window ran as one device dispatch — so tick timestamps
+        are linearly interpolated across the window's wall bounds
+        (wall-only synthesis: structural fields stay deterministic)."""
+        tr = self.tracer
+        if not tr.config.tick_spans:
+            return
+        dt = max(w1 - w0, 0) // max(w, 1)
+        live = [int(m) for m in np.nonzero(self.alive)[0]]
+        for i in range(w):
+            s0, s1 = w0 + i * dt, w0 + (i + 1) * dt
+            util = np.asarray(outs.utilization[i], np.float64)
+            for m in live:
+                tr.emit_span("tick", s0, s1, machine=m, tick=t + i,
+                             utilization=float(util[m]))
+            tr.counter("throughput", float(outs.throughput[i]),
+                       tick=t + i, t0=s1)
+            tr.counter("latency", float(outs.latency[i]),
+                       tick=t + i, t0=s1)
+            tr.counter("units_of_work",
+                       float(outs.throughput[i]) * self.router.q_total,
+                       tick=t + i, t0=s1)
+            tr.counter("injected", int(outs.injected[i]),
+                       tick=t + i, t0=s1)
 
     def _window_reference(self, xy_stack):
         """Replay a staged window through the per-tick path: inject the

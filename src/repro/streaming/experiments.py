@@ -28,12 +28,13 @@ fused sweeps cannot collide.
 from __future__ import annotations
 
 import itertools
-import time
+import re
 from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from ..queries import QueryModel, WorkloadSpec
+from ..telemetry import Stopwatch, Tracer
 from .api import Router
 from .baselines import (ReplicatedRouter, StaticHistoryRouter,
                         StaticUniformRouter, SwarmRouter)
@@ -192,6 +193,7 @@ class ExperimentResult:
     metrics: Metrics
     wall_s: float
     router: Router
+    tracer: Tracer | None = None   # the engine's tracer (telemetry runs)
 
     @property
     def label(self) -> str:
@@ -201,20 +203,30 @@ class ExperimentResult:
         return self.metrics.asarrays()
 
 
+def safe_label(label: str) -> str:
+    """A label flattened to a filesystem-safe trace-file stem."""
+    return re.sub(r"[^A-Za-z0-9._-]+", "_", label).strip("_")
+
+
 def run(exp: Experiment) -> ExperimentResult:
-    """Build everything from the spec and run the timeline."""
+    """Build everything from the spec and run the timeline.  When the
+    engine spec carries ``telemetry.trace_dir``, the run's JSONL +
+    Perfetto traces are exported there under the experiment label."""
     source = exp.scenario.build(seed=exp.seed, workload=exp.workload)
     router = exp.router.build(num_machines=exp.engine.num_machines,
                               workload=exp.workload,
                               data_plane=exp.data_plane, seed=exp.seed,
                               standby=exp.engine.standby_machines)
     eng = StreamingEngine(router, source, exp.engine)
-    t0 = time.perf_counter()
-    preload = eng.stream.preload(exp.scenario.preload_queries)
-    if preload is not None:
-        router.ingest(preload)
-    metrics = eng.run(exp.scenario.ticks)
-    return ExperimentResult(exp, metrics, time.perf_counter() - t0, router)
+    with Stopwatch() as sw:
+        preload = eng.stream.preload(exp.scenario.preload_queries)
+        if preload is not None:
+            router.ingest(preload)
+        metrics = eng.run(exp.scenario.ticks)
+    tracer = eng.tracer if eng.tracer.enabled else None
+    if tracer is not None and tracer.config.trace_dir:
+        tracer.export(tracer.config.trace_dir, safe_label(exp.label))
+    return ExperimentResult(exp, metrics, sw.s, router, tracer)
 
 
 def sweep(routers=(RouterSpec(),), scenarios=(ScenarioSpec(),),

@@ -57,6 +57,7 @@ import numpy as np
 
 from ..core import geometry, planner
 from ..core import statistics as S
+from ..telemetry.tracer import current as _tracer
 from .fused import (DeviceState, EngineCarry, FusedHostState, FusedOutputs,
                     FusedParams, host_process_tick)
 
@@ -327,17 +328,20 @@ class NumpyPlane(DataPlane):
         thr, lat = np.zeros(w), np.zeros(w)
         util = np.zeros((w, m))
         inj = np.zeros(w, np.int64)
-        for i in range(w):
-            n = int(min(fp.lambda_max, lam_bp))
-            state, (_, owners, costs) = self.step(
-                state, cp, xy_stack[i, :n], track_stats=fp.track_stats)
-            np.add.at(qu, owners, costs.astype(np.float64))
-            np.add.at(qt, owners, 1.0)
-            pu, thr[i], lat[i], lam_bp = host_process_tick(
-                qu, qt, lam_bp, fp.cap_units, fp.alive, fp.bp_high,
-                fp.bp_dec, fp.bp_inc, fp.lambda_max)
-            util[i] = pu / np.maximum(fp.cap_units, 1e-9)
-            inj[i] = n
+        with _tracer().span("fused_window_dispatch", ticks=w,
+                            plane="numpy"):
+            for i in range(w):
+                n = int(min(fp.lambda_max, lam_bp))
+                state, (_, owners, costs) = self.step(
+                    state, cp, xy_stack[i, :n],
+                    track_stats=fp.track_stats)
+                np.add.at(qu, owners, costs.astype(np.float64))
+                np.add.at(qt, owners, 1.0)
+                pu, thr[i], lat[i], lam_bp = host_process_tick(
+                    qu, qt, lam_bp, fp.cap_units, fp.alive, fp.bp_high,
+                    fp.bp_dec, fp.bp_inc, fp.lambda_max)
+                util[i] = pu / np.maximum(fp.cap_units, 1e-9)
+                inj[i] = n
         return state, EngineCarry(qu, qt, lam_bp), FusedOutputs(
             thr, lat, util, inj), True
 
@@ -735,15 +739,28 @@ class JaxPlane(DataPlane):
         key = (n_pad, state.owner.shape[0], state.grid.shape[0],
                track_stats, cp.tuple_driven)
         fn = self._step_cache.get(key)
-        if fn is None:
+        compiling = fn is None
+        if compiling:
             fn = self._jax.jit(
                 functools.partial(self._step_fn, track_stats=track_stats,
                                   tuple_driven=cp.tuple_driven),
                 donate_argnums=self._donate_step)
             self._step_cache[key] = fn
-        state, (pids, owners, costs) = fn(
-            state, self._padded(np.asarray(xy, np.float32), n_pad),
-            np.int32(n), self._cost_scalars(cp))
+        args = (state, self._padded(np.asarray(xy, np.float32), n_pad),
+                np.int32(n), self._cost_scalars(cp))
+        tr = _tracer()
+        if tr.enabled:
+            # compile (jit-cache miss) vs steady-state dispatch, fenced
+            # with block_until_ready so the span measures device work —
+            # the fence exists ONLY on the enabled path (zero-overhead
+            # contract)
+            name = ("fused_step_compile" if compiling
+                    else "fused_step_dispatch")
+            with tr.span(name, batch=n):
+                state, (pids, owners, costs) = fn(*args)
+                self._jax.block_until_ready((state, pids, owners, costs))
+        else:
+            state, (pids, owners, costs) = fn(*args)
         return state, (np.asarray(pids, np.int32)[:n],
                        np.asarray(owners, np.int32)[:n],
                        np.asarray(costs)[:n])
@@ -875,7 +892,8 @@ class JaxPlane(DataPlane):
         key = (wp, b, p_cap, p_used, g, len(fp.alive),
                fp.track_stats, cp.tuple_driven)
         fn = self._window_cache.get(key)
-        if fn is None:
+        compiling = fn is None
+        if compiling:
             # deliberately NOT donated: a declined window (ok=False)
             # rolls back to the pre-window state, which must stay alive
             # — the mutable part (collector banks) is small
@@ -891,9 +909,22 @@ class JaxPlane(DataPlane):
         carry_dev = (jnp.asarray(np.asarray(carry.queue_units, np.float32)),
                      jnp.asarray(np.asarray(carry.queue_tuples, np.float32)),
                      jnp.float32(carry.lam_bp))
-        state, (qu, qt, lam_bp), outs, ok = fn(
-            state, carry_dev, jnp.asarray(hists),
-            self._cost_scalars(cp), ep, self._dev(fp.alive, np.float32))
+        args = (state, carry_dev, jnp.asarray(hists),
+                self._cost_scalars(cp), ep, self._dev(fp.alive, np.float32))
+        tr = _tracer()
+        if tr.enabled:
+            # first call on a fresh cache key pays XLA compilation —
+            # split it from steady-state dispatch, and fence with
+            # block_until_ready so the span covers the device work (the
+            # fence exists ONLY on this path: a disabled tracer must
+            # not host-sync the fused window)
+            name = ("fused_window_compile" if compiling
+                    else "fused_window_dispatch")
+            with tr.span(name, ticks=w, batch=b, plane="jax"):
+                state, (qu, qt, lam_bp), outs, ok = fn(*args)
+                self._jax.block_until_ready((state, qu, qt, outs, ok))
+        else:
+            state, (qu, qt, lam_bp), outs, ok = fn(*args)
         return (state,
                 EngineCarry(np.asarray(qu, np.float64),
                             np.asarray(qt, np.float64), float(lam_bp)),
