@@ -5,6 +5,7 @@ decision timeline from flight-recorder traces.
 Usage: PYTHONPATH=src python -m benchmarks.make_tables [baseline_dir] [final_dir]
        PYTHONPATH=src python -m benchmarks.make_tables --queries [BENCH_queries.json]
        PYTHONPATH=src python -m benchmarks.make_tables --decisions TRACE_DIR
+       PYTHONPATH=src python -m benchmarks.make_tables --pubsub [BENCH_pubsub.json]
 """
 import glob
 import json
@@ -94,6 +95,31 @@ def queries_table(path="BENCH_queries.json"):
         print(f"| {wl} | " + " | ".join(cells) + f" | {ratio:.2f}x |")
 
 
+def pubsub_table(path="BENCH_pubsub.json"):
+    """Spatio-textual pub/sub matching throughput under hot-hashtag
+    migration (benchmarks/pubsub.py output)."""
+    rec = json.load(open(path))
+    print(f"### Spatio-textual pub/sub — hot-hashtag migration, "
+          f"{rec['subscriptions']:,} standing subscriptions, "
+          f"{rec['ticks']} ticks ({rec['hot_terms']} trending terms @ "
+          f"{rec['term_peak']:.0%} peak, T={rec['term_buckets']} "
+          f"term buckets)\n")
+    print("| plane | system | hot-window throughput (tuples/tick) | "
+          "hot-window latency (ticks) | deliveries | wall s |")
+    print("|---" * 6 + "|")
+    for row in rec["results"]:
+        for system in ("swarm", "static_history"):
+            r = row[system]
+            print(f"| {row['plane']} | {system} | {r['thr_hot']:.1f} "
+                  f"| {r['lat_hot']:.1f} | {r['deliveries']:.3e} "
+                  f"| {r['wall_s']:.2f} |")
+    print()
+    for row in rec["results"]:
+        print(f"* {row['plane']}: swarm vs static-history = "
+              f"{row['throughput_ratio']:.2f}x throughput, "
+              f"{row['latency_ratio']:.2f}x latency")
+
+
 def decisions_table(trace_dir):
     """Per-run planner decision timeline from the flight-recorder JSONL
     exports (``benchmarks.run --trace=DIR``): one row per round the
@@ -142,6 +168,10 @@ def main():
     if len(sys.argv) > 1 and sys.argv[1] == "--queries":
         queries_table(sys.argv[2] if len(sys.argv) > 2
                       else "BENCH_queries.json")
+        return
+    if len(sys.argv) > 1 and sys.argv[1] == "--pubsub":
+        pubsub_table(sys.argv[2] if len(sys.argv) > 2
+                     else "BENCH_pubsub.json")
         return
     base_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
     final_dir = sys.argv[2] if len(sys.argv) > 2 else "artifacts/dryrun_final"

@@ -1,0 +1,265 @@
+"""Spatio-textual pub/sub benchmark: sustained matching throughput under
+hot-hashtag migration at ≥1M standing subscriptions (BENCH_pubsub.json).
+
+SWARM and the history-balanced static grid ingest the same
+``hot_hashtags`` timeline — two trending terms absorb half the stream at
+peak while their spatial centers migrate across the grid on crossing
+diagonals, so textual skew and spatial skew decouple and a frozen plan
+has no single placement that stays balanced.  Every tuple is matched
+against the full standing-subscription set through the hashed
+term-histogram path (per-partition (pivot-bucket → subscription count)
+histograms; matching cost and delivery fan-out both bill through the
+cost model), so the hot cells are simultaneously the expensive cells.
+
+Before anything is timed the harness *asserts*, on both data planes:
+
+1. hashed-bucket matching is exact up to the hash-collision overcount
+   bound versus brute-force per-term matching (never a false negative,
+   equality when the bucket map is injective on the live vocabulary);
+2. NumPy↔JAX keyword cost/delivery parity on a routed batch;
+3. fused-window ≡ per-tick metric identity for the spatial-keyword
+   workload (bitwise on NumPy — including deliveries and delivery-billed
+   wire bytes — tolerance on JAX).
+
+The headline (non-smoke) acceptance: SWARM sustains ≥2× the
+static-history matching throughput over the hot window, per plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.queries import TermHasher, WorkloadSpec, bucket_masks
+from repro.streaming import (EngineConfig, Experiment, RouterSpec,
+                             ScenarioSpec, TelemetryConfig, run_suite)
+from repro.streaming import run as run_experiment
+from repro.streaming.planes import JaxPlane, NumpyPlane
+
+from .common import emit, trace_dir
+
+G, M = 64, 8
+SUBS_FULL, SUBS_SMOKE = 1_000_000, 20_000
+TICKS_FULL, TICKS_SMOKE = 60, 24
+HOT_TERMS, TERM_PEAK = 2, 0.5
+LAMBDA = 20_000
+CAP_PER_SUB = 0.75           # cap_units = CAP_PER_SUB × subscriptions
+OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_pubsub.json")
+
+ROUTERS = {"swarm": RouterSpec("swarm", grid_size=G, history_seed=1),
+           "static_history": RouterSpec("static_history", grid_size=G,
+                                        history_seed=1)}
+
+
+def _workload() -> WorkloadSpec:
+    return WorkloadSpec(query_model="spatial_keyword")
+
+
+def _spec(ticks: int, subs: int) -> ScenarioSpec:
+    return ScenarioSpec("hot_hashtags", ticks=ticks, preload_queries=subs,
+                        query_burst=0, hot_terms=HOT_TERMS,
+                        term_peak=TERM_PEAK)
+
+
+def _cfg(subs: int, fused: int = 0) -> EngineConfig:
+    # matching cost scales with standing subscriptions per partition, so
+    # machine capacity scales with |S| to keep the saturation regime
+    # comparable across scales
+    cfg = EngineConfig(num_machines=M, cap_units=CAP_PER_SUB * subs,
+                       lambda_max=LAMBDA, mem_queries=10**8,
+                       fused_window=fused)
+    if trace_dir() is not None:
+        cfg = dataclasses.replace(
+            cfg, telemetry=TelemetryConfig(trace_dir=trace_dir()))
+    return cfg
+
+
+def _hot_window(ticks: int) -> tuple[int, int]:
+    # mirrors ScenarioSpec.build: hot terms run [ticks//6, ticks//6+2·ticks//3)
+    return ticks // 6, ticks // 6 + 2 * ticks // 3
+
+
+# ---------------------------------------------------------------------------
+# pre-timing gates
+# ---------------------------------------------------------------------------
+
+def _assert_collision_bound() -> None:
+    """Hashed-bucket matching vs brute-force per-term matching on both
+    planes: a hashed match may only OVERcount (bucket collisions), never
+    drop a true match; with an injective bucket map it is exact."""
+    rng = np.random.default_rng(11)
+    wl = _workload()
+    # small vocabulary into fewer buckets ⇒ dense exact-match structure
+    # AND guaranteed bucket collisions (12 terms into 8 buckets): both
+    # sides of the bound are exercised
+    hasher = TermHasher(8)
+    n, q, vocab = 300, 400, 12
+    pts = rng.random((n, 2)).astype(np.float32)
+    lo = rng.random((q, 2)) * 0.8
+    rects = np.concatenate([lo, np.minimum(lo + 0.2, 1.0)],
+                           1).astype(np.float32)
+    terms = rng.integers(0, vocab, (n, wl.tuple_terms))
+    sub_terms = rng.integers(0, vocab, (q, wl.sub_terms))
+    inside = ((pts[:, None, 0] >= rects[None, :, 0])
+              & (pts[:, None, 0] <= rects[None, :, 2])
+              & (pts[:, None, 1] >= rects[None, :, 1])
+              & (pts[:, None, 1] <= rects[None, :, 3]))
+    exact = inside.copy()
+    tsets = [set(map(int, row)) for row in terms]
+    ssets = [set(map(int, row)) for row in sub_terms]
+    for j in range(q):
+        miss = np.fromiter((not ssets[j] <= tsets[i] for i in range(n)),
+                           bool, n)
+        exact[miss, j] = False
+    pm = bucket_masks(hasher.buckets(terms), hasher.n_buckets)
+    sm = hasher.sub_masks(sub_terms)
+    for plane in (NumpyPlane(), JaxPlane()):
+        per_pt, per_sub = plane.keyword_match_counts(pts, pm, rects, sm)
+        per_pt = np.asarray(per_pt, np.float64)
+        per_sub = np.asarray(per_sub, np.float64)
+        assert (per_pt >= exact.sum(1) - 1e-9).all(), \
+            f"{plane.name}: hashed matching dropped a true match"
+        assert (per_sub >= exact.sum(0) - 1e-9).all()
+        over = float(per_pt.sum() - exact.sum())
+        assert over >= -1e-6
+        emit(f"pubsub/collision_bound/{plane.name}", 0.0,
+             f"exact={int(exact.sum())} overcount={over:.0f}")
+    # injective restriction ⇒ equality (small vocabulary, many buckets)
+    big = TermHasher(4096)
+    vsmall = 40
+    t2 = rng.integers(0, vsmall, (n, wl.tuple_terms))
+    s2 = rng.integers(0, vsmall, (q, wl.sub_terms))
+    used = np.unique(np.concatenate([t2.reshape(-1), s2.reshape(-1)]))
+    assert len(np.unique(big.buckets(used))) == len(used), \
+        "fixture not collision-free; pick another seed"
+    exact2 = inside.copy()
+    t2sets = [set(map(int, row)) for row in t2]
+    for j, ss in enumerate([set(map(int, row)) for row in s2]):
+        miss = np.fromiter((not ss <= t2sets[i] for i in range(n)), bool, n)
+        exact2[miss, j] = False
+    pp, _ = NumpyPlane().keyword_match_counts(
+        pts, bucket_masks(big.buckets(t2), big.n_buckets), rects,
+        big.sub_masks(s2))
+    np.testing.assert_array_equal(np.asarray(pp, np.int64), exact2.sum(1))
+    emit("pubsub/collision_bound/injective", 0.0, "hashed==exact")
+
+
+def _assert_plane_parity(ticks: int, subs: int) -> None:
+    """The routed timeline agrees across data planes (counts exactly,
+    float metrics to tolerance)."""
+    base = Experiment(router=ROUTERS["swarm"], scenario=_spec(ticks, subs),
+                      workload=_workload(), engine=_cfg(subs),
+                      data_plane="numpy")
+    a = run_experiment(base).metrics.asarrays()
+    b = run_experiment(base.with_(data_plane="jax")).metrics.asarrays()
+    for name in ("injected", "transfers"):
+        np.testing.assert_array_equal(np.asarray(a[name], np.float64),
+                                      np.asarray(b[name], np.float64),
+                                      err_msg=name)
+    for name in ("units_of_work", "deliveries", "latency", "throughput"):
+        np.testing.assert_allclose(np.asarray(a[name], np.float64),
+                                   np.asarray(b[name], np.float64),
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+    emit("pubsub/parity/numpy_vs_jax", 0.0,
+         f"dels={float(np.sum(a['deliveries'])):.0f}")
+
+
+def _assert_fused_identity(ticks: int, subs: int) -> None:
+    """Fused ≡ per-tick for the spatial-keyword workload: bitwise on the
+    NumPy plane (including deliveries and delivery-billed wire bytes),
+    tolerance on JAX.  Asserted in the *uncongested* regime — fused
+    windows stage full-λ batches, so when backpressure throttles
+    injection the two modes draw different tuples from the source rng
+    (the fused path stays exact per-tick dynamics, but over a different
+    sample); the timed section below deliberately saturates."""
+    def cfg(fused: int) -> EngineConfig:
+        c = EngineConfig(num_machines=M, cap_units=2e4, lambda_max=500,
+                         mem_queries=10**8, fused_window=fused)
+        if trace_dir() is not None:
+            c = dataclasses.replace(
+                c, telemetry=TelemetryConfig(trace_dir=trace_dir()))
+        return c
+
+    for plane, exact in (("numpy", True), ("jax", False)):
+        base = Experiment(router=ROUTERS["swarm"],
+                          scenario=_spec(ticks, subs),
+                          workload=_workload(), engine=cfg(0),
+                          data_plane=plane)
+        fused = base.with_(engine=cfg(8))
+        ref = run_experiment(base).metrics.asarrays()
+        out = run_experiment(fused).metrics.asarrays()
+        for name in ref:
+            r = np.asarray(ref[name], np.float64)
+            f = np.asarray(out[name], np.float64)
+            if exact or name in ("injected", "q_total", "alive",
+                                 "cap_factor", "transfers", "wire_bytes"):
+                np.testing.assert_array_equal(r, f, err_msg=f"{plane}:{name}")
+            else:
+                np.testing.assert_allclose(r, f, rtol=1e-3, atol=1e-6,
+                                           err_msg=f"{plane}:{name}")
+        emit(f"pubsub/identity/{plane}", 0.0, "fused==pertick")
+
+
+# ---------------------------------------------------------------------------
+# timed section
+# ---------------------------------------------------------------------------
+
+def run(smoke: bool = False) -> dict:
+    subs = SUBS_SMOKE if smoke else SUBS_FULL
+    ticks = TICKS_SMOKE if smoke else TICKS_FULL
+    _assert_collision_bound()
+    _assert_plane_parity(TICKS_SMOKE, SUBS_SMOKE)
+    # 1500 standing subscriptions keeps λ=500 under capacity: the
+    # uncongested regime where fused windows are defined to be identical
+    _assert_fused_identity(TICKS_SMOKE, 1500)
+    lo, hi = _hot_window(ticks)
+    rows = []
+    for plane in ("numpy", "jax"):
+        exps = {name: Experiment(router=spec, scenario=_spec(ticks, subs),
+                                 workload=_workload(), engine=_cfg(subs),
+                                 data_plane=plane)
+                for name, spec in ROUTERS.items()}
+        results = run_suite(exps.values())
+        row: dict = {"plane": plane, "ticks": ticks, "subscriptions": subs}
+        for name, exp in exps.items():
+            res = results[exp.label]
+            a = res.asarrays()
+            thr = np.asarray(a["throughput"], np.float64)
+            lat = np.asarray(a["latency"], np.float64)
+            dels = np.asarray(a["deliveries"], np.float64)
+            row[name] = {
+                "thr_hot": float(thr[lo:hi].mean()),
+                "lat_hot": float(lat[lo:hi].mean()),
+                "deliveries": float(dels.sum()),
+                "wall_s": res.wall_s,
+            }
+            emit(f"pubsub/{plane}/{name}", res.wall_s / ticks * 1e6,
+                 f"thr_hot={row[name]['thr_hot']:.1f} "
+                 f"lat_hot={row[name]['lat_hot']:.2f} "
+                 f"dels={row[name]['deliveries']:.3e}")
+        row["throughput_ratio"] = (row["swarm"]["thr_hot"]
+                                   / max(row["static_history"]["thr_hot"],
+                                         1e-9))
+        row["latency_ratio"] = (row["static_history"]["lat_hot"]
+                                / max(row["swarm"]["lat_hot"], 1e-9))
+        emit(f"pubsub/{plane}/summary", 0.0,
+             f"swarm_vs_history_thr={row['throughput_ratio']:.2f}x "
+             f"lat={row['latency_ratio']:.2f}x")
+        rows.append(row)
+        if not smoke:
+            assert row["throughput_ratio"] >= 2.0, (
+                f"SWARM did not sustain 2x static-history matching "
+                f"throughput on {plane}: {row['throughput_ratio']:.2f}x")
+    result = {"grid": G, "machines": M, "subscriptions": subs,
+              "ticks": ticks, "hot_terms": HOT_TERMS,
+              "term_peak": TERM_PEAK, "lambda_max": LAMBDA,
+              "cap_units": CAP_PER_SUB * subs,
+              "term_buckets": _workload().term_buckets, "smoke": smoke,
+              "results": rows}
+    if not smoke:
+        with open(OUT_JSON, "w") as f:
+            json.dump(result, f, indent=1)
+    return result

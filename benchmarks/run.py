@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
   control  round-close + planner throughput   (benchmarks/control_plane.py)
   engine   per-tick vs fused engine ingest    (benchmarks/engine_throughput.py)
   elasticity kill/join/straggler recovery     (benchmarks/elasticity.py)
+  pubsub   spatial-keyword matching at 1M subs (benchmarks/pubsub.py)
 
 ``--data-plane`` selects the routing data plane for the experiment
 sections; a comma list (e.g. ``--data-plane=numpy,jax``) repeats the
@@ -30,7 +31,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: capability,hotspots,utilization,"
                          "overheads,stats_network,kernels,roofline,queries,"
-                         "dataplane,control,engine,elasticity")
+                         "dataplane,control,engine,elasticity,pubsub")
     ap.add_argument("--smoke", action="store_true",
                     help="short timelines (CI sanity run)")
     ap.add_argument("--data-plane", default="numpy",
@@ -40,7 +41,7 @@ def main() -> None:
                          "every experiment cell into DIR")
     args = ap.parse_args()
     from . import (capability, common, control_plane, dataplane, elasticity,
-                   engine_throughput, hotspots, kernels, overheads,
+                   engine_throughput, hotspots, kernels, overheads, pubsub,
                    queries_mixed, roofline, stats_network, utilization)
     sections = {
         "capability": capability.run,
@@ -57,6 +58,9 @@ def main() -> None:
         # runs both data planes internally (and asserts fused ≡ per-tick
         # across a scheduled failure before measuring anything)
         "elasticity": elasticity.run,
+        # runs both data planes internally; asserts hashed-matching
+        # collision bound, plane parity and fused ≡ per-tick first
+        "pubsub": pubsub.run,
     }
     # sections whose results depend on the routing data plane; the rest
     # run once regardless of how many planes were requested

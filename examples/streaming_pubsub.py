@@ -1,26 +1,34 @@
-"""End-to-end location-aware publish/subscribe (paper §2/§6).
+"""End-to-end spatio-textual publish/subscribe (paper §2/§6).
 
-Streams Twitter-like geotagged points against continuous range queries
-under a moving hotspot, comparing all four systems via the declarative
-experiment suite.  The Units-of-Work timeline is read back from the
-flight recorder (``Tracer.counter_series``) rather than by scraping
+Streams Twitter-like geotagged, term-annotated points against standing
+``spatial_keyword`` subscriptions (rectangle AND keyword conjunction)
+under hot-hashtag migration: two trending terms absorb half the stream
+at peak while their spatial centers cross the grid, so textual and
+spatial skew decouple and no frozen plan stays balanced.  All four
+systems run via the declarative experiment suite; every delivered
+notification is billed through the cost model (units of work + wire
+bytes).  The Units-of-Work timeline is read back from the flight
+recorder (``Tracer.counter_series``) rather than by scraping
 ``Metrics``, rebalance rounds are annotated from the planner's
 DecisionRecords, and ``--trace DIR`` exports each run's Perfetto file
-(open it at https://ui.perfetto.dev).  The tuple-vs-query matching
-itself runs through the data plane's ``match_counts`` surface (the
-``repro.kernels.spatial_match`` package: Pallas-compiled on TPU, its
-jnp reference elsewhere).
+(open it at https://ui.perfetto.dev).  The tuple-vs-subscription
+matching itself runs through the data plane's ``keyword_match_counts``
+surface (the ``repro.kernels.keyword_match`` package: Pallas-compiled
+on TPU, its jnp reference elsewhere), narrowed by the pivot-bucket
+inverted ``SubscriptionIndex``.
 
 Run:  PYTHONPATH=src python examples/streaming_pubsub.py
-      [--ticks 90] [--data-plane jax] [--trace traces/]
+      [--ticks 90] [--subscriptions 20000] [--terms 32]
+      [--data-plane jax] [--trace traces/]
 """
 import argparse
 
 import numpy as np
 
 from repro.streaming import (EngineConfig, Experiment, RouterSpec,
-                             ScenarioSpec, TelemetryConfig, get_plane,
-                             run_suite, scenario)
+                             ScenarioSpec, SubscriptionIndex, TelemetryConfig,
+                             TermHasher, WorkloadSpec, bucket_masks,
+                             get_plane, run_suite, scenario)
 
 G, M = 64, 8
 SYSTEMS = ("replicated", "static_uniform", "static_history", "swarm")
@@ -29,32 +37,44 @@ SYSTEMS = ("replicated", "static_uniform", "static_history", "swarm")
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ticks", type=int, default=90)
+    ap.add_argument("--subscriptions", type=int, default=20_000,
+                    help="standing spatial-keyword subscriptions")
+    ap.add_argument("--terms", type=int, default=32,
+                    help="hashed term buckets (T)")
     ap.add_argument("--data-plane", default="numpy",
                     choices=("numpy", "jax"))
     ap.add_argument("--trace", default=None, metavar="DIR",
                     help="export Perfetto + JSONL traces per system")
     args = ap.parse_args()
-    cfg = EngineConfig(num_machines=M, cap_units=1.5e4, lambda_max=20_000,
-                       mem_queries=100_000,
+    wl = WorkloadSpec(query_model="spatial_keyword",
+                      term_buckets=args.terms)
+    # machine capacity scales with |S|: matching cost is per standing
+    # subscription in the covered partitions
+    cfg = EngineConfig(num_machines=M,
+                       cap_units=0.75 * args.subscriptions,
+                       lambda_max=20_000, mem_queries=10**8,
                        telemetry=TelemetryConfig(trace_dir=args.trace))
-    scen = ScenarioSpec("uniform_normal", ticks=args.ticks,
-                        preload_queries=3000, query_burst=500)
+    scen = ScenarioSpec("hot_hashtags", ticks=args.ticks,
+                        preload_queries=args.subscriptions, query_burst=0,
+                        hot_terms=2, term_peak=0.5)
     exps = {name: Experiment(router=RouterSpec(name, grid_size=G,
                                                history_seed=1),
-                             scenario=scen, engine=cfg,
+                             scenario=scen, workload=wl, engine=cfg,
                              data_plane=args.data_plane)
             for name in SYSTEMS}
     suite = run_suite(exps.values())
 
     results, tracers = {}, {}
     for name, exp in exps.items():
-        tr = suite[exp.label].tracer
-        tracers[name] = tr
-        _, uow = tr.counter_series("units_of_work")
-        _, lat = tr.counter_series("latency")
+        res = suite[exp.label]
+        tracers[name] = res.tracer
+        _, uow = res.tracer.counter_series("units_of_work")
+        _, lat = res.tracer.counter_series("latency")
+        dels = float(np.sum(res.metrics.deliveries))
         results[name] = np.asarray(uow)
         print(f"{name:16s} mean UoW = {results[name].mean():.3e}  "
-              f"mean latency = {np.mean(lat):.3f} ticks")
+              f"mean latency = {np.mean(lat):.3f} ticks  "
+              f"deliveries = {dels:.3e}")
 
     rebalanced = {t for t, rec in tracers["swarm"].decisions
                   if rec.did_rebalance}
@@ -85,15 +105,29 @@ def main() -> None:
         print(f"traces exported to {args.trace}/ "
               f"(open *.trace.json at https://ui.perfetto.dev)")
 
-    # one real pub/sub matching tick through the data plane's kernel surface
+    # one real matching tick through the data plane's kernel surface:
+    # hashed term masks into keyword_match_counts, with the pivot-bucket
+    # inverted index narrowing the per-tuple candidate set
     plane = get_plane(args.data_plane)
-    src = scenario("none", horizon=1)
-    pts = src.sample_points(2000, 0)
-    rects = src.base.sample_queries(500)
-    pc, qc = plane.match_counts(pts, rects)
-    print(f"\nspatial match over one tick ({plane.name} plane): "
-          f"{int(pc.sum())} deliveries to "
-          f"{int((qc > 0).sum())} of 500 subscriptions")
+    hasher = TermHasher(args.terms)
+    src = scenario("hot_hashtags", horizon=30, query_burst=0)
+    tick = 15                                     # mid-migration
+    pts = src.sample_points(2000, tick)
+    terms = src.sample_terms(pts, tick, wl.tuple_terms)
+    rects = src.sample_queries(500)
+    sub_terms = src.sample_subscription_terms(500, tick, wl.sub_terms)
+    pm = bucket_masks(hasher.buckets(terms), hasher.n_buckets)
+    pc, qc = plane.keyword_match_counts(pts, pm, rects,
+                                        hasher.sub_masks(sub_terms))
+    idx = SubscriptionIndex.build(hasher, rects, sub_terms)
+    probes = hasher.tuple_buckets(terms)
+    cand = np.mean([len(idx.candidates(probes[i]))
+                    for i in range(len(pts))])
+    print(f"\nspatial-keyword match over one tick ({plane.name} plane): "
+          f"{int(np.sum(np.asarray(pc)))} deliveries to "
+          f"{int(np.sum(np.asarray(qc) > 0))} of 500 subscriptions; "
+          f"inverted index narrows candidates to "
+          f"{cand:.0f}/500 per tuple")
 
 
 if __name__ == "__main__":

@@ -95,3 +95,21 @@ def rank_machines(reports):
     costs, r_s = machine_costs(reports)
     order = np.argsort(-costs, kind="stable")
     return order, costs, r_s
+
+
+# ---------------------------------------------------------------------------
+# Pub/sub delivery fan-out
+# ---------------------------------------------------------------------------
+
+DELIVERY_WIRE_BYTES = 48   # one matched-notification envelope on the wire
+
+
+def delivery_wire_bytes(deliveries: float, bytes_per_delivery: int) -> int:
+    """Wire bytes billed for subscription fan-out: every expected
+    delivery ships one notification envelope to its subscriber.  The
+    spatial-keyword workload sets ``bytes_per_delivery``
+    (WorkloadSpec.delivery_bytes); 0 disables the billing so
+    pure-spatial runs are untouched."""
+    if bytes_per_delivery <= 0:
+        return 0
+    return int(round(float(deliveries) * bytes_per_delivery))

@@ -1,0 +1,4 @@
+from .ops import keyword_match
+from .ref import keyword_match_ref
+
+__all__ = ["keyword_match", "keyword_match_ref"]

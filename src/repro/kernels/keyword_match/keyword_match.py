@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: blocked spatial-keyword subscription matching.
+
+Extends the ``spatial_match`` containment sweep with a keyword
+conjunction over hashed term buckets.  The textual test is phrased as a
+matmul so it runs on the MXU alongside the VPU containment tile:
+
+    miss[n, q] = Σ_t (1 − pmask[t, n]) · smask[t, q]
+
+counts how many of subscription q's buckets tuple n is missing; the
+conjunction holds iff ``miss < 0.5`` (masks are exact 0/1 floats).  A
+zero subscription mask — no keywords — misses nothing and degrades to
+the pure-spatial test.
+
+Layout follows the sibling kernels: coordinate-major (coord, N) points
+and (4, Q) rects with the entity index on the 128-lane minor axis, and
+bucket-major (T, N)/(T, Q) masks with T padded to the float32 sublane
+multiple of 8.  Each reduction is its own pallas_call with the reduced
+axis innermost in the grid (the safe TPU accumulation pattern).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TN = 128   # points per tile (lanes)
+TQ = 128   # subscriptions per tile (lanes)
+TB = 8     # term-bucket padding multiple (f32 sublanes)
+
+
+def _hit_tile(pts_ref, pmask_ref, rct_ref, smask_ref):
+    px = pts_ref[0, :]                     # (TN,)
+    py = pts_ref[1, :]
+    x0 = rct_ref[0, :]                     # (TQ,)
+    y0 = rct_ref[1, :]
+    x1 = rct_ref[2, :]
+    y1 = rct_ref[3, :]
+    inside = ((px[:, None] >= x0[None, :]) & (px[:, None] <= x1[None, :]) &
+              (py[:, None] >= y0[None, :]) & (py[:, None] <= y1[None, :]))
+    # (TN, Tp) @ (Tp, TQ) on the MXU: buckets q needs that n lacks
+    miss = jnp.dot((1.0 - pmask_ref[...]).T, smask_ref[...],
+                   preferred_element_type=jnp.float32)
+    return (inside & (miss < 0.5)).astype(jnp.float32)
+
+
+def _point_count_kernel(pts_ref, pmask_ref, rct_ref, smask_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.sum(
+        _hit_tile(pts_ref, pmask_ref, rct_ref, smask_ref), axis=1)
+
+
+def _sub_count_kernel(pts_ref, pmask_ref, rct_ref, smask_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.sum(
+        _hit_tile(pts_ref, pmask_ref, rct_ref, smask_ref), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def keyword_match_kernel(points_t, pmask_t, rects_t, smask_t, *,
+                         interpret: bool = False):
+    """points_t (2, N), pmask_t (Tp, N), rects_t (4, Q), smask_t
+    (Tp, Q), all f32 with N % TN == Q % TQ == Tp % TB == 0.
+
+    Returns (per-point delivery counts (N,), per-subscription match
+    counts (Q,)) as float32 (exact integers up to 2^24)."""
+    _, n = points_t.shape
+    tp, q = smask_t.shape
+    pcnt = pl.pallas_call(
+        _point_count_kernel,
+        grid=(n // TN, q // TQ),           # inner axis = sub tiles (reduced)
+        in_specs=[
+            pl.BlockSpec((2, TN), lambda i, j: (0, i)),
+            pl.BlockSpec((tp, TN), lambda i, j: (0, i)),
+            pl.BlockSpec((4, TQ), lambda i, j: (0, j)),
+            pl.BlockSpec((tp, TQ), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TN,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(points_t, pmask_t, rects_t, smask_t)
+    qcnt = pl.pallas_call(
+        _sub_count_kernel,
+        grid=(q // TQ, n // TN),           # inner axis = point tiles (reduced)
+        in_specs=[
+            pl.BlockSpec((2, TN), lambda i, j: (0, j)),
+            pl.BlockSpec((tp, TN), lambda i, j: (0, j)),
+            pl.BlockSpec((4, TQ), lambda i, j: (0, i)),
+            pl.BlockSpec((tp, TQ), lambda i, j: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((TQ,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=interpret,
+    )(points_t, pmask_t, rects_t, smask_t)
+    return pcnt, qcnt

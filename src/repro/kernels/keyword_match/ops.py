@@ -1,0 +1,44 @@
+"""Public jit'd wrapper for the keyword-match kernel: padding, layout
+transform (entity-major → coordinate/bucket-major), output slicing."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .keyword_match import TB, TN, TQ, keyword_match_kernel
+
+
+def _pad_to(x, mult, axis, fill):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def keyword_match(points, pt_masks, rects, sub_masks, *,
+                  interpret: bool = False):
+    """points (N, 2) f32; pt_masks (N, T) 0/1; rects (Q, 4) f32;
+    sub_masks (Q, T) 0/1.
+
+    Returns (deliveries per point (N,) int32, matches per
+    subscription (Q,) int32).  Padded points sit at +inf and padded
+    subscriptions are empty boxes, so both fail the spatial test
+    regardless of their (zero = wildcard) mask padding; the bucket axis
+    is zero-padded, which adds no miss terms."""
+    n, q = points.shape[0], rects.shape[0]
+    pts_t = _pad_to(points.T.astype(jnp.float32), TN, 1, jnp.inf)
+    pm_t = _pad_to(_pad_to(pt_masks.T.astype(jnp.float32), TB, 0, 0.0),
+                   TN, 1, 0.0)
+    rect_pad = jnp.array([jnp.inf, jnp.inf, -jnp.inf, -jnp.inf], jnp.float32)
+    rt = rects.T.astype(jnp.float32)
+    pad = (-q) % TQ
+    if pad:
+        rt = jnp.concatenate([rt, jnp.tile(rect_pad[:, None], (1, pad))], 1)
+    sm_t = _pad_to(_pad_to(sub_masks.T.astype(jnp.float32), TB, 0, 0.0),
+                   TQ, 1, 0.0)
+    pcnt, qcnt = keyword_match_kernel(pts_t, pm_t, rt, sm_t,
+                                      interpret=interpret)
+    return pcnt[:n].astype(jnp.int32), qcnt[:q].astype(jnp.int32)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused spatial-keyword pub/sub join.
+
+A subscription matches a tuple iff the tuple lies inside the
+subscription rectangle AND the tuple's term-bucket set covers the
+subscription's term-bucket set (conjunction over hashed buckets).
+Masks are (·, T) float32 0/1 bucket indicators from
+``repro.queries.keywords``; a zero subscription mask (no keywords) is a
+wildcard and matches everything inside its rectangle.
+
+Hash-collision semantics: bucket masks are a *conservative* encoding
+of the term sets, so these counts upper-bound exact per-term matching —
+collisions can only overcount, never drop a true match.
+"""
+import jax.numpy as jnp
+
+from ..spatial_match.ref import match_matrix
+
+
+def keyword_hit_matrix(points, pt_masks, rects, sub_masks):
+    """(N, Q) bool fused spatial ∧ keyword-conjunction matrix."""
+    # miss[n, q] = number of q's buckets that n does not carry
+    miss = (1.0 - pt_masks) @ sub_masks.T
+    return match_matrix(points, rects) & (miss < 0.5)
+
+
+def keyword_match_ref(points, pt_masks, rects, sub_masks):
+    """points (N, 2), pt_masks (N, T), rects (Q, 4), sub_masks (Q, T).
+
+    Returns (deliveries per point (N,) int32, matches per
+    subscription (Q,) int32)."""
+    hit = keyword_hit_matrix(points, pt_masks, rects, sub_masks)
+    return hit.sum(1, dtype=jnp.int32), hit.sum(0, dtype=jnp.int32)

@@ -56,6 +56,10 @@ class QueryModel(str, enum.Enum):
     RANGE = "range"
     KNN = "knn"
     SNAPSHOT = "snapshot"
+    # spatio-textual pub/sub: spatial rect AND keyword conjunction
+    # (repro.queries.keywords hashes terms into T buckets; matching is
+    # repro.kernels.keyword_match)
+    SPATIAL_KEYWORD = "spatial_keyword"
 
 
 class PersistenceModel(str, enum.Enum):
@@ -71,6 +75,7 @@ class QueryModelSpec:
     continuous: bool      # queries stay resident (count toward Q(p)/qres)
     tuple_driven: bool    # incoming tuples probe the resident query set
     snapshot: bool        # arrivals are one-shot probes over stored tuples
+    keyword: bool = False  # subscriptions carry a keyword conjunction
 
     def match_factor(self, k: int) -> float:
         """Scaling of the per-candidate match term (1 for range; the
@@ -114,6 +119,9 @@ register_query_model(QueryModelSpec(QueryModel.KNN, continuous=True,
                                     tuple_driven=True, snapshot=False))
 register_query_model(QueryModelSpec(QueryModel.SNAPSHOT, continuous=False,
                                     tuple_driven=False, snapshot=True))
+register_query_model(QueryModelSpec(QueryModel.SPATIAL_KEYWORD,
+                                    continuous=True, tuple_driven=True,
+                                    snapshot=False, keyword=True))
 
 
 @dataclass(frozen=True)
@@ -131,6 +139,12 @@ class WorkloadSpec:
     scan_kappa: float = 0.05     # per-stored-tuple scan cost of a probe
     retention: float = 0.7       # ephemeral probe-window decay per tick
     data_weight: float = 0.05    # γ: resident tuples folded into N(p)
+    # --- spatial-keyword pub/sub knobs (ignored unless spec.keyword) ---
+    term_buckets: int = 32       # T: vocabulary hash buckets
+    tuple_terms: int = 3         # terms carried by each incoming tuple
+    sub_terms: int = 2           # conjunction terms per subscription
+    delivery_cost: float = 0.05  # work units per expected delivery
+    delivery_bytes: int = 48     # wire bytes per delivered notification
 
     def __post_init__(self):
         # accept plain strings ("knn", "stored"); identity comparisons
@@ -155,10 +169,22 @@ class WorkloadSpec:
 
     @property
     def label(self) -> str:
-        return f"{self.query_model.value}+{self.persistence.value}"
+        base = f"{self.query_model.value}+{self.persistence.value}"
+        if not self.spec.keyword:
+            return base
+        # fold the textual knobs so pub/sub sweeps can't collide
+        return (base + f"[T={self.term_buckets},kt={self.tuple_terms},"
+                f"ks={self.sub_terms}]")
 
 
-def all_workloads(**overrides) -> list[WorkloadSpec]:
-    """The full {range, knn, snapshot} × {ephemeral, stored} matrix."""
+def all_workloads(keyword: bool = False, **overrides) -> list[WorkloadSpec]:
+    """The {range, knn, snapshot} × {ephemeral, stored} matrix.
+
+    ``keyword=True`` additionally includes the ``spatial_keyword``
+    model (kept opt-in so the core 3×2 matrix — and every golden built
+    on it — is unchanged).
+    """
+    models = [qm for qm in QueryModel
+              if keyword or not get_query_model(qm).keyword]
     return [WorkloadSpec(query_model=qm, persistence=pm, **overrides)
-            for qm in QueryModel for pm in PersistenceModel]
+            for qm in models for pm in PersistenceModel]

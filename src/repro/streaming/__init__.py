@@ -4,8 +4,9 @@ four routing approaches of the paper's evaluation and the declarative
 experiment suite (``experiments``).  Every router runs any (query model
 × persistence model) workload from ``repro.queries`` (re-exported here
 for convenience)."""
-from ..queries import (PersistenceModel, QueryModel, TupleStore,
-                       WorkloadSpec, all_workloads)
+from ..queries import (PersistenceModel, QueryModel, SubscriptionIndex,
+                       TermHasher, TupleStore, WorkloadSpec, all_workloads,
+                       bucket_masks, bucket_onehot, tokenize)
 from ..telemetry import DecisionRecord, TelemetryConfig, Tracer
 from .api import (EventBatch, EventStream, MachineFailure, MachineJoin,
                   MachineSlow, MembershipChange, MemoryUsage, ProbeBatch,
@@ -21,7 +22,7 @@ from .fused import (DeviceState, EngineCarry, FusedHostState, FusedOutputs,
                     FusedParams)
 from .planes import DataPlane, JaxPlane, NumpyPlane, available_planes, \
     get_plane
-from .sources import (Hotspot, MembershipEvent, ReplaySource,
+from .sources import (Hotspot, HotTerm, MembershipEvent, ReplaySource,
                       ScenarioSource, TwitterLikeSource, scenario)
 
 __all__ = [
@@ -43,11 +44,14 @@ __all__ = [
     "Experiment", "ExperimentResult", "RouterSpec", "ScenarioSpec",
     "run", "run_suite", "sweep", "workload_query_side",
     # sources
-    "Hotspot", "MembershipEvent", "ReplaySource", "ScenarioSource",
-    "TwitterLikeSource", "scenario",
+    "Hotspot", "HotTerm", "MembershipEvent", "ReplaySource",
+    "ScenarioSource", "TwitterLikeSource", "scenario",
     # workloads
     "QueryModel", "PersistenceModel", "WorkloadSpec", "TupleStore",
     "all_workloads",
+    # spatial-keyword pub/sub
+    "TermHasher", "SubscriptionIndex", "bucket_masks", "bucket_onehot",
+    "tokenize",
     # telemetry (repro.telemetry re-exports)
     "TelemetryConfig", "Tracer", "DecisionRecord",
 ]

@@ -42,7 +42,7 @@ import numpy as np
 
 from ..core.planner import TransferRecord
 from ..core.protocol import RoundReport
-from ..queries import WorkloadSpec
+from ..queries import TermHasher, WorkloadSpec
 from ..telemetry.records import DecisionRecord
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -55,10 +55,19 @@ if TYPE_CHECKING:  # pragma: no cover
 
 @dataclass(frozen=True)
 class TupleBatch:
-    """A batch of stream tuples: ``xy`` is (N, 2) float32 in [0, 1)²."""
+    """A batch of stream tuples: ``xy`` is (N, 2) float32 in [0, 1)².
+
+    Spatial-keyword workloads additionally carry ``terms`` — (N, K)
+    int64 vocabulary term ids per tuple — and ``buckets``, the hashed
+    (N, K+1) int32 probe-bucket encoding (sorted, deduped, trailing
+    wildcard column; ``queries.keywords.TermHasher.tuple_buckets``).
+    Both stay ``None`` for pure-spatial workloads, keeping those
+    batches byte-identical to before the pub/sub subsystem."""
 
     xy: np.ndarray
     tick: int = 0
+    terms: np.ndarray | None = None
+    buckets: np.ndarray | None = None
 
     def __len__(self) -> int:
         return len(self.xy)
@@ -67,10 +76,13 @@ class TupleBatch:
 @dataclass(frozen=True)
 class QueryBatch:
     """Continuous queries to register: ``rects`` is (Q, 4) float32
-    (x0, y0, x1, y1)."""
+    (x0, y0, x1, y1).  Spatial-keyword subscriptions also carry
+    ``terms`` — (Q, Ks) int64 term ids each registered subscription
+    conjoins with its rectangle (``None`` for pure-spatial models)."""
 
     rects: np.ndarray
     tick: int = 0
+    terms: np.ndarray | None = None
 
     def __len__(self) -> int:
         return len(self.rects)
@@ -136,11 +148,15 @@ class RoutingDecision:
     ``pids``    — (N,) int32, global-index partition per item (−1 where
                   no partition applies, e.g. round-robin routing still
                   carries the shadow-grid pid used for accounting).
+    ``deliveries`` — (N,) float64 expected subscription deliveries per
+                  tuple (spatial-keyword workloads; the engine bills
+                  their fan-out as wire bytes).  ``None`` otherwise.
     """
 
     owners: np.ndarray
     costs: np.ndarray
     pids: np.ndarray
+    deliveries: np.ndarray | None = None
 
     def __len__(self) -> int:
         return len(self.owners)
@@ -246,6 +262,10 @@ class EventStream:
     def __init__(self, source: "ScenarioSource", workload: WorkloadSpec):
         self.source = source
         self.workload = workload
+        # term hashing lives at the event boundary: sources emit raw
+        # vocabulary ids, routers/planes only ever see hashed buckets
+        self.hasher = (TermHasher(workload.term_buckets)
+                       if workload.spec.keyword else None)
 
     def arrivals(self, tick: int) -> list[EventBatch]:
         """Query/probe arrivals for this tick (tuple injection is
@@ -260,11 +280,23 @@ class EventStream:
         else:
             rects = self.source.query_arrivals(tick)
             if len(rects):
-                events.append(QueryBatch(rects, tick))
+                events.append(QueryBatch(rects, tick,
+                                         self._sub_terms(len(rects), tick)))
         return events
 
+    def _sub_terms(self, n: int, tick: int) -> np.ndarray | None:
+        if self.hasher is None:
+            return None
+        return self.source.sample_subscription_terms(
+            n, tick, self.workload.sub_terms)
+
     def tuples(self, n: int, tick: int) -> TupleBatch:
-        return TupleBatch(self.source.sample_points(n, tick), tick)
+        xy = self.source.sample_points(n, tick)
+        if self.hasher is None:
+            return TupleBatch(xy, tick)
+        terms = self.source.sample_terms(xy, tick,
+                                         self.workload.tuple_terms)
+        return TupleBatch(xy, tick, terms, self.hasher.tuple_buckets(terms))
 
     def next_arrival(self, tick: int) -> int | None:
         """First tick ≥ ``tick`` that will emit query/probe arrivals,
@@ -316,4 +348,5 @@ class EventStream:
         """Initial resident queries — only continuous models have any."""
         if n <= 0 or not self.workload.spec.continuous:
             return None
-        return QueryBatch(self.source.sample_queries(n), 0)
+        return QueryBatch(self.source.sample_queries(n), 0,
+                          self._sub_terms(n, 0))

@@ -36,7 +36,8 @@ import numpy as np
 
 from ..core import Swarm, balancer, geometry
 from ..core.global_index import GlobalIndex
-from ..queries import QueryModel, TupleStore, WorkloadSpec
+from ..queries import QueryModel, TermHasher, TupleStore, WorkloadSpec
+from ..queries.keywords import bucket_onehot
 from .api import (NO_ROUND, EventBatch, MachineFailure, MachineJoin,
                   MachineSlow, MemoryUsage, ProbeBatch, QueryBatch,
                   RoundOutcome, RoutingDecision, TupleBatch)
@@ -78,6 +79,10 @@ class _Base:
         self.kappa_match = kappa_match
         self.c0 = c0
         self.workload = workload or WorkloadSpec()
+        # spatial-keyword workloads hash subscription/tuple terms into
+        # a fixed bucket space; None for pure-spatial models
+        self.hasher = (TermHasher(self.workload.term_buckets)
+                       if self.workload.spec.keyword else None)
         self.plane = get_plane(data_plane)
         if query_area is None:
             # match-cost coverage must price the resident rects the
@@ -104,9 +109,9 @@ class _Base:
         return the :class:`RoundOutcome` of the emergency re-homing it
         triggered (adaptive routers only)."""
         if isinstance(batch, TupleBatch):
-            return self._route_tuples(batch.xy)
+            return self._route_tuples(batch.xy, batch.buckets)
         if isinstance(batch, QueryBatch):
-            self.register_queries(batch.rects)
+            self.register_queries(batch.rects, batch.terms)
             return None
         if isinstance(batch, ProbeBatch):
             return self._route_probes(batch.rects)
@@ -128,7 +133,10 @@ class _Base:
             match_factor=wl.spec.match_factor(wl.k),
             tuple_driven=wl.spec.tuple_driven,
             store_cost=float(wl.store_cost) if self.store is not None else 0.0,
-            scan_kappa=float(wl.scan_kappa))
+            scan_kappa=float(wl.scan_kappa),
+            delivery_cost=(float(wl.delivery_cost)
+                           if self.hasher is not None else 0.0),
+            keyword=self.hasher is not None)
 
     def _make_store(self, capacity: int) -> TupleStore | None:
         wl = self.workload
@@ -143,10 +151,11 @@ class _Base:
                           self.kappa_probe, self.q_cache)
 
     # -- queries ----------------------------------------------------------
-    def register_queries(self, rects: np.ndarray) -> None:
+    def register_queries(self, rects: np.ndarray,
+                         terms: np.ndarray | None = None) -> None:
         if len(rects):
             self.query_rects = np.concatenate([self.query_rects, rects], 0)
-            self._index_queries(rects)
+            self._index_queries(rects, terms)
 
     @property
     def q_total(self) -> int:
@@ -197,8 +206,11 @@ class _Base:
         return d.owners, d.costs
 
     # subclass hooks
-    def _index_queries(self, rects: np.ndarray) -> None: ...
-    def _route_tuples(self, xy: np.ndarray) -> RoutingDecision: ...
+    def _index_queries(self, rects: np.ndarray,
+                       terms: np.ndarray | None = None) -> None: ...
+    def _route_tuples(self, xy: np.ndarray,
+                      buckets: np.ndarray | None = None
+                      ) -> RoutingDecision: ...
     def _route_probes(self, rects: np.ndarray) -> RoutingDecision: ...
     def resident_counts(self) -> np.ndarray: ...
 
@@ -226,8 +238,9 @@ class ReplicatedRouter(_Base):
                                            standby=self.standby)
         self.store = self._shadow.store
 
-    def _index_queries(self, rects: np.ndarray) -> None:
-        self._shadow.register_queries(rects)
+    def _index_queries(self, rects: np.ndarray,
+                       terms: np.ndarray | None = None) -> None:
+        self._shadow.register_queries(rects, terms)
 
     def on_machine_failed(self, m: int) -> None:
         if m in self._active and len(self._active) > 1:
@@ -241,20 +254,32 @@ class ReplicatedRouter(_Base):
             self._active.sort()
         return None
 
-    def _route_tuples(self, xy: np.ndarray) -> RoutingDecision:
+    def _route_tuples(self, xy: np.ndarray,
+                      buckets: np.ndarray | None = None) -> RoutingDecision:
         n = len(xy)
         active = np.asarray(self._active, np.int32)
         owners = active[(self._rr + np.arange(n)) % len(active)]
         self._rr = int((self._rr + n) % len(active))
         wl = self.workload
         probe = self._probe_cost(self.q_total) if wl.spec.tuple_driven else 0.0
-        pids, match = self._shadow._match_terms(xy)
-        costs = (self.c0 + probe + wl.spec.match_factor(wl.k) * match)
+        dels = None
+        if self.hasher is not None:
+            # replication spreads the probe work round-robin, but the
+            # match/fan-out density is still spatial-keyword: price it
+            # through the shadow grid's pivot histogram
+            pids, match, dels = self._shadow._keyword_match_terms(xy, buckets)
+            costs = (self.c0 + probe + wl.spec.match_factor(wl.k) * match
+                     + wl.delivery_cost * dels)
+        else:
+            pids, match = self._shadow._match_terms(xy)
+            costs = (self.c0 + probe + wl.spec.match_factor(wl.k) * match)
         if self.store is not None:
             self.store.deposit(pids, self._shadow.index.parts.capacity)
             costs = costs + wl.store_cost
         return RoutingDecision(owners, np.asarray(costs).astype(np.float32),
-                               np.asarray(pids, np.int32))
+                               np.asarray(pids, np.int32),
+                               None if dels is None
+                               else np.asarray(dels, np.float64))
 
     def _route_probes(self, rects: np.ndarray) -> RoutingDecision:
         return self._shadow._route_probes(rects)
@@ -269,10 +294,26 @@ class ReplicatedRouter(_Base):
 class _GridRouter(_Base):
     """Shared machinery for grid-index routers (static and SWARM)."""
 
+    # registration batches at least this large take the chunked bulk
+    # overlap path (per-rect loop below it: small batches hit the
+    # incremental GlobalIndex fast path the goldens were frozen on)
+    BULK_INDEX_MIN = 4096
+    _BULK_CHUNK = 131072
+
     def __init__(self, index: GlobalIndex, num_machines: int, **kw):
         super().__init__(num_machines, **kw)
         self.index = index
         self.qres = np.zeros(index.parts.capacity, np.int64)  # per-partition
+        # spatial-keyword state: per-subscription pivot bucket (the
+        # inverted-index posting each subscription is counted under)
+        # and the (capacity, T+1) per-partition pivot histogram the
+        # data planes contract against probe buckets; column T counts
+        # wildcard (keyword-free) subscriptions
+        self.sub_pivots = np.zeros(0, np.int64)
+        self.qres_kw = (
+            np.zeros((index.parts.capacity, self.hasher.wildcard + 1),
+                     np.float64)
+            if self.hasher is not None else None)
         self.store = self._make_store(index.parts.capacity)
 
     def _ensure_qres(self):
@@ -280,31 +321,74 @@ class _GridRouter(_Base):
         if len(self.qres) < cap:
             self.qres = np.concatenate(
                 [self.qres, np.zeros(cap - len(self.qres), np.int64)])
+        if self.qres_kw is not None and len(self.qres_kw) < cap:
+            self.qres_kw = np.concatenate(
+                [self.qres_kw,
+                 np.zeros((cap - len(self.qres_kw),
+                           self.qres_kw.shape[1]), np.float64)])
 
-    def _index_queries(self, rects: np.ndarray) -> None:
+    def _index_queries(self, rects: np.ndarray,
+                       terms: np.ndarray | None = None) -> None:
         self._ensure_qres()
-        r0, c0, r1, c1 = geometry.rects_to_cells(rects, self.index.grid_size)
+        piv = None
+        if self.hasher is not None:
+            piv = self.hasher.pivots(terms, len(rects))
+            self.sub_pivots = np.concatenate([self.sub_pivots, piv])
+        g = self.index.grid_size
+        r0, c0, r1, c1 = geometry.rects_to_cells(rects, g)
+        if len(rects) >= self.BULK_INDEX_MIN:
+            # bulk registration (pub/sub preloads millions of standing
+            # subscriptions): chunked queries × live-partitions overlap
+            # matrix instead of a per-rect Python loop
+            p = self.index.parts
+            live = p.live_ids()
+            lr0, lc0 = p.r0[live][None, :], p.c0[live][None, :]
+            lr1, lc1 = p.r1[live][None, :], p.c1[live][None, :]
+            for lo in range(0, len(rects), self._BULK_CHUNK):
+                hi = min(lo + self._BULK_CHUNK, len(rects))
+                hit = geometry.boxes_overlap(
+                    r0[lo:hi, None], c0[lo:hi, None],
+                    r1[lo:hi, None], c1[lo:hi, None], lr0, lc0, lr1, lc1)
+                self.qres[live] += hit.sum(0)
+                if piv is not None:
+                    qi, li = np.nonzero(hit)
+                    np.add.at(self.qres_kw,
+                              (live[li], piv[lo:hi][qi]), 1.0)
+            return
         for i in range(len(rects)):
             pids = self.index.query_overlap_vectorized(
                 int(r0[i]), int(c0[i]), int(r1[i]), int(c1[i]))
             self.qres[pids] += 1
+            if piv is not None:
+                self.qres_kw[pids, piv[i]] += 1.0
 
     def reindex_all_queries(self) -> None:
         """Rebuild per-partition resident counts after a plan change —
-        vectorized partitions × queries overlap test."""
+        vectorized partitions × queries overlap test, chunked so
+        million-subscription pub/sub sets never materialize the full
+        Q × P hit matrix."""
         self._ensure_qres()
         self.qres[:] = 0
+        if self.qres_kw is not None:
+            self.qres_kw[:] = 0.0
         if not len(self.query_rects):
             return
         g = self.index.grid_size
         p = self.index.parts
         live = p.live_ids()
         r0, c0, r1, c1 = geometry.rects_to_cells(self.query_rects, g)
-        hit = geometry.boxes_overlap(
-            r0[:, None], c0[:, None], r1[:, None], c1[:, None],
-            p.r0[live][None, :], p.c0[live][None, :],
-            p.r1[live][None, :], p.c1[live][None, :])
-        self.qres[live] = hit.sum(0)
+        lr0, lc0 = p.r0[live][None, :], p.c0[live][None, :]
+        lr1, lc1 = p.r1[live][None, :], p.c1[live][None, :]
+        for lo in range(0, len(self.query_rects), self._BULK_CHUNK):
+            hi = min(lo + self._BULK_CHUNK, len(self.query_rects))
+            hit = geometry.boxes_overlap(
+                r0[lo:hi, None], c0[lo:hi, None],
+                r1[lo:hi, None], c1[lo:hi, None], lr0, lc0, lr1, lc1)
+            self.qres[live] += hit.sum(0)
+            if self.qres_kw is not None:
+                qi, li = np.nonzero(hit)
+                np.add.at(self.qres_kw,
+                          (live[li], self.sub_pivots[lo:hi][qi]), 1.0)
 
     def _area_frac(self) -> np.ndarray:
         """Partition area as a fraction of the space, per allocated pid
@@ -323,8 +407,39 @@ class _GridRouter(_Base):
                                       float(self.query_area),
                                       float(self.kappa_match))
 
-    def _route_tuples(self, xy: np.ndarray) -> RoutingDecision:
+    def _probe_onehot(self, n: int,
+                      buckets: np.ndarray | None) -> np.ndarray:
+        """(N, T+1) probe indicator for a tuple batch; a batch without
+        term annotations probes only the wildcard column (it can still
+        match keyword-free subscriptions)."""
+        t = self.hasher.wildcard
+        if buckets is None:
+            buckets = np.full((n, 1), t, np.int32)
+        return bucket_onehot(buckets, t)
+
+    def _keyword_match_terms(self, xy: np.ndarray,
+                             buckets: np.ndarray | None):
+        """(pids, match-term work, expected deliveries) per point —
+        the keyword twin of :meth:`_match_terms`."""
         self._ensure_qres()
+        return self.plane.keyword_match_terms(
+            xy, self._probe_onehot(len(xy), buckets),
+            self.index.cell_to_partition, self.qres_kw, self._area_frac(),
+            float(self.query_area), float(self.kappa_match))
+
+    def _route_tuples(self, xy: np.ndarray,
+                      buckets: np.ndarray | None = None) -> RoutingDecision:
+        self._ensure_qres()
+        if self.hasher is not None:
+            pids, owners, costs, dels = self.plane.keyword_costs(
+                xy, self._probe_onehot(len(xy), buckets),
+                self.index.cell_to_partition, self.index.parts.owner,
+                self.qres_kw, self.resident_counts(), self._area_frac(),
+                self._cost_params())
+            if self.store is not None:
+                self.store.deposit(pids, self.index.parts.capacity)
+            return RoutingDecision(owners, costs, np.asarray(pids, np.int32),
+                                   np.asarray(dels, np.float64))
         pids, owners, costs = self.plane.tuple_costs(
             xy, self.index.cell_to_partition, self.index.parts.owner,
             self.qres, self.resident_counts(), self._area_frac(),
@@ -381,7 +496,8 @@ class _GridRouter(_Base):
             area_frac=af,
             q_machine=self.resident_counts(),
             track_stats=False,
-            n_alloc=int(p.n_alloc))
+            n_alloc=int(p.n_alloc),
+            qres_kw=None if self.qres_kw is None else self.qres_kw.copy())
 
     def fused_absorb(self, cn_rows: np.ndarray, cn_cols: np.ndarray) -> None:
         """Collector deltas drained from the device; grid routers keep
@@ -443,8 +559,9 @@ class SwarmRouter(_GridRouter):
                 data_weight=wl.data_weight if wl.stored else 0.0,
                 bill_migration=wl.stored)
 
-    def _index_queries(self, rects: np.ndarray) -> None:
-        super()._index_queries(rects)
+    def _index_queries(self, rects: np.ndarray,
+                       terms: np.ndarray | None = None) -> None:
+        super()._index_queries(rects, terms)
         self.swarm.ingest_queries(rects)
 
     def fused_host_state(self) -> FusedHostState:
@@ -456,9 +573,10 @@ class SwarmRouter(_GridRouter):
     def fused_absorb(self, cn_rows: np.ndarray, cn_cols: np.ndarray) -> None:
         self.swarm.absorb_collectors(cn_rows, cn_cols)
 
-    def _route_tuples(self, xy: np.ndarray) -> RoutingDecision:
+    def _route_tuples(self, xy: np.ndarray,
+                      buckets: np.ndarray | None = None) -> RoutingDecision:
         self.swarm.ingest_points(xy)  # collectors (N'); then normal routing
-        return super()._route_tuples(xy)
+        return super()._route_tuples(xy, buckets)
 
     def _route_probes(self, rects: np.ndarray, pids=None,
                       owners=None) -> RoutingDecision:

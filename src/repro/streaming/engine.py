@@ -50,7 +50,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..core import geometry
-from ..core.cost_model import CostReport
+from ..core.cost_model import CostReport, delivery_wire_bytes
 from ..ft import CoordinatorGroup
 from ..telemetry import NOOP, TelemetryConfig, Tracer, activate
 from .api import (NO_ROUND, EventStream, MachineFailure, MachineJoin,
@@ -95,6 +95,7 @@ class Metrics:
     moved_tuples: list = field(default_factory=list)
     transfers: list = field(default_factory=list)     # rebalance pairs/tick
     snapshots: list = field(default_factory=list)     # one-shot probes/tick
+    deliveries: list = field(default_factory=list)    # pub/sub fan-out/tick
     resident_tuples: list = field(default_factory=list)  # max per machine
     injected: list = field(default_factory=list)
     alive: list = field(default_factory=list)         # (M,) membership mask
@@ -376,8 +377,12 @@ class StreamingEngine:
         # 3. inject tuples (backpressure-throttled)
         lam = 0.0 if infeasible else min(cfg.lambda_max, self.lam_bp)
         n = int(lam)
+        dsum = 0.0
         if n > 0:
-            self._enqueue(self.router.ingest(self.stream.tuples(n, t)))
+            decision = self.router.ingest(self.stream.tuples(n, t))
+            self._enqueue(decision)
+            if decision.deliveries is not None:
+                dsum = float(decision.deliveries.sum())
         # 4–6. process, latency, backpressure — the shared tick dynamics
         # (fused.host_process_tick is the single home; the fused window
         # paths run the very same function / its float32 mirror).  The
@@ -415,11 +420,15 @@ class StreamingEngine:
         mtr.latency.append(latency)
         mtr.q_total.append(q_total)
         mtr.utilization.append(processed_units / np.maximum(cfg.cap_units, 1e-9))
-        mtr.wire_bytes.append(outcome.wire_bytes + int(acc[0]))
+        # pub/sub fan-out ships one notification per expected delivery
+        mtr.wire_bytes.append(
+            outcome.wire_bytes + int(acc[0])
+            + delivery_wire_bytes(dsum, self.router.workload.delivery_bytes))
         mtr.migration_bytes.append(outcome.migration_bytes + int(acc[1]))
         mtr.moved_tuples.append(outcome.moved_tuples + int(acc[2]))
         mtr.transfers.append(len(outcome.transfers) + int(acc[3]))
         mtr.snapshots.append(n_snap)
+        mtr.deliveries.append(dsum)
         mtr.resident_tuples.append(d_max)
         mtr.injected.append(n)
         mtr.alive.append(self.alive.copy())
@@ -542,9 +551,12 @@ class StreamingEngine:
                         if tr.enabled else None)
             w0 = tr.now()
             # stage W ticks of candidate batches (tick-ordered, so the
-            # source RNG stream matches the per-tick loop)
-            xy = np.stack([self.stream.tuples(b, tt).xy
-                           for tt in range(t, stop)])
+            # source RNG stream matches the per-tick loop); keyword
+            # workloads stage the hashed probe buckets alongside
+            batches = [self.stream.tuples(b, tt) for tt in range(t, stop)]
+            xy = np.stack([bt.xy for bt in batches])
+            kw_stack = (np.stack([bt.buckets for bt in batches])
+                        if batches[0].buckets is not None else None)
             self._fused_refresh(plane)
             fp = FusedParams(
                 cap_units=float(cfg.cap_units),
@@ -556,7 +568,8 @@ class StreamingEngine:
             carry = EngineCarry(self.queue_units, self.queue_tuples,
                                 self.lam_bp)
             state, carry, outs, ok = plane.run_window(
-                self._fused["state"], router._cost_params(), fp, carry, xy)
+                self._fused["state"], router._cost_params(), fp, carry, xy,
+                kw_stack=kw_stack)
             if ok:
                 self._fused["state"] = state
                 self.queue_units = np.asarray(carry.queue_units, np.float64)
@@ -571,7 +584,7 @@ class StreamingEngine:
                 # backpressure engaged mid-window: the fused window
                 # cannot represent throttled injection — replay the
                 # staged batches through the exact per-tick path
-                outs, resid = self._window_reference(xy)
+                outs, resid = self._window_reference(xy, kw_stack)
             # heartbeats advance through the window (membership is
             # constant inside one: boundaries are cut at every
             # scheduled event and detection tick)
@@ -583,18 +596,23 @@ class StreamingEngine:
                 self._fused_tick_telemetry(t, w, w0, tr.now(), outs)
             acc = self._take_acc()
             q_total = router.q_total
+            dbytes = router.workload.delivery_bytes
             for i in range(w):
+                d_i = (float(outs.deliveries[i])
+                       if outs.deliveries is not None else 0.0)
                 mtr.units_of_work.append(float(outs.throughput[i]) * q_total)
                 mtr.throughput.append(float(outs.throughput[i]))
                 mtr.latency.append(float(outs.latency[i]))
                 mtr.q_total.append(q_total)
                 mtr.utilization.append(np.asarray(outs.utilization[i],
                                                   np.float64))
-                mtr.wire_bytes.append(int(acc[0]) if i == 0 else 0)
+                mtr.wire_bytes.append((int(acc[0]) if i == 0 else 0)
+                                      + delivery_wire_bytes(d_i, dbytes))
                 mtr.migration_bytes.append(int(acc[1]) if i == 0 else 0)
                 mtr.moved_tuples.append(int(acc[2]) if i == 0 else 0)
                 mtr.transfers.append(int(acc[3]) if i == 0 else 0)
                 mtr.snapshots.append(0)
+                mtr.deliveries.append(d_i)
                 mtr.resident_tuples.append(float(resid[i]))
                 mtr.injected.append(int(outs.injected[i]))
                 mtr.alive.append(self.alive.copy())
@@ -653,7 +671,7 @@ class StreamingEngine:
             tr.counter("injected", int(outs.injected[i]),
                        tick=t + i, t0=s1)
 
-    def _window_reference(self, xy_stack):
+    def _window_reference(self, xy_stack, kw_stack=None):
         """Replay a staged window through the per-tick path: inject the
         dynamic backpressure-throttled prefix of each staged batch via
         ``Router.ingest`` (collectors accumulate host-side, stores
@@ -668,13 +686,19 @@ class StreamingEngine:
         util = np.zeros((w, m))
         inj = np.zeros(w, np.int64)
         resid = np.zeros(w)
+        dels = np.zeros(w) if kw_stack is not None else None
         for i in range(w):
             resid[i] = float(self.router.memory_usage()
                              .tuples.max(initial=0))
             n = int(min(cfg.lambda_max, self.lam_bp))
             if n > 0:
-                self._enqueue(self.router.ingest(
-                    TupleBatch(xy_stack[i, :n], self.tick_no + i)))
+                decision = self.router.ingest(TupleBatch(
+                    xy_stack[i, :n], self.tick_no + i,
+                    buckets=(None if kw_stack is None
+                             else kw_stack[i, :n])))
+                self._enqueue(decision)
+                if dels is not None and decision.deliveries is not None:
+                    dels[i] = float(decision.deliveries.sum())
             pu, thr[i], lat[i], self.lam_bp = host_process_tick(
                 self.queue_units, self.queue_tuples, self.lam_bp,
                 cfg.cap_units, self._eff_alive(), cfg.bp_high, cfg.bp_dec,
@@ -682,7 +706,7 @@ class StreamingEngine:
             util[i] = pu / np.maximum(cfg.cap_units, 1e-9)
             inj[i] = n
             self.router.end_tick()
-        return FusedOutputs(thr, lat, util, inj), resid
+        return FusedOutputs(thr, lat, util, inj, dels), resid
 
     def _replay_store(self, xy_stack, injected) -> np.ndarray:
         """Post-window store replay for store-keeping workloads: route

@@ -131,6 +131,12 @@ class ScenarioSpec:
     peak: float = 0.4
     membership: tuple[MembershipEvent, ...] = ()
     snapshot_every: int = 1
+    # spatial-keyword knobs: count of auto-generated trending HotTerm
+    # timelines (scenario "hot_hashtags"), their peak redirected stream
+    # fraction, and a non-default vocabulary size (0 = scenario default)
+    hot_terms: int = 0
+    term_peak: float = 0.0
+    vocab: int = 0
 
     @property
     def key(self) -> str:
@@ -145,16 +151,37 @@ class ScenarioSpec:
                 for e in self.membership)
         snap = ("" if self.snapshot_every == 1
                 else f",snap/{self.snapshot_every}")
+        ht = ("" if not self.hot_terms
+              else f",ht={self.hot_terms}x{self.term_peak}")
+        vb = "" if not self.vocab else f",vocab={self.vocab}"
         return (f"{self.name}[{self.ticks}t,{self.preload_queries}q,"
-                f"{self.query_burst}b{peak}{mb}{snap}]")
+                f"{self.query_burst}b{peak}{mb}{snap}{ht}{vb}]")
 
     def build(self, *, seed: int = 0,
               workload: WorkloadSpec | None = None) -> ScenarioSource:
+        kw = {}
+        if self.vocab:
+            kw["vocab"] = self.vocab
+        if self.term_peak:
+            kw["term_peak"] = self.term_peak
+        if self.hot_terms:
+            # deterministic trending-term timelines: popular Zipf ranks
+            # 0..n−1 on alternating diagonal paths, peaks splitting the
+            # requested stream share
+            from .sources import HotTerm
+            st, dur = self.ticks // 6, max(2 * self.ticks // 3, 1)
+            pf = (self.term_peak or self.peak) / self.hot_terms
+            paths = (((0.1, 0.1), (0.85, 0.85)), ((0.85, 0.1), (0.1, 0.85)),
+                     ((0.1, 0.85), (0.85, 0.1)), ((0.85, 0.85), (0.1, 0.1)))
+            kw["hot_terms"] = tuple(
+                HotTerm(i, start=st, duration=dur, peak_fraction=pf,
+                        path=paths[i % len(paths)])
+                for i in range(self.hot_terms))
         return scenario(self.name, seed=seed, horizon=self.ticks,
                         peak=self.peak, query_burst=self.query_burst,
                         query_side=workload_query_side(workload),
                         membership=self.membership,
-                        snapshot_every=self.snapshot_every)
+                        snapshot_every=self.snapshot_every, **kw)
 
 
 @dataclass(frozen=True)

@@ -59,6 +59,9 @@ class DeviceState(NamedTuple):
     q_machine: object   # (M,) per-machine resident queries
     cn_rows: object     # (P, G+1) float32 N' row collector deltas
     cn_cols: object     # (P, G+1) float32 N' col collector deltas
+    # (P, T+1) per-partition pivot-bucket histogram (column T = the
+    # wildcard bucket); None unless the workload is spatial-keyword
+    qres_kw: object = None
 
 
 @dataclass(frozen=True)
@@ -79,6 +82,9 @@ class FusedHostState:
     q_machine: np.ndarray
     track_stats: bool = False
     n_alloc: int = 0      # allocated-id prefix (ids are never reused)
+    # (capacity, T+1) pivot-bucket histogram for spatial-keyword
+    # workloads, None otherwise
+    qres_kw: np.ndarray | None = None
 
     @property
     def capacity(self) -> int:
@@ -89,7 +95,12 @@ class FusedHostState:
         that bring a device state built from ``self`` up to date.
         Returns ``None`` when shapes changed (full rebuild needed)."""
         updates: dict[str, tuple] = {}
-        for name in ("grid", "owner", "qres", "area_frac", "q_machine"):
+        names = ["grid", "owner", "qres", "area_frac", "q_machine"]
+        if (self.qres_kw is None) != (new.qres_kw is None):
+            return None
+        if self.qres_kw is not None:
+            names.append("qres_kw")
+        for name in names:
             a, b = getattr(self, name), getattr(new, name)
             if a.shape != b.shape:
                 return None
@@ -115,6 +126,9 @@ class FusedOutputs(NamedTuple):
     latency: np.ndarray      # (W,)
     utilization: np.ndarray  # (W, M)
     injected: np.ndarray     # (W,) int
+    # (W,) expected subscription deliveries (spatial-keyword workloads
+    # only; None keeps the pure-spatial windows byte-identical)
+    deliveries: np.ndarray | None = None
 
 
 @dataclass(frozen=True)

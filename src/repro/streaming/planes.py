@@ -90,6 +90,10 @@ class CostParams:
     tuple_driven: bool
     store_cost: float       # 0.0 when the workload keeps no store
     scan_kappa: float = 0.0
+    # spatial-keyword pub/sub: per-expected-delivery fan-out work and
+    # the flag that routes tuples through the keyword cost path
+    delivery_cost: float = 0.0
+    keyword: bool = False
 
 
 class DataPlane:
@@ -113,6 +117,25 @@ class DataPlane:
         approximation used by the replicated router's shadow grid."""
         raise NotImplementedError
 
+    def keyword_costs(self, xy, onehot, grid, owner_table, qres_kw,
+                      q_machine, area_frac, p: CostParams):
+        """Route and price a spatial-keyword tuple batch.
+
+        ``onehot`` is the (N, T+1) probe-bucket indicator of each tuple
+        (wildcard column always on, ``queries.keywords.bucket_onehot``)
+        and ``qres_kw`` the (P, T+1) per-partition pivot histogram; the
+        expected candidate count per tuple is their contraction, and
+        the expected deliveries its coverage-scaled value.  Returns
+        ``(pids, owners, costs, deliveries)``."""
+        raise NotImplementedError
+
+    def keyword_match_terms(self, xy, onehot, grid, qres_kw, area_frac,
+                            query_area, kappa_match):
+        """Keyword twin of :meth:`match_terms` for the replicated
+        router's shadow grid: ``(pids, match-term work, expected
+        deliveries)`` per point."""
+        raise NotImplementedError
+
     def probe_costs(self, rects, grid, owner_table, store_counts,
                     d_machine, area_frac, p: CostParams,
                     pids=None, owners=None):
@@ -126,6 +149,12 @@ class DataPlane:
     def match_counts(self, points, rects):
         """Exact tuple↔query join sizes: (per-point matches, per-query
         matches) — ``repro.kernels.spatial_match`` semantics."""
+        raise NotImplementedError
+
+    def keyword_match_counts(self, points, pt_masks, rects, sub_masks):
+        """Exact fused spatial ∧ keyword-conjunction join sizes over
+        hashed bucket masks — ``repro.kernels.keyword_match``
+        semantics: (per-point deliveries, per-subscription matches)."""
         raise NotImplementedError
 
     def knn_distances(self, points, foci, k: int = 8):
@@ -166,21 +195,27 @@ class DataPlane:
         raise NotImplementedError
 
     def step(self, state: DeviceState, cp: CostParams, xy,
-             track_stats: bool = False, query_batch=None):
+             track_stats: bool = False, query_batch=None, kw=None):
         """One fused ingest step: route + price ``xy`` and accumulate
         the N′ collectors on the resident state in a single dispatch.
-        Returns ``(state, (pids, owners, costs))``.  Query registration
-        is a host-boundary event by design (arrivals are rare and touch
-        the partition boxes the planner owns), so ``query_batch`` must
-        be ``None`` — the engine routes ``QueryBatch`` events through
-        the per-tick path between windows."""
+        Returns ``(state, (pids, owners, costs))`` — with a trailing
+        ``deliveries`` element when ``kw`` (the batch's (N, K+1) probe
+        bucket ids) is given and the state carries ``qres_kw``.  Query
+        registration is a host-boundary event by design (arrivals are
+        rare and touch the partition boxes the planner owns), so
+        ``query_batch`` must be ``None`` — the engine routes
+        ``QueryBatch`` events through the per-tick path between
+        windows."""
         raise NotImplementedError
 
     def run_window(self, state: DeviceState, cp: CostParams,
-                   fp: FusedParams, carry: EngineCarry, xy_stack):
+                   fp: FusedParams, carry: EngineCarry, xy_stack,
+                   kw_stack=None):
         """Execute ``len(xy_stack)`` fused engine ticks (inject →
         route/price/collect → process → backpressure).  ``xy_stack`` is
-        (W, B, 2) with B = ⌊λmax⌋ staged candidates per tick.
+        (W, B, 2) with B = ⌊λmax⌋ staged candidates per tick;
+        ``kw_stack`` is the matching (W, B, K+1) int32 probe-bucket
+        stack for spatial-keyword workloads (None otherwise).
         ``fp.alive`` is the effective-capacity mask (alive × capacity
         factor): elastic membership — kills, joins, stragglers — reaches
         the window's tick dynamics through that one per-window array,
@@ -230,6 +265,35 @@ class NumpyPlane(DataPlane):
         cov = np.minimum(query_area / np.maximum(area_frac[pids], 1e-12), 1.0)
         return pids, kappa_match * qres[pids] * cov
 
+    def keyword_costs(self, xy, onehot, grid, owner_table, qres_kw,
+                      q_machine, area_frac, p: CostParams):
+        # op order mirrors tuple_costs exactly so the 0-keyword case
+        # (all-wildcard onehot ⇒ cand == qres, delivery_cost == 0)
+        # degrades to the continuous-range costs bit-for-bit
+        pids, owners = self._route(xy, grid, owner_table)
+        q = np.asarray(q_machine, np.float64)[owners]
+        probe = probe_term(np, q, p.kappa_probe, p.q_cache)
+        cov = np.minimum(
+            p.query_area / np.maximum(area_frac[pids], 1e-12), 1.0)
+        cand = (np.asarray(qres_kw, np.float64)[pids]
+                * np.asarray(onehot, np.float64)).sum(1)
+        match = p.kappa_match * cand * cov
+        costs = p.c0 + probe + p.match_factor * match
+        deliveries = cand * cov
+        costs = costs + p.delivery_cost * deliveries + p.store_cost
+        return (pids, owners.astype(np.int32), costs.astype(np.float32),
+                deliveries)
+
+    def keyword_match_terms(self, xy, onehot, grid, qres_kw, area_frac,
+                            query_area, kappa_match):
+        g = grid.shape[0]
+        row, col = geometry.points_to_cells(np.asarray(xy), g)
+        pids = grid[row, col]
+        cov = np.minimum(query_area / np.maximum(area_frac[pids], 1e-12), 1.0)
+        cand = (np.asarray(qres_kw, np.float64)[pids]
+                * np.asarray(onehot, np.float64)).sum(1)
+        return pids, kappa_match * cand * cov, cand * cov
+
     def probe_costs(self, rects, grid, owner_table, store_counts,
                     d_machine, area_frac, p: CostParams,
                     pids=None, owners=None):
@@ -261,6 +325,28 @@ class NumpyPlane(DataPlane):
             qcnt[lo:lo + chunk] = inside.sum(0, dtype=np.int32)
         return pcnt, qcnt
 
+    def keyword_match_counts(self, points, pt_masks, rects, sub_masks,
+                             chunk: int = 512):
+        points = np.asarray(points, np.float32)
+        pt_masks = np.asarray(pt_masks, np.float32)
+        rects = np.asarray(rects, np.float32)
+        sub_masks = np.asarray(sub_masks, np.float32)
+        pcnt = np.zeros(len(points), np.int32)
+        qcnt = np.zeros(len(rects), np.int32)
+        inv = 1.0 - pt_masks
+        for lo in range(0, len(rects), chunk):
+            r = rects[lo:lo + chunk]
+            hit = ((points[:, None, 0] >= r[None, :, 0])
+                   & (points[:, None, 0] <= r[None, :, 2])
+                   & (points[:, None, 1] >= r[None, :, 1])
+                   & (points[:, None, 1] <= r[None, :, 3]))
+            # buckets the subscription needs that the tuple lacks
+            miss = inv @ sub_masks[lo:lo + chunk].T
+            hit &= miss < 0.5
+            pcnt += hit.sum(1, dtype=np.int32)
+            qcnt[lo:lo + chunk] = hit.sum(0, dtype=np.int32)
+        return pcnt, qcnt
+
     def knn_distances(self, points, foci, k: int = 8):
         points = np.asarray(points, np.float32)
         foci = np.asarray(foci, np.float32)
@@ -282,7 +368,7 @@ class NumpyPlane(DataPlane):
         g1 = host.grid.shape[0] + 1
         z = lambda: np.zeros((host.capacity, g1), np.float32)
         return DeviceState(host.grid, host.owner, host.qres, host.area_frac,
-                           host.q_machine, z(), z())
+                           host.q_machine, z(), z(), host.qres_kw)
 
     def scatter_update(self, state: DeviceState,
                        updates: dict[str, tuple]) -> DeviceState:
@@ -298,24 +384,34 @@ class NumpyPlane(DataPlane):
                               cn_cols=np.zeros_like(state.cn_cols))
 
     def step(self, state: DeviceState, cp: CostParams, xy,
-             track_stats: bool = False, query_batch=None):
+             track_stats: bool = False, query_batch=None, kw=None):
         if query_batch is not None:
             raise NotImplementedError(
                 "query registration is a host-boundary event; ingest "
                 "QueryBatch through the router between fused windows")
-        pids, owners, costs = self.tuple_costs(
-            xy, state.grid, state.owner, state.qres, state.q_machine,
-            state.area_frac, cp)
+        if kw is not None:
+            from ..queries.keywords import bucket_onehot
+            onehot = bucket_onehot(kw, state.qres_kw.shape[1] - 1)
+            pids, owners, costs, dels = self.keyword_costs(
+                xy, onehot, state.grid, state.owner, state.qres_kw,
+                state.q_machine, state.area_frac, cp)
+            out = (pids, owners, costs, dels)
+        else:
+            pids, owners, costs = self.tuple_costs(
+                xy, state.grid, state.owner, state.qres, state.q_machine,
+                state.area_frac, cp)
+            out = (pids, owners, costs)
         if track_stats:
             row, col = geometry.points_to_cells(np.asarray(xy),
                                                 state.grid.shape[0])
             one = np.ones(len(pids), np.float32)
             np.add.at(state.cn_rows, (pids, row), one)
             np.add.at(state.cn_cols, (pids, col), one)
-        return state, (pids, owners, costs)
+        return state, out
 
     def run_window(self, state: DeviceState, cp: CostParams,
-                   fp: FusedParams, carry: EngineCarry, xy_stack):
+                   fp: FusedParams, carry: EngineCarry, xy_stack,
+                   kw_stack=None):
         """The per-tick reference loop over pre-staged batches: same
         float64 host math, same ``np.add.at`` ordering, shared
         ``host_process_tick`` — metrics-equal to ``StreamingEngine.
@@ -328,13 +424,18 @@ class NumpyPlane(DataPlane):
         thr, lat = np.zeros(w), np.zeros(w)
         util = np.zeros((w, m))
         inj = np.zeros(w, np.int64)
+        dels = np.zeros(w) if kw_stack is not None else None
         with _tracer().span("fused_window_dispatch", ticks=w,
                             plane="numpy"):
             for i in range(w):
                 n = int(min(fp.lambda_max, lam_bp))
-                state, (_, owners, costs) = self.step(
+                state, out = self.step(
                     state, cp, xy_stack[i, :n],
-                    track_stats=fp.track_stats)
+                    track_stats=fp.track_stats,
+                    kw=None if kw_stack is None else kw_stack[i, :n])
+                owners, costs = out[1], out[2]
+                if dels is not None:
+                    dels[i] = float(out[3].sum())
                 np.add.at(qu, owners, costs.astype(np.float64))
                 np.add.at(qt, owners, 1.0)
                 pu, thr[i], lat[i], lam_bp = host_process_tick(
@@ -343,7 +444,7 @@ class NumpyPlane(DataPlane):
                 util[i] = pu / np.maximum(fp.cap_units, 1e-9)
                 inj[i] = n
         return state, EngineCarry(qu, qt, lam_bp), FusedOutputs(
-            thr, lat, util, inj), True
+            thr, lat, util, inj, dels), True
 
 
 # ---------------------------------------------------------------------------
@@ -413,6 +514,8 @@ class JaxPlane(DataPlane):
         self._jit_tuple = jax.jit(self._tuple_fn,
                                   static_argnames=("tuple_driven",))
         self._jit_match = jax.jit(self._match_fn)
+        self._jit_kw_tuple = jax.jit(self._kw_tuple_fn)
+        self._jit_kw_match = jax.jit(self._kw_match_fn)
         self._jit_probe = jax.jit(self._probe_fn)
         self._jit_probe_route = jax.jit(self._probe_route_fn)
         self._jit_split_terms = jax.jit(self._split_terms_fn)
@@ -436,9 +539,12 @@ class JaxPlane(DataPlane):
 
     def _cost_body(self, n, pids, owners, qres, q_machine, area_frac,
                    c0, kappa_probe, kappa_match, q_cache, query_area,
-                   match_factor, store_cost, tuple_driven: bool):
+                   match_factor, store_cost, delivery_cost=0.0, *,
+                   tuple_driven: bool):
         """The per-tuple §6 cost terms — one home shared by the legacy
-        per-call path, the fused single step and the scanned window."""
+        per-call path, the fused single step and the scanned window.
+        ``delivery_cost`` rides along in the scalar bundle for the
+        keyword paths; the pure-spatial terms ignore it."""
         jnp = self._jnp
         if tuple_driven:
             q = q_machine[owners].astype(jnp.float32)
@@ -451,6 +557,28 @@ class JaxPlane(DataPlane):
             costs = jnp.full(n, c0, jnp.float32)
         return (costs + store_cost).astype(jnp.float32)
 
+    def _kw_cost_body(self, pids, owners, qres_kw, onehot, q_machine,
+                      area_frac, sc):
+        """Keyword cost terms: the match density comes from the
+        (P, T+1) pivot histogram contracted with each tuple's probe
+        buckets, and the fan-out bill ``delivery_cost · E[deliveries]``
+        is added on top.  Same term order as :meth:`_cost_body` so the
+        0-keyword case degrades to the range costs exactly."""
+        jnp = self._jnp
+        (c0, kappa_probe, kappa_match, q_cache, query_area, match_factor,
+         store_cost, delivery_cost) = sc
+        q = q_machine[owners].astype(jnp.float32)
+        probe = probe_term(jnp, q, kappa_probe, q_cache)
+        cov = jnp.minimum(
+            query_area / jnp.maximum(area_frac[pids], 1e-12), 1.0)
+        cand = (qres_kw[pids] * onehot).sum(1)
+        match = kappa_match * cand * cov
+        deliveries = cand * cov
+        costs = (c0 + probe + match_factor * match
+                 + delivery_cost * deliveries
+                 + store_cost).astype(jnp.float32)
+        return costs, deliveries
+
     def _tuple_fn(self, xy, grid, owner_table, qres, q_machine, area_frac,
                   c0, kappa_probe, kappa_match, q_cache, query_area,
                   match_factor, store_cost, *, tuple_driven: bool):
@@ -459,8 +587,25 @@ class JaxPlane(DataPlane):
         costs = self._cost_body(xy.shape[0], pids, owners, qres, q_machine,
                                 area_frac, c0, kappa_probe, kappa_match,
                                 q_cache, query_area, match_factor,
-                                store_cost, tuple_driven)
+                                store_cost, tuple_driven=tuple_driven)
         return pids, owners, costs
+
+    def _kw_tuple_fn(self, xy, onehot, grid, owner_table, qres_kw,
+                     q_machine, area_frac, sc):
+        pids, owners = self._route_fn(self._jnp, xy, grid, owner_table)
+        costs, dels = self._kw_cost_body(pids, owners, qres_kw, onehot,
+                                         q_machine, area_frac, sc)
+        return pids, owners, costs, dels
+
+    def _kw_match_fn(self, xy, onehot, grid, qres_kw, area_frac,
+                     query_area, kappa_match):
+        jnp = self._jnp
+        row, col = geometry.points_to_cells(xy, grid.shape[0])
+        pids = grid[row, col]
+        cov = jnp.minimum(
+            query_area / jnp.maximum(area_frac[pids], 1e-12), 1.0)
+        cand = (qres_kw[pids] * onehot).sum(1)
+        return pids, kappa_match * cand * cov, cand * cov
 
     def _match_fn(self, xy, grid, qres, area_frac, query_area, kappa_match):
         jnp = self._jnp
@@ -547,6 +692,33 @@ class JaxPlane(DataPlane):
             self._sc(kappa_match))
         return np.asarray(pids)[:n], np.asarray(match)[:n]
 
+    def keyword_costs(self, xy, onehot, grid, owner_table, qres_kw,
+                      q_machine, area_frac, p: CostParams):
+        n = len(xy)
+        n_pad = _pad_pow2(n)
+        pids, owners, costs, dels = self._jit_kw_tuple(
+            self._padded(np.asarray(xy, np.float32), n_pad),
+            self._padded(np.asarray(onehot, np.float32), n_pad),
+            self._dev(grid), self._dev(owner_table, np.int32),
+            self._dev(qres_kw, np.float32),
+            self._dev(q_machine, np.float32),
+            self._dev(area_frac, np.float32), self._cost_scalars(p))
+        return (np.asarray(pids)[:n], np.asarray(owners, np.int32)[:n],
+                np.asarray(costs)[:n], np.asarray(dels, np.float64)[:n])
+
+    def keyword_match_terms(self, xy, onehot, grid, qres_kw, area_frac,
+                            query_area, kappa_match):
+        n = len(xy)
+        n_pad = _pad_pow2(n)
+        pids, match, dels = self._jit_kw_match(
+            self._padded(np.asarray(xy, np.float32), n_pad),
+            self._padded(np.asarray(onehot, np.float32), n_pad),
+            self._dev(grid), self._dev(qres_kw, np.float32),
+            self._dev(area_frac, np.float32), self._sc(query_area),
+            self._sc(kappa_match))
+        return (np.asarray(pids)[:n], np.asarray(match, np.float64)[:n],
+                np.asarray(dels, np.float64)[:n])
+
     def probe_costs(self, rects, grid, owner_table, store_counts,
                     d_machine, area_frac, p: CostParams,
                     pids=None, owners=None):
@@ -582,6 +754,18 @@ class JaxPlane(DataPlane):
             from ..kernels.spatial_match import spatial_match_ref
             pc, qc = spatial_match_ref(jnp.asarray(points),
                                        jnp.asarray(rects))
+        return np.asarray(pc), np.asarray(qc)
+
+    def keyword_match_counts(self, points, pt_masks, rects, sub_masks):
+        jnp = self._jnp
+        args = (jnp.asarray(points), jnp.asarray(pt_masks),
+                jnp.asarray(rects), jnp.asarray(sub_masks))
+        if self._on_tpu:
+            from ..kernels.keyword_match import keyword_match
+            pc, qc = keyword_match(*args)
+        else:
+            from ..kernels.keyword_match import keyword_match_ref
+            pc, qc = keyword_match_ref(*args)
         return np.asarray(pc), np.asarray(qc)
 
     def knn_distances(self, points, foci, k: int = 8):
@@ -666,13 +850,15 @@ class JaxPlane(DataPlane):
         jnp = self._jnp
         g1 = host.grid.shape[0] + 1
         z = lambda: jnp.zeros((host.capacity, g1), jnp.float32)
+        qkw = (None if host.qres_kw is None
+               else jnp.asarray(np.asarray(host.qres_kw, np.float32)))
         return DeviceState(
             jnp.asarray(host.grid, jnp.int32),
             jnp.asarray(host.owner, jnp.int32),
             jnp.asarray(np.asarray(host.qres, np.float32)),
             jnp.asarray(np.asarray(host.area_frac, np.float32)),
             jnp.asarray(np.asarray(host.q_machine, np.float32)),
-            z(), z())
+            z(), z(), qkw)
 
     def scatter_update(self, state: DeviceState,
                        updates: dict[str, tuple]) -> DeviceState:
@@ -706,7 +892,7 @@ class JaxPlane(DataPlane):
         return (self._sc(cp.c0), self._sc(cp.kappa_probe),
                 self._sc(cp.kappa_match), self._sc(cp.q_cache),
                 self._sc(cp.query_area), self._sc(cp.match_factor),
-                self._sc(cp.store_cost))
+                self._sc(cp.store_cost), self._sc(cp.delivery_cost))
 
     def _step_fn(self, state, xy, n, sc, *, track_stats: bool,
                  tuple_driven: bool):
@@ -728,26 +914,61 @@ class JaxPlane(DataPlane):
                 cn_cols=state.cn_cols.at[pids, col].add(mask))
         return state, (pids, owners, costs)
 
+    def _kw_step_fn(self, state, xy, onehot, n, sc, *, track_stats: bool):
+        """Keyword twin of :meth:`_step_fn`: the match density comes
+        from the pivot histogram instead of the scalar qres."""
+        jnp = self._jnp
+        b = xy.shape[0]
+        mask = (jnp.arange(b) < n).astype(jnp.float32)
+        row, col = geometry.points_to_cells(xy, state.grid.shape[0])
+        pids = state.grid[row, col]
+        owners = state.owner[pids]
+        costs, dels = self._kw_cost_body(pids, owners, state.qres_kw,
+                                         onehot, state.q_machine,
+                                         state.area_frac, sc)
+        if track_stats:
+            state = state._replace(
+                cn_rows=state.cn_rows.at[pids, row].add(mask),
+                cn_cols=state.cn_cols.at[pids, col].add(mask))
+        return state, (pids, owners, costs, dels * mask)
+
     def step(self, state: DeviceState, cp: CostParams, xy,
-             track_stats: bool = False, query_batch=None):
+             track_stats: bool = False, query_batch=None, kw=None):
         if query_batch is not None:
             raise NotImplementedError(
                 "query registration is a host-boundary event; ingest "
                 "QueryBatch through the router between fused windows")
         n = len(xy)
         n_pad = _pad_pow2(n)
+        keyword = kw is not None
         key = (n_pad, state.owner.shape[0], state.grid.shape[0],
-               track_stats, cp.tuple_driven)
+               track_stats, cp.tuple_driven, keyword)
         fn = self._step_cache.get(key)
         compiling = fn is None
         if compiling:
-            fn = self._jax.jit(
-                functools.partial(self._step_fn, track_stats=track_stats,
-                                  tuple_driven=cp.tuple_driven),
-                donate_argnums=self._donate_step)
+            if keyword:
+                fn = self._jax.jit(
+                    functools.partial(self._kw_step_fn,
+                                      track_stats=track_stats),
+                    donate_argnums=self._donate_step)
+            else:
+                fn = self._jax.jit(
+                    functools.partial(self._step_fn,
+                                      track_stats=track_stats,
+                                      tuple_driven=cp.tuple_driven),
+                    donate_argnums=self._donate_step)
             self._step_cache[key] = fn
-        args = (state, self._padded(np.asarray(xy, np.float32), n_pad),
-                np.int32(n), self._cost_scalars(cp))
+        if keyword:
+            from ..queries.keywords import bucket_onehot
+            t1 = state.qres_kw.shape[1]
+            oh = self._padded(bucket_onehot(kw, t1 - 1), n_pad)
+            args = (state,
+                    self._padded(np.asarray(xy, np.float32), n_pad), oh,
+                    np.int32(n), self._cost_scalars(cp))
+        else:
+            args = (state,
+                    self._padded(np.asarray(xy, np.float32), n_pad),
+                    np.int32(n), self._cost_scalars(cp))
         tr = _tracer()
         if tr.enabled:
             # compile (jit-cache miss) vs steady-state dispatch, fenced
@@ -757,17 +978,20 @@ class JaxPlane(DataPlane):
             name = ("fused_step_compile" if compiling
                     else "fused_step_dispatch")
             with tr.span(name, batch=n):
-                state, (pids, owners, costs) = fn(*args)
-                self._jax.block_until_ready((state, pids, owners, costs))
+                state, out = fn(*args)
+                self._jax.block_until_ready((state,) + tuple(out))
         else:
-            state, (pids, owners, costs) = fn(*args)
-        return state, (np.asarray(pids, np.int32)[:n],
-                       np.asarray(owners, np.int32)[:n],
-                       np.asarray(costs)[:n])
+            state, out = fn(*args)
+        host = (np.asarray(out[0], np.int32)[:n],
+                np.asarray(out[1], np.int32)[:n],
+                np.asarray(out[2])[:n])
+        if keyword:
+            host = host + (np.asarray(out[3], np.float64)[:n],)
+        return state, host
 
-    def _window_fn(self, state, carry, hists, sc, ep, alive, *,
-                   track_stats: bool, tuple_driven: bool, batch: int,
-                   p_used: int):
+    def _window_fn(self, state, carry, hists, kwh, sc, ep, alive, *,
+                   track_stats: bool, tuple_driven: bool, keyword: bool,
+                   batch: int, p_used: int):
         """One window as one XLA executable, factored through the cell
         histogram.
 
@@ -816,13 +1040,41 @@ class JaxPlane(DataPlane):
         cell_pid = (state.grid.reshape(-1)[:, None]
                     == jnp.arange(p_used)[None, :]).astype(jnp.float32)
         count_wp = mm(hists, cell_pid)                   # exact int counts
-        cost_p = self._cost_body(p_used, jnp.arange(p_used), owner_u,
-                                 state.qres, state.q_machine,
-                                 state.area_frac, *sc,
-                                 tuple_driven=tuple_driven)
         owner_m = (owner_u[:, None]
                    == jnp.arange(m)[None, :]).astype(jnp.float32)
-        units_wm = mm(count_wp, cost_p[:, None] * owner_m)
+        if keyword:
+            # spatial-keyword factoring: the (cell, term-bucket) counts
+            # contract against the (P, T+1) pivot histogram — a second
+            # matmul contraction beside the count matmul.  Per-tuple
+            # cost = base(p) + (mf·κ_match + delivery_cost)·cand·cov,
+            # where base carries the c0/probe/store terms (per
+            # partition) and cand·cov aggregates per (tick, partition).
+            (c0, kappa_probe, kappa_match, q_cache, query_area, mf,
+             store_cost, delivery_cost) = sc
+            hp = self._jax.lax.Precision.HIGHEST
+            q = state.q_machine[owner_u].astype(jnp.float32)
+            base_p = c0 + probe_term(jnp, q, kappa_probe, q_cache) \
+                + store_cost
+            cov_p = jnp.minimum(
+                query_area
+                / jnp.maximum(state.area_frac[:p_used], 1e-12), 1.0)
+            t1 = state.qres_kw.shape[1]
+            kw3 = kwh.reshape(kwh.shape[0], g * g, t1)
+            cnt_wpb = jnp.einsum("wcb,cp->wpb", kw3, cell_pid,
+                                 precision=hp)
+            del_wp = ((cnt_wpb * state.qres_kw[:p_used][None]).sum(-1)
+                      * cov_p[None, :])
+            units_wm = (mm(count_wp, base_p[:, None] * owner_m)
+                        + (mf * kappa_match + delivery_cost)
+                        * mm(del_wp, owner_m))
+            dels_w = del_wp.sum(1)
+        else:
+            cost_p = self._cost_body(p_used, jnp.arange(p_used), owner_u,
+                                     state.qres, state.q_machine,
+                                     state.area_frac, *sc,
+                                     tuple_driven=tuple_driven)
+            units_wm = mm(count_wp, cost_p[:, None] * owner_m)
+            dels_w = jnp.zeros(hists.shape[0], jnp.float32)
         tuples_wm = mm(count_wp, owner_m)
         cap = cap_units * alive
         ticks = jnp.arange(hists.shape[0])
@@ -857,6 +1109,7 @@ class JaxPlane(DataPlane):
 
         carry, (w_, lat, util, n_, ok) = lax.scan(
             body, carry, (units_wm, tuples_wm, ticks))
+        dels_w = jnp.where(ticks < n_ticks, dels_w, 0.0)
         if track_stats:
             hist2d = hists.sum(0).reshape(g, g)
             oh3 = cell_pid.reshape(g, g, p_used)
@@ -866,31 +1119,43 @@ class JaxPlane(DataPlane):
                     jnp.einsum("rc,rcp->pr", hist2d, oh3, precision=hp)),
                 cn_cols=state.cn_cols.at[:p_used, :g].add(
                     jnp.einsum("rc,rcp->pc", hist2d, oh3, precision=hp)))
-        return state, carry, (w_, lat, util, n_), ok.all()
+        return state, carry, (w_, lat, util, n_, dels_w), ok.all()
 
     def run_window(self, state: DeviceState, cp: CostParams,
-                   fp: FusedParams, carry: EngineCarry, xy_stack):
+                   fp: FusedParams, carry: EngineCarry, xy_stack,
+                   kw_stack=None):
         jnp = self._jnp
         w, b = xy_stack.shape[:2]
         g = state.grid.shape[0]
         wp = _pad_pow2(w)                    # ragged tails share a compile
+        keyword = kw_stack is not None
         # host pre-pass: full-batch per-tick cell histograms.  The raw
         # points never cross to the device — only (W, G²) counts do,
         # shrinking the upload ~batch/G²-fold; geometry.points_to_cells
-        # keeps the cell convention shared with every other path.
+        # keeps the cell convention shared with every other path.  For
+        # keyword workloads a second (cell, term-bucket) histogram
+        # rides along (W, G²·(T+1)): term filtering factors through it
+        # exactly like spatial routing factors through the cell counts.
         hists = np.zeros((wp, g * g), np.float32)
+        t1 = int(state.qres_kw.shape[1]) if keyword else 0
+        kwh = np.zeros((wp, g * g * t1), np.float32) if keyword else None
         for i in range(w):
             row, col = geometry.points_to_cells(
                 np.asarray(xy_stack[i], np.float32), g)
-            hists[i] = np.bincount(row.astype(np.int64) * g + col,
-                                   minlength=g * g)
+            cell = row.astype(np.int64) * g + col
+            hists[i] = np.bincount(cell, minlength=g * g)
+            if keyword:
+                ids = np.asarray(kw_stack[i], np.int64)
+                flat = cell[:, None] * t1 + ids
+                kwh[i] = np.bincount(flat[ids >= 0].reshape(-1),
+                                     minlength=g * g * t1)
         # allocated-id prefix, in 64-row buckets like close_round (the
         # prefix drifts by a few ids per round; full capacity only as
         # the fallback when no prefix was provided)
         p_cap = state.owner.shape[0]
         p_used = min(_pad64(fp.n_alloc), p_cap) if fp.n_alloc else p_cap
         key = (wp, b, p_cap, p_used, g, len(fp.alive),
-               fp.track_stats, cp.tuple_driven)
+               fp.track_stats, cp.tuple_driven, keyword, t1)
         fn = self._window_cache.get(key)
         compiling = fn is None
         if compiling:
@@ -900,7 +1165,8 @@ class JaxPlane(DataPlane):
             fn = self._jax.jit(
                 functools.partial(self._window_fn,
                                   track_stats=fp.track_stats,
-                                  tuple_driven=cp.tuple_driven, batch=b,
+                                  tuple_driven=cp.tuple_driven,
+                                  keyword=keyword, batch=b,
                                   p_used=p_used))
             self._window_cache[key] = fn
         ep = tuple(self._sc(v) for v in (fp.cap_units, fp.lambda_max,
@@ -910,6 +1176,7 @@ class JaxPlane(DataPlane):
                      jnp.asarray(np.asarray(carry.queue_tuples, np.float32)),
                      jnp.float32(carry.lam_bp))
         args = (state, carry_dev, jnp.asarray(hists),
+                None if kwh is None else jnp.asarray(kwh),
                 self._cost_scalars(cp), ep, self._dev(fp.alive, np.float32))
         tr = _tracer()
         if tr.enabled:
@@ -931,7 +1198,9 @@ class JaxPlane(DataPlane):
                 FusedOutputs(np.asarray(outs[0], np.float64)[:w],
                              np.asarray(outs[1], np.float64)[:w],
                              np.asarray(outs[2], np.float64)[:w],
-                             np.asarray(outs[3], np.int64)[:w]),
+                             np.asarray(outs[3], np.int64)[:w],
+                             (np.asarray(outs[4], np.float64)[:w]
+                              if keyword else None)),
                 bool(ok))
 
 

@@ -137,6 +137,50 @@ class Hotspot:
         return rects_around(self.sample_inside(rng, n), side)
 
 
+@dataclass(frozen=True)
+class HotTerm:
+    """A trending hashtag that *migrates across the grid*: a term that
+    spikes in popularity while its geographic focus travels along
+    ``path``.  This decouples textual skew from spatial skew — the
+    delivery hot set moves even though the background spatial mixture
+    is unchanged, which is exactly the load a spatial-only balancer
+    cannot see coming and a cost-driven one (SWARM) can.
+
+    ``term`` should be a low Zipf rank (popular vocabulary id) so
+    subscriptions sampled from the same vocabulary actually subscribe
+    to it.  ``fraction(tick)`` is the share of the stream redirected to
+    the moving focus; redirected tuples carry the term with probability
+    ``term_prob``."""
+
+    term: int
+    start: int = 0
+    duration: int = 200
+    peak_fraction: float = 0.4
+    path: tuple[tuple[float, float], tuple[float, float]] = (
+        (0.1, 0.1), (0.85, 0.85))
+    radius: float = 0.06
+    term_prob: float = 0.9
+
+    def fraction(self, tick: int) -> float:
+        t = tick - self.start
+        if t < 0 or t >= self.duration:
+            return 0.0
+        mid, sig = self.duration / 2, self.duration / 6
+        return self.peak_fraction * float(
+            np.exp(-0.5 * ((t - mid) / sig) ** 2))
+
+    def center(self, tick: int) -> np.ndarray:
+        """Linearly-interpolated focus position at ``tick``."""
+        t = np.clip((tick - self.start) / max(self.duration - 1, 1), 0.0, 1.0)
+        (x0, y0), (x1, y1) = self.path
+        return np.array([x0 + t * (x1 - x0), y0 + t * (y1 - y0)])
+
+    def sample_inside(self, rng: np.random.Generator, n: int,
+                      tick: int) -> np.ndarray:
+        pts = self.center(tick) + rng.normal(0.0, self.radius, size=(n, 2))
+        return np.clip(pts, 0.0, 0.999).astype(np.float32)
+
+
 @dataclass
 class ScenarioSource:
     """Background + hotspots, driving one experiment timeline.
@@ -147,27 +191,97 @@ class ScenarioSource:
     Snapshot probes are emitted by ``snapshot_arrivals`` and follow the
     *data* distribution — people ask about where things are happening —
     so probe hotspots track data hotspots, which is what makes
-    stored-data workloads stress the balancer."""
+    stored-data workloads stress the balancer.
+
+    Spatial-keyword scenarios add a ``vocab``-sized term vocabulary
+    with Zipf-distributed popularity (``sample_terms`` /
+    ``sample_subscription_terms``) and optional :class:`HotTerm`
+    timelines.  A scenario without hot terms and whose workload never
+    asks for terms consumes *exactly* the RNG stream of the
+    pure-spatial scenarios — existing goldens are untouched."""
 
     base: TwitterLikeSource
     hotspots: list[Hotspot] = field(default_factory=list)
     query_side: float = QUERY_SIDE
     membership: tuple[MembershipEvent, ...] = ()
     snapshot_every: int = 1     # probe-arrival period (ticks)
+    vocab: int = 2000           # term vocabulary size (keyword workloads)
+    hot_terms: tuple[HotTerm, ...] = ()
+
+    def __post_init__(self):
+        # Zipf popularity over the vocabulary (deterministic, no RNG)
+        ranks = np.arange(max(self.vocab, 1), dtype=np.float64)
+        w = 1.0 / np.power(ranks + 1.0, 1.05)
+        self._term_p = w / w.sum()
 
     def sample_points(self, n: int, tick: int) -> np.ndarray:
         rng = self.base.rng
         fracs = np.array([h.fraction(tick) for h in self.hotspots])
         total = float(fracs.sum())
         if total <= 0:
-            return self.base.sample_points(n, tick)
-        total = min(total, 0.95)
-        counts = (n * fracs / max(fracs.sum(), 1e-9) * total).astype(int)
-        parts = [self.base.sample_points(n - int(counts.sum()), tick)]
-        for h, c in zip(self.hotspots, counts):
-            if c > 0:
-                parts.append(h.sample_inside(rng, int(c)))
-        return np.concatenate(parts, axis=0)
+            pts = self.base.sample_points(n, tick)
+        else:
+            total = min(total, 0.95)
+            counts = (n * fracs / max(fracs.sum(), 1e-9) * total).astype(int)
+            parts = [self.base.sample_points(n - int(counts.sum()), tick)]
+            for h, c in zip(self.hotspots, counts):
+                if c > 0:
+                    parts.append(h.sample_inside(rng, int(c)))
+            pts = np.concatenate(parts, axis=0)
+        return self._redirect_hot_terms(pts, tick)
+
+    def _redirect_hot_terms(self, pts: np.ndarray, tick: int) -> np.ndarray:
+        """Geo-localize trending terms: move a ``fraction(tick)`` share
+        of the batch to each active hot term's travelling focus, so the
+        textual spike is also a (moving) spatial concentration — a
+        geo-local trend, not a uniform background hum.  Consumes RNG
+        only when a hot term is active (pure-spatial RNG streams are
+        bit-identical when ``hot_terms`` is empty)."""
+        off = 0
+        for ht in self.hot_terms:
+            f = ht.fraction(tick)
+            c = int(len(pts) * f)
+            if c <= 0:
+                continue
+            pts = pts.copy() if off == 0 else pts
+            pts[off:off + c] = ht.sample_inside(self.base.rng, c, tick)
+            off += c
+        return pts
+
+    # -- term sampling (spatial-keyword workloads only) ------------------
+    def sample_terms(self, xy: np.ndarray, tick: int,
+                     k: int) -> np.ndarray:
+        """(N, k) int64 vocabulary term ids for a tuple batch.  Tuples
+        near an active hot term's focus carry that term in slot 0 with
+        probability ``term_prob`` — the textual spike rides on the
+        spatial concentration ``_redirect_hot_terms`` created.
+        Consumes no RNG when ``k <= 0``."""
+        n = len(xy)
+        if k <= 0:
+            return np.zeros((n, 0), np.int64)
+        rng = self.base.rng
+        terms = rng.choice(self.vocab, size=(n, k),
+                           p=self._term_p).astype(np.int64)
+        for ht in self.hot_terms:
+            if ht.fraction(tick) <= 0:
+                continue
+            d2 = ((np.asarray(xy, np.float64)
+                   - ht.center(tick)) ** 2).sum(1)
+            near = d2 <= (2.5 * ht.radius) ** 2
+            tag = near & (rng.random(n) < ht.term_prob)
+            terms[tag, 0] = ht.term
+        return terms
+
+    def sample_subscription_terms(self, n: int, tick: int,
+                                  k: int) -> np.ndarray:
+        """(N, k) int64 term ids for registered subscriptions — pure
+        Zipf, so popular (low-rank) terms are heavily subscribed and a
+        hot term with a low rank hits a large standing audience.
+        Consumes no RNG when ``k <= 0``."""
+        if k <= 0:
+            return np.zeros((n, 0), np.int64)
+        return self.base.rng.choice(self.vocab, size=(n, k),
+                                    p=self._term_p).astype(np.int64)
 
     def query_arrivals(self, tick: int) -> np.ndarray:
         rects = [h.burst_queries(self.base.rng, tick, side=self.query_side)
@@ -238,10 +352,27 @@ class ReplaySource:
     query_side: float = QUERY_SIDE
     cursor: int = 0
     snapshot_every: int = 1
+    vocab: int = 2000
 
     def __post_init__(self):
         if self.base is None:
             self.base = TwitterLikeSource()
+        ranks = np.arange(max(self.vocab, 1), dtype=np.float64)
+        w = 1.0 / np.power(ranks + 1.0, 1.05)
+        self._term_p = w / w.sum()
+
+    def sample_terms(self, xy: np.ndarray, tick: int, k: int) -> np.ndarray:
+        if k <= 0:
+            return np.zeros((len(xy), 0), np.int64)
+        return self.base.rng.choice(self.vocab, size=(len(xy), k),
+                                    p=self._term_p).astype(np.int64)
+
+    def sample_subscription_terms(self, n: int, tick: int,
+                                  k: int) -> np.ndarray:
+        if k <= 0:
+            return np.zeros((n, 0), np.int64)
+        return self.base.rng.choice(self.vocab, size=(n, k),
+                                    p=self._term_p).astype(np.int64)
 
     def sample_points(self, n: int, tick: int = 0) -> np.ndarray:
         n, size = int(n), len(self.pool)
@@ -283,7 +414,9 @@ def scenario(name: str, seed: int = 0, horizon: int = 240,
              peak: float = 0.4, query_burst: int = 2000,
              query_side: float = QUERY_SIDE,
              membership: tuple[MembershipEvent, ...] = (),
-             snapshot_every: int = 1) -> ScenarioSource:
+             snapshot_every: int = 1, vocab: int = 2000,
+             hot_terms: tuple[HotTerm, ...] = (),
+             term_peak: float = 0.0) -> ScenarioSource:
     base = TwitterLikeSource(seed=seed)
     lo, hi = (0.05, 0.05), (0.80, 0.80)  # lower-left / upper-right corners
     span = (horizon // 3, horizon // 3)  # hotspot occupies the middle third
@@ -307,10 +440,25 @@ def scenario(name: str, seed: int = 0, horizon: int = 240,
         h2 = Hotspot(hi, start=start + d2, duration=d2, peak_fraction=peak,
                      temporal="normal", spatial="uniform", query_burst=query_burst)
         hs = [h1, h2]
+    elif name == "hot_hashtags":        # spatial-keyword pub/sub scenario
+        # no spatial hotspots: ALL skew is textual + the geo-local
+        # focus each trending term drags across the grid.  Two popular
+        # terms (Zipf ranks 0 and 1) trend on crossing diagonals.
+        hs = []
+        if not hot_terms:
+            st, dur = horizon // 6, 2 * horizon // 3
+            pf = term_peak if term_peak > 0 else peak
+            hot_terms = (
+                HotTerm(0, start=st, duration=dur, peak_fraction=pf / 2,
+                        path=((0.1, 0.1), (0.85, 0.85))),
+                HotTerm(1, start=st, duration=dur, peak_fraction=pf / 2,
+                        path=((0.85, 0.1), (0.1, 0.85))),
+            )
     elif name == "none":
         hs = []
     else:
         raise ValueError(f"unknown scenario {name!r}")
     return ScenarioSource(base, hs, query_side=query_side,
                           membership=tuple(membership),
-                          snapshot_every=snapshot_every)
+                          snapshot_every=snapshot_every,
+                          vocab=vocab, hot_terms=tuple(hot_terms))
