@@ -12,11 +12,20 @@ first rebalances); events/sec counts injected tuples.
 The harness *asserts* that fused and per-tick modes inject identical
 per-tick tuple counts before timing anything — the throughput numbers
 cannot silently diverge from the correctness of the fused semantics.
+
+The multi-device axis (``results["devices"]``) times the sharded plane
+at several forced host-device counts.  jax locks its device count at
+first backend init, so each count runs in a subprocess (``python -m
+benchmarks.engine_throughput --cell-devices D``); the child asserts
+sharded-vs-jax count identity before timing and prints one JSON line.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
+import subprocess
+import sys
 
 import numpy as np
 
@@ -29,25 +38,31 @@ from .common import emit
 G, M = 64, 8
 ROUND_EVERY = 8
 WINDOW = 8
-OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
-                        "BENCH_engine.json")
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+OUT_JSON = os.path.join(ROOT, "BENCH_engine.json")
 
 
-def _engine(plane: str, batch: int, pool: np.ndarray) -> StreamingEngine:
+def _engine(plane, batch: int, pool: np.ndarray, *,
+            devices: int = 0) -> StreamingEngine:
     cfg = EngineConfig(num_machines=M, cap_units=1e12,
                        lambda_max=float(batch), mem_queries=10**9,
                        round_every=ROUND_EVERY)
     base = TwitterLikeSource(seed=1)
-    src = ReplaySource(pool=pool, base=base)
+    # the sharded plane histograms at ingest: give the source the grid
+    cell_grid = G if plane == "sharded" else 0
+    src = ReplaySource(pool=pool, base=base, cell_grid=cell_grid)
+    if plane == "sharded":
+        from repro.streaming.sharded import sharded_plane
+        plane = sharded_plane(devices or None)
     eng = StreamingEngine(SwarmRouter(G, M, beta=8, data_plane=plane),
                           src, cfg)
     eng.preload_queries(base.sample_queries(2000))
     return eng
 
 
-def _events_per_s(plane: str, batch: int, pool: np.ndarray, fused: bool,
-                  warm: int, ticks: int) -> float:
-    eng = _engine(plane, batch, pool)
+def _events_per_s(plane, batch: int, pool: np.ndarray, fused: bool,
+                  warm: int, ticks: int, *, devices: int = 0) -> float:
+    eng = _engine(plane, batch, pool, devices=devices)
     runner = (lambda t: eng.run_fused(t, window=WINDOW)) if fused \
         else eng.run
     runner(warm)
@@ -72,6 +87,68 @@ def _assert_counts_equal(plane: str, batch: int, pool: np.ndarray,
                        rtol=1e-3, atol=1e-6):
         raise AssertionError(
             f"fused/per-tick processed totals diverged on {plane}")
+
+
+def _device_cell(d: int, batch: int, warm: int, ticks: int) -> dict:
+    """Run one device count in a subprocess (forced host devices must be
+    set before jax initializes its backend, which this parent process
+    has already done)."""
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+\s*", "",
+                   env.get("XLA_FLAGS", "")).strip()
+    env["XLA_FLAGS"] = \
+        f"{flags} --xla_force_host_platform_device_count={d}".strip()
+    cmd = [sys.executable, "-m", "benchmarks.engine_throughput",
+           "--cell-devices", str(d), "--batch", str(batch),
+           "--warm", str(warm), "--ticks", str(ticks)]
+    res = subprocess.run(cmd, env=env, cwd=ROOT, capture_output=True,
+                         text=True, timeout=1800)
+    if res.returncode != 0:
+        raise RuntimeError(f"devices={d} cell failed:\n"
+                           f"{res.stdout}\n{res.stderr}")
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def _cell_main(argv=None) -> None:
+    """Child entry: one sharded measurement at the forced device count.
+
+    Asserts count identity against the single-device jax fused plane
+    *before* timing, then prints one JSON result line to stdout."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell-devices", type=int, required=True)
+    ap.add_argument("--batch", type=int, default=1 << 17)
+    ap.add_argument("--warm", type=int, default=40)
+    ap.add_argument("--ticks", type=int, default=24)
+    ap.add_argument("--check-ticks", type=int, default=12)
+    args = ap.parse_args(argv)
+    d = args.cell_devices
+    from repro.launch.mesh import force_host_device_count
+    force_host_device_count(d)   # idempotent when the parent set the env
+    import jax
+    if len(jax.devices()) < d:
+        raise RuntimeError(f"requested {d} devices, jax sees "
+                           f"{len(jax.devices())}")
+    pool = TwitterLikeSource(seed=0).sample_points(1 << 20)
+    # counts identity before timing: same stream through the jax fused
+    # plane and the sharded fused plane must inject identical per-tick
+    # counts and matching processed totals (spans a rebalance round)
+    a = _engine("jax", args.batch, pool)
+    a.run_fused(args.check_ticks, window=WINDOW)
+    b = _engine("sharded", args.batch, pool, devices=d)
+    b.run_fused(args.check_ticks, window=WINDOW)
+    if a.metrics.injected != b.metrics.injected:
+        raise AssertionError(
+            f"sharded/jax injected counts diverged at devices={d}: "
+            f"{a.metrics.injected} vs {b.metrics.injected}")
+    if not np.allclose(a.metrics.throughput, b.metrics.throughput,
+                       rtol=1e-3, atol=1e-6):
+        raise AssertionError(
+            f"sharded/jax processed totals diverged at devices={d}")
+    evps = _events_per_s("sharded", args.batch, pool, True,
+                         args.warm, args.ticks, devices=d)
+    print(json.dumps({"devices": d, "batch": args.batch,
+                      "sharded_fused_evps": evps, "counts_equal": True}))
 
 
 def run(smoke: bool = False) -> dict:
@@ -99,9 +176,31 @@ def run(smoke: bool = False) -> dict:
              f"{row['fused_jax_vs_pertick_jax']:.2f}x "
              f"vs_pertick_numpy={row['fused_jax_vs_pertick_numpy']:.2f}x")
         rows.append(row)
+    # multi-device axis: sharded-plane fused throughput vs forced host
+    # device count, at the largest batch (subprocess per count; each
+    # child asserts count identity against jax fused before timing)
+    batch = sizes[-1]
+    base_evps = rows[-1]["jax_fused_evps"]
+    dev_rows = []
+    for d in ((1, 2) if smoke else (1, 2, 4, 8)):
+        cell = _device_cell(d, batch, warm, ticks)
+        cell["speedup_vs_jax_fused"] = cell["sharded_fused_evps"] / base_evps
+        emit(f"engine/sharded/devices={d}/batch={batch}",
+             1e6 / cell["sharded_fused_evps"],
+             f"events_per_s={cell['sharded_fused_evps']:.0f} "
+             f"speedup_vs_jax_fused={cell['speedup_vs_jax_fused']:.2f}x")
+        dev_rows.append(cell)
+    # forced host devices time-slice the physical cores: with fewer
+    # cores than devices the D>1 cells measure collective overhead, not
+    # scaling — record the host width so the axis reads honestly
     result = {"grid": G, "machines": M, "round_every": ROUND_EVERY,
-              "window": WINDOW, "smoke": smoke, "results": rows}
+              "window": WINDOW, "smoke": smoke, "host_cpus": os.cpu_count(),
+              "results": rows, "devices": dev_rows}
     if not smoke:
         with open(OUT_JSON, "w") as f:
             json.dump(result, f, indent=1)
     return result
+
+
+if __name__ == "__main__":
+    _cell_main()

@@ -6,6 +6,7 @@ Usage: PYTHONPATH=src python -m benchmarks.make_tables [baseline_dir] [final_dir
        PYTHONPATH=src python -m benchmarks.make_tables --queries [BENCH_queries.json]
        PYTHONPATH=src python -m benchmarks.make_tables --decisions TRACE_DIR
        PYTHONPATH=src python -m benchmarks.make_tables --pubsub [BENCH_pubsub.json]
+       PYTHONPATH=src python -m benchmarks.make_tables --sharded [BENCH_engine.json]
 """
 import glob
 import json
@@ -120,6 +121,34 @@ def pubsub_table(path="BENCH_pubsub.json"):
               f"{row['latency_ratio']:.2f}x latency")
 
 
+def sharded_table(path="BENCH_engine.json"):
+    """Sharded-plane scaling table from the engine benchmark's devices
+    axis: fused events/s per forced host-device count, speedup over the
+    single-device jax fused plane, and scaling efficiency (speedup/D
+    relative to the D=1 sharded cell)."""
+    rec = json.load(open(path))
+    rows = rec.get("devices") or []
+    if not rows:
+        print(f"no devices axis in {path}; rerun "
+              f"`python -m benchmarks.run --only engine`")
+        return
+    base = rows[0]["sharded_fused_evps"]
+    cpus = rec.get("host_cpus")
+    host = f", {cpus} host cpu{'s' if cpus != 1 else ''}" if cpus else ""
+    print(f"### Sharded data plane — fused ingest throughput vs forced "
+          f"host devices (batch={rows[0]['batch']:,}, grid {rec['grid']}, "
+          f"{rec['machines']} machines{host})\n")
+    print("| devices | events/s | vs jax fused (1 dev) | "
+          "vs sharded D=1 | scaling eff. | counts equal |")
+    print("|---" * 6 + "|")
+    for r in rows:
+        d = r["devices"]
+        rel = r["sharded_fused_evps"] / base
+        print(f"| {d} | {r['sharded_fused_evps']:,.0f} "
+              f"| {r['speedup_vs_jax_fused']:.2f}x | {rel:.2f}x "
+              f"| {rel / d:.0%} | {r['counts_equal']} |")
+
+
 def decisions_table(trace_dir):
     """Per-run planner decision timeline from the flight-recorder JSONL
     exports (``benchmarks.run --trace=DIR``): one row per round the
@@ -168,6 +197,10 @@ def main():
     if len(sys.argv) > 1 and sys.argv[1] == "--queries":
         queries_table(sys.argv[2] if len(sys.argv) > 2
                       else "BENCH_queries.json")
+        return
+    if len(sys.argv) > 1 and sys.argv[1] == "--sharded":
+        sharded_table(sys.argv[2] if len(sys.argv) > 2
+                      else "BENCH_engine.json")
         return
     if len(sys.argv) > 1 and sys.argv[1] == "--pubsub":
         pubsub_table(sys.argv[2] if len(sys.argv) > 2

@@ -11,13 +11,14 @@ Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
   queries  query×persistence workload matrix  (benchmarks/queries_mixed.py)
   dataplane NumPy vs JAX plane throughput     (benchmarks/dataplane.py)
   control  round-close + planner throughput   (benchmarks/control_plane.py)
-  engine   per-tick vs fused engine ingest    (benchmarks/engine_throughput.py)
+  engine   per-tick vs fused engine ingest +  (benchmarks/engine_throughput.py)
+           sharded-plane devices axis
   elasticity kill/join/straggler recovery     (benchmarks/elasticity.py)
   pubsub   spatial-keyword matching at 1M subs (benchmarks/pubsub.py)
 
 ``--data-plane`` selects the routing data plane for the experiment
-sections; a comma list (e.g. ``--data-plane=numpy,jax``) repeats the
-chosen sections once per plane.  ``--trace=DIR`` turns the flight
+sections; a comma list (e.g. ``--data-plane=numpy,jax,sharded``)
+repeats the chosen sections once per plane.  ``--trace=DIR`` turns the flight
 recorder on for every experiment cell and exports JSONL + Perfetto
 traces into DIR (validate/inspect with ``benchmarks.validate_trace``
 and ``benchmarks.make_tables --decisions``).

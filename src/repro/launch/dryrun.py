@@ -1,11 +1,12 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS")
-                           or "--xla_force_host_platform_device_count=512")
+from .mesh import force_host_device_count
+force_host_device_count(512, env="DRYRUN_XLA_FLAGS")
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The two lines above MUST run before any other import (jax locks the
-device count at first init); DRYRUN_XLA_FLAGS lets tests use a small
-host-device mesh.
+The two lines above MUST run before any other jax-touching import (jax
+locks the device count at first backend init); the shared helper merges
+into any user XLA_FLAGS instead of clobbering them, and
+DRYRUN_XLA_FLAGS still replaces the flags wholesale for tests that want
+a small host-device mesh.
 
 For each cell:  jit(step).lower(*abstract_args).compile()  under the
 production mesh, then record memory_analysis / cost_analysis /
@@ -18,6 +19,7 @@ Usage:
 """
 import argparse
 import json
+import os
 import time
 import traceback
 

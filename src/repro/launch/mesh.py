@@ -3,7 +3,57 @@ module never touches jax device state (required by the dry-run, which
 must set XLA_FLAGS before any jax initialization)."""
 from __future__ import annotations
 
+import os
+import re
+
 import jax
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int, env: str | None = None) -> str:
+    """Request ``n`` forced host (CPU) devices by editing ``XLA_FLAGS``.
+
+    The one sanctioned way to set up a multi-device CPU run (dry-run,
+    sharded-plane tests/benchmarks, CI smoke jobs).  Unlike the old
+    dry-run prologue this *merges*: any other flags the user already has
+    in ``XLA_FLAGS`` survive, and an existing device-count flag is
+    replaced rather than duplicated.  When ``env`` names an environment
+    variable and it is set, its value replaces ``XLA_FLAGS`` wholesale
+    (the dry-run's ``DRYRUN_XLA_FLAGS`` escape hatch keeps its original
+    full-override semantics).
+
+    Must run before jax initializes its backend — jax locks the device
+    count at first device query, not at ``import jax``.  Returns the
+    final ``XLA_FLAGS`` value.
+    """
+    if env is not None and os.environ.get(env):
+        os.environ["XLA_FLAGS"] = os.environ[env]
+        return os.environ["XLA_FLAGS"]
+    flags = os.environ.get("XLA_FLAGS", "")
+    flags = re.sub(rf"{_FORCE_FLAG}=\d+\s*", "", flags).strip()
+    os.environ["XLA_FLAGS"] = (f"{flags} {_FORCE_FLAG}={int(n)}".strip())
+    return os.environ["XLA_FLAGS"]
+
+
+def streaming_mesh(devices: int | None = None):
+    """1-D ``("machines",)`` mesh for the sharded streaming data plane.
+
+    Uses the first ``devices`` local devices (all of them by default).
+    Built directly over ``jax.devices()`` so a CPU run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` sees N
+    shards; see :func:`force_host_device_count`.
+    """
+    import numpy as np
+    devs = jax.devices()
+    if devices is not None:
+        if devices > len(devs):
+            raise ValueError(
+                f"streaming_mesh: {devices} devices requested but only "
+                f"{len(devs)} visible; set XLA_FLAGS via "
+                f"force_host_device_count() before jax initializes")
+        devs = devs[:devices]
+    return jax.sharding.Mesh(np.asarray(devs), ("machines",))
 
 
 def _mesh(shape, axes):

@@ -62,12 +62,24 @@ class TupleBatch:
     (N, K+1) int32 probe-bucket encoding (sorted, deduped, trailing
     wildcard column; ``queries.keywords.TermHasher.tuple_buckets``).
     Both stay ``None`` for pure-spatial workloads, keeping those
-    batches byte-identical to before the pub/sub subsystem."""
+    batches byte-identical to before the pub/sub subsystem.
+
+    ``cells`` is optional ingest-tier routing metadata: the flat grid
+    cell id (``row * cells_grid + col``) of each tuple on a
+    ``cells_grid``-sized uniform grid, precomputed where the data is
+    born (replay sources carry it for their static pool, exactly like
+    the coordinates themselves).  Cell ids depend only on the grid
+    geometry — never on the routing plan — so they are plan-invariant
+    and safe to precompute.  Consumers must check ``cells_grid``
+    matches their own grid before trusting ``cells``; it is a hint, and
+    ``None`` keeps the batch identical to before."""
 
     xy: np.ndarray
     tick: int = 0
     terms: np.ndarray | None = None
     buckets: np.ndarray | None = None
+    cells: np.ndarray | None = None
+    cells_grid: int = 0
 
     def __len__(self) -> int:
         return len(self.xy)
@@ -292,11 +304,17 @@ class EventStream:
 
     def tuples(self, n: int, tick: int) -> TupleBatch:
         xy = self.source.sample_points(n, tick)
+        # ingest-tier cell ids: sources that precompute them publish the
+        # slice aligned with the points they just served (ReplaySource)
+        cells = getattr(self.source, "last_cells", None)
+        cg = int(getattr(self.source, "cell_grid", 0)) if cells is not None \
+            else 0
         if self.hasher is None:
-            return TupleBatch(xy, tick)
+            return TupleBatch(xy, tick, cells=cells, cells_grid=cg)
         terms = self.source.sample_terms(xy, tick,
                                          self.workload.tuple_terms)
-        return TupleBatch(xy, tick, terms, self.hasher.tuple_buckets(terms))
+        return TupleBatch(xy, tick, terms, self.hasher.tuple_buckets(terms),
+                          cells=cells, cells_grid=cg)
 
     def next_arrival(self, tick: int) -> int | None:
         """First tick ≥ ``tick`` that will emit query/probe arrivals,

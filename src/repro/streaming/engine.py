@@ -74,6 +74,10 @@ class EngineConfig:
     round_every: int = 1            # ticks per load-balancing round
     migration_unit_cost: float = 2.0  # work units to install one moved query
     fused_window: int = 0           # >0: run() scans W-tick fused windows
+    devices: int = 0                # >0: shard the "sharded" data plane
+    #                                 over this many mesh devices (0 =
+    #                                 all visible; non-sharded planes
+    #                                 ignore the knob)
     heartbeat_timeout: int = 3      # missed beats before a machine is dead
     standby_machines: int = 0       # trailing slots that start outside
     #                                 the cluster (elastic join targets)
@@ -279,6 +283,7 @@ class StreamingEngine:
             self.tracer.record_decision(out.decision_record,
                                         tick=self.tick_no)
         self._install_moved_queries(out)
+        self._reshard_outcome(out)
         self._acc += (out.wire_bytes, out.migration_bytes,
                       out.moved_tuples, len(out.transfers))
 
@@ -406,6 +411,7 @@ class StreamingEngine:
                                migration_bytes=outcome.migration_bytes)
             # installing moved queries costs work on their receivers
             self._install_moved_queries(outcome)
+            self._reshard_outcome(outcome)
         # 8. persistence upkeep (ephemeral probe-window decay)
         self.router.end_tick()
         # 9. record.  The units-of-work factor is the query load served:
@@ -558,6 +564,15 @@ class StreamingEngine:
             kw_stack = (np.stack([bt.buckets for bt in batches])
                         if batches[0].buckets is not None else None)
             self._fused_refresh(plane)
+            # ingest-tier cell ids: forwarded only to planes that want
+            # them, and only when every staged batch carries ids for
+            # exactly this router's grid (a hint, verified here)
+            cells = None
+            if getattr(plane, "wants_cells", False):
+                g_plane = int(self._fused["host"].grid.shape[0])
+                if all(bt.cells is not None and bt.cells_grid == g_plane
+                       for bt in batches):
+                    cells = [bt.cells for bt in batches]
             fp = FusedParams(
                 cap_units=float(cfg.cap_units),
                 lambda_max=float(cfg.lambda_max), bp_high=float(cfg.bp_high),
@@ -569,7 +584,7 @@ class StreamingEngine:
                                 self.lam_bp)
             state, carry, outs, ok = plane.run_window(
                 self._fused["state"], router._cost_params(), fp, carry, xy,
-                kw_stack=kw_stack)
+                kw_stack=kw_stack, cells=cells)
             if ok:
                 self._fused["state"] = state
                 self.queue_units = np.asarray(carry.queue_units, np.float64)
@@ -634,6 +649,7 @@ class StreamingEngine:
                                    moved_queries=outcome.moved_queries,
                                    migration_bytes=outcome.migration_bytes)
                 self._install_moved_queries(outcome)
+                self._reshard_outcome(outcome)
                 mtr.wire_bytes[-1] += outcome.wire_bytes
                 mtr.migration_bytes[-1] += outcome.migration_bytes
                 mtr.moved_tuples[-1] += outcome.moved_tuples
@@ -787,11 +803,21 @@ class StreamingEngine:
         f = self._fused
         if not f or not f["host"].track_stats:
             return
-        cnr = np.asarray(f["state"].cn_rows)
-        cnc = np.asarray(f["state"].cn_cols)
+        cnr, cnc = f["plane"].collector_banks(f["state"])
         if cnr.any() or cnc.any():
             self.router.fused_absorb(cnr, cnc)
             f["state"] = f["plane"].reset_collectors(f["state"])
+
+    def _reshard_outcome(self, outcome) -> None:
+        """Physically re-home a round/recovery outcome's transferred
+        state across device shards (sharded plane; single-device planes
+        report 0 — the plan patch is the whole move).  The bytes moved
+        must equal the billed migration bytes (tests pin this)."""
+        f = self._fused
+        if not f or not isinstance(outcome, RoundOutcome) \
+                or not outcome.transfers:
+            return
+        f["plane"].reshard_transfers(f["state"], outcome, self.router)
 
 
 # ---------------------------------------------------------------------------

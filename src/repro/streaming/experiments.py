@@ -240,9 +240,15 @@ def run(exp: Experiment) -> ExperimentResult:
     engine spec carries ``telemetry.trace_dir``, the run's JSONL +
     Perfetto traces are exported there under the experiment label."""
     source = exp.scenario.build(seed=exp.seed, workload=exp.workload)
+    data_plane = exp.data_plane
+    if exp.data_plane == "sharded" and exp.engine.devices:
+        # pin the mesh width: the devices knob resolves to a shared
+        # plane instance (and folds into the label via the engine spec)
+        from .sharded import sharded_plane
+        data_plane = sharded_plane(exp.engine.devices)
     router = exp.router.build(num_machines=exp.engine.num_machines,
                               workload=exp.workload,
-                              data_plane=exp.data_plane, seed=exp.seed,
+                              data_plane=data_plane, seed=exp.seed,
                               standby=exp.engine.standby_machines)
     eng = StreamingEngine(router, source, exp.engine)
     with Stopwatch() as sw:

@@ -181,3 +181,50 @@ def host_process_tick(queue_units: np.ndarray, queue_tuples: np.ndarray,
     else:
         lam_bp = min(lam_bp + bp_inc * lambda_max, lambda_max)
     return processed_units, float(w), latency, lam_bp
+
+
+def window_histograms(xy_stack, g: int, *, devices: int = 1,
+                      wp: int | None = None, cells=None, kw_stack=None,
+                      t1: int = 0):
+    """Per-ingest-worker cell histograms of one staged window.
+
+    Splits each tick's batch into ``devices`` contiguous chunks (one per
+    ingest worker / device shard) and bincounts each chunk onto the flat
+    ``g×g`` cell grid, returning ``(devices, wp, g²)`` float32 — padded
+    with zero ticks up to ``wp``.  Summing over the worker axis
+    reproduces the single-device per-tick bincount *exactly* (integer
+    counts), which is what makes the sharded plane's owner-exchange
+    ``all_to_all`` metrics-identical to the single-device plane.
+
+    ``cells`` (optional, ``(w, b)`` flat cell ids) skips the per-window
+    point→cell pass when batches carry precomputed ingest-tier cell ids
+    (:class:`~repro.streaming.api.TupleBatch`).  For spatial-keyword
+    workloads pass ``kw_stack`` ((w, b, K+1) hashed probe buckets, −1 =
+    unused column) and ``t1 = term_buckets + 1`` to additionally get the
+    per-worker (cell × bucket) histograms ``(devices, wp, g²·t1)``.
+    Returns ``(hists, kw_hists)``; ``kw_hists`` is ``None`` when ``t1``
+    is 0.
+    """
+    from ..core import geometry
+    w, b = len(xy_stack), len(xy_stack[0])
+    wp = wp or w
+    d = max(int(devices), 1)
+    bounds = (b * np.arange(d + 1)) // d
+    hists = np.zeros((d, wp, g * g), np.float32)
+    kwh = np.zeros((d, wp, g * g * t1), np.float32) if t1 else None
+    for i in range(w):
+        if cells is not None:
+            cell = np.asarray(cells[i], np.int64)
+        else:
+            row, col = geometry.points_to_cells(
+                np.asarray(xy_stack[i], np.float32), g)
+            cell = row.astype(np.int64) * g + col
+        for k in range(d):
+            lo, hi = int(bounds[k]), int(bounds[k + 1])
+            hists[k, i] = np.bincount(cell[lo:hi], minlength=g * g)
+            if t1:
+                ids = np.asarray(kw_stack[i][lo:hi], np.int64)
+                flat = cell[lo:hi, None] * t1 + ids
+                kwh[k, i] = np.bincount(flat[ids >= 0].reshape(-1),
+                                        minlength=g * g * t1)
+    return hists, kwh

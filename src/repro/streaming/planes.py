@@ -210,12 +210,17 @@ class DataPlane:
 
     def run_window(self, state: DeviceState, cp: CostParams,
                    fp: FusedParams, carry: EngineCarry, xy_stack,
-                   kw_stack=None):
+                   kw_stack=None, cells=None):
         """Execute ``len(xy_stack)`` fused engine ticks (inject →
         route/price/collect → process → backpressure).  ``xy_stack`` is
         (W, B, 2) with B = ⌊λmax⌋ staged candidates per tick;
         ``kw_stack`` is the matching (W, B, K+1) int32 probe-bucket
         stack for spatial-keyword workloads (None otherwise).
+        ``cells`` optionally carries the (W, B) precomputed flat cell
+        ids from ingest-tier batches (``TupleBatch.cells``, engine-
+        verified against this plane's grid size); planes that set
+        ``wants_cells`` consume them, reference planes derive cells
+        themselves and ignore the hint.
         ``fp.alive`` is the effective-capacity mask (alive × capacity
         factor): elastic membership — kills, joins, stragglers — reaches
         the window's tick dynamics through that one per-window array,
@@ -227,6 +232,30 @@ class DataPlane:
         the caller must then discard all four values and replay the
         staged batches through the per-tick reference path."""
         raise NotImplementedError
+
+    # set by planes whose ``run_window`` consumes precomputed ingest
+    # cell ids (the sharded plane); the engine stages ``cells`` only for
+    # these, keeping the reference planes' call shape unchanged
+    wants_cells: bool = False
+
+    def collector_banks(self, state: DeviceState):
+        """The N′ collector banks as host ``(cn_rows, cn_cols)`` float64
+        arrays of shape (P, G+1), ready for ``Swarm.absorb_collectors``.
+        Single-device planes read the resident banks back directly; the
+        sharded plane additionally unscatters its per-device slot banks
+        into partition order."""
+        return (np.asarray(state.cn_rows), np.asarray(state.cn_cols))
+
+    def reshard_transfers(self, state, outcome, router) -> int:
+        """Physically move a round's transferred state between devices,
+        returning the bytes moved.  Single-device planes hold every
+        machine on one device — a planner transfer is purely a scatter
+        patch of the resident plan, nothing moves, so the default
+        reports 0.  The sharded plane re-homes the moved partitions'
+        query rows + store payload across device shards and returns the
+        actual payload bytes, which must equal the billed
+        ``RoundOutcome.migration_bytes`` (tested)."""
+        return 0
 
 
 # ---------------------------------------------------------------------------
@@ -411,7 +440,7 @@ class NumpyPlane(DataPlane):
 
     def run_window(self, state: DeviceState, cp: CostParams,
                    fp: FusedParams, carry: EngineCarry, xy_stack,
-                   kw_stack=None):
+                   kw_stack=None, cells=None):
         """The per-tick reference loop over pre-staged batches: same
         float64 host math, same ``np.add.at`` ordering, shared
         ``host_process_tick`` — metrics-equal to ``StreamingEngine.
@@ -1123,7 +1152,7 @@ class JaxPlane(DataPlane):
 
     def run_window(self, state: DeviceState, cp: CostParams,
                    fp: FusedParams, carry: EngineCarry, xy_stack,
-                   kw_stack=None):
+                   kw_stack=None, cells=None):
         jnp = self._jnp
         w, b = xy_stack.shape[:2]
         g = state.grid.shape[0]
@@ -1208,12 +1237,20 @@ class JaxPlane(DataPlane):
 # Registry
 # ---------------------------------------------------------------------------
 
-_PLANES: dict[str, type[DataPlane]] = {"numpy": NumpyPlane, "jax": JaxPlane}
+# "sharded" registers lazily: its module subclasses JaxPlane (import
+# cycle with this module at import time) and building it touches jax
+# device state, which numpy-only users must never pay for
+_PLANES: dict[str, type[DataPlane] | None] = {
+    "numpy": NumpyPlane, "jax": JaxPlane, "sharded": None}
 
 
 @functools.lru_cache(maxsize=None)
 def _plane_singleton(name: str) -> DataPlane:
-    return _PLANES[name]()
+    cls = _PLANES[name]
+    if cls is None:
+        from .sharded import ShardedJaxPlane as cls
+        _PLANES[name] = cls
+    return cls()
 
 
 def get_plane(plane: "DataPlane | str | None") -> DataPlane:

@@ -353,6 +353,13 @@ class ReplaySource:
     cursor: int = 0
     snapshot_every: int = 1
     vocab: int = 2000
+    # grid size for precomputed ingest-tier cell ids (0 = off).  Cell
+    # ids depend only on the grid geometry, never on the routing plan,
+    # so computing them once at pool-construction time is static data
+    # prep — exactly like the pooled points themselves.  Batches then
+    # carry ``TupleBatch.cells`` and cell-hungry planes (the sharded
+    # device plane) skip the per-window point→cell pass.
+    cell_grid: int = 0
 
     def __post_init__(self):
         if self.base is None:
@@ -360,6 +367,14 @@ class ReplaySource:
         ranks = np.arange(max(self.vocab, 1), dtype=np.float64)
         w = 1.0 / np.power(ranks + 1.0, 1.05)
         self._term_p = w / w.sum()
+        self.last_cells: np.ndarray | None = None
+        self._cells: np.ndarray | None = None
+        if self.cell_grid:
+            from ..core import geometry
+            g = int(self.cell_grid)
+            row, col = geometry.points_to_cells(
+                np.asarray(self.pool, np.float32), g)
+            self._cells = row.astype(np.int64) * g + col
 
     def sample_terms(self, xy: np.ndarray, tick: int, k: int) -> np.ndarray:
         if k <= 0:
@@ -379,10 +394,15 @@ class ReplaySource:
         lo = self.cursor
         self.cursor = (lo + n) % size
         if lo + n <= size:
+            if self._cells is not None:
+                self.last_cells = self._cells[lo:lo + n]
             return self.pool[lo:lo + n]
         # wraps (possibly several times for n > pool size): gather by
         # modular index so the batch always has exactly n points
-        return self.pool[(lo + np.arange(n)) % size]
+        idx = (lo + np.arange(n)) % size
+        if self._cells is not None:
+            self.last_cells = self._cells[idx]
+        return self.pool[idx]
 
     def sample_queries(self, n: int, tick: int = 0) -> np.ndarray:
         return self.base.sample_queries(n, side=self.query_side, tick=tick)

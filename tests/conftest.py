@@ -1,0 +1,10 @@
+"""Session setup: ``REPRO_HOST_DEVICES=N`` forces N host (CPU) devices
+before jax initializes its backend, so the same test suite exercises
+the sharded data plane's real cross-device collectives (CI runs a
+subset at N=4).  Unset, jax sees the machine as-is."""
+import os
+
+_n = os.environ.get("REPRO_HOST_DEVICES")
+if _n:
+    from repro.launch.mesh import force_host_device_count
+    force_host_device_count(int(_n))

@@ -1,0 +1,193 @@
+"""Multi-device sharded data plane: metric parity with the reference
+planes across rebalances, membership failures and fused window
+boundaries; transfer-as-resharding billing; slot-bank layout units.
+
+Runs on however many devices are visible — 1 by default, or N under
+``REPRO_HOST_DEVICES=N`` (see conftest.py), which is how CI exercises
+the real all-to-all paths on a forced 4-device host mesh."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.queries import WorkloadSpec  # noqa: E402
+from repro.streaming import (EngineConfig, Experiment, MembershipEvent,  # noqa: E402
+                             RouterSpec, ScenarioSpec, StreamingEngine, run)
+from repro.streaming.sharded import (ShardedJaxPlane, assign_slots,  # noqa: E402
+                                     machine_homes, sharded_plane)
+
+G, M = 16, 8
+
+# low capacity so backpressure engages, round_every inside the fused
+# window cadence, and a kill/join pair mid-run: one timeline crosses a
+# rebalance transfer, a membership failure recovery and several fused
+# window boundaries.  Fused staging semantics differ from the per-tick
+# loop under backpressure (documented in test_fused), so parity is
+# fused-vs-fused.
+CFG = EngineConfig(num_machines=M, cap_units=3e3, lambda_max=2000,
+                   mem_queries=10**8, round_every=8, fused_window=8)
+SCEN = ScenarioSpec("normal_normal", ticks=48, preload_queries=800,
+                    query_burst=200, peak=0.6,
+                    membership=(MembershipEvent(20, "fail", 3),
+                                MembershipEvent(34, "join", 3)))
+
+EXACT = ("injected", "q_total", "transfers", "migration_bytes",
+         "moved_tuples", "wire_bytes")
+
+
+def _metrics(plane: str, scen=SCEN, workload=None, cfg=CFG, seed=0):
+    kw = {"workload": workload} if workload is not None else {}
+    exp = Experiment(router=RouterSpec("swarm", grid_size=G, beta=4),
+                     scenario=scen, engine=cfg, data_plane=plane,
+                     seed=seed, **kw)
+    return run(exp).metrics.asarrays()
+
+
+def _assert_parity(ref: dict, got: dict, rtol=1e-3):
+    for name in ref:
+        a = np.asarray(ref[name], np.float64)
+        b = np.asarray(got[name], np.float64)
+        if name in EXACT:
+            np.testing.assert_array_equal(a, b, err_msg=name)
+        else:
+            np.testing.assert_allclose(a, b, rtol=rtol, atol=1e-6,
+                                       err_msg=name)
+
+
+def test_sharded_matches_numpy_through_rebalance_and_failure():
+    """Golden parity: same timeline through the NumPy fused plane and
+    the sharded plane — tick dynamics, backpressure replay and the
+    membership scatter patches must agree on every metric."""
+    _assert_parity(_metrics("numpy"), _metrics("sharded"))
+
+
+def test_sharded_matches_jax_plane():
+    _assert_parity(_metrics("jax"), _metrics("sharded"))
+
+
+def test_sharded_keyword_parity():
+    """Spatio-textual branch: per-shard keyword histograms + the 4-D
+    owner all-to-all must reproduce the single-device deliveries."""
+    wl = WorkloadSpec(query_model="spatial_keyword")
+    scen = ScenarioSpec("hot_hashtags", ticks=24, preload_queries=400,
+                        query_burst=100, hot_terms=2, term_peak=0.4)
+    cfg = EngineConfig(num_machines=M, cap_units=1e9, lambda_max=2000,
+                       mem_queries=10**8, round_every=8, fused_window=8)
+    _assert_parity(_metrics("numpy", scen, wl, cfg),
+                   _metrics("sharded", scen, wl, cfg), rtol=1e-4)
+
+
+def test_reshard_bytes_match_billed_migration_bytes():
+    """The planner bills migration_bytes per transfer; the sharded plane
+    moves exactly that many bytes across devices.  A fresh plane
+    instance isolates the running totals from other tests."""
+    pl = ShardedJaxPlane()
+    src = SCEN.build(seed=0)
+    router = RouterSpec("swarm", grid_size=G, beta=4).build(
+        num_machines=M, data_plane=pl, seed=0)
+    eng = StreamingEngine(router, src, CFG)
+    preload = eng.stream.preload(SCEN.preload_queries)
+    if preload is not None:
+        router.ingest(preload)
+    metrics = eng.run(SCEN.ticks)
+    billed = int(sum(metrics.migration_bytes))
+    assert billed > 0, "scenario produced no transfers; parity is vacuous"
+    assert pl.reshard_bytes_total == billed
+
+
+def test_sharded_plane_factory_shared():
+    assert sharded_plane() is sharded_plane()
+    assert sharded_plane(1).devices == 1
+
+
+# ---------------------------------------------------------------------------
+# slot-bank layout units
+# ---------------------------------------------------------------------------
+
+def test_machine_homes_contiguous_blocks():
+    assert machine_homes(8, 4).tolist() == [0, 0, 1, 1, 2, 2, 3, 3]
+    assert machine_homes(8, 1).tolist() == [0] * 8
+    assert machine_homes(3, 2).tolist() == [0, 0, 1]
+    assert machine_homes(8, 8).tolist() == list(range(8))
+
+
+def test_assign_slots_roundtrip():
+    rng = np.random.default_rng(0)
+    d = 4
+    owner = rng.integers(0, M, size=300).astype(np.int32)
+    home = machine_homes(M, d)
+    slot_pid, pid_slot, s = assign_slots(owner, home, d)
+    assert slot_pid.shape == (d, s) and s % 64 == 0
+    # every pid owns exactly one slot on its home device
+    dev = home[owner]
+    for p in range(len(owner)):
+        assert slot_pid[dev[p], pid_slot[p]] == p
+    # per-device occupancy matches, the rest is empty
+    occupancy = np.bincount(dev, minlength=d)
+    np.testing.assert_array_equal((slot_pid >= 0).sum(axis=1), occupancy)
+
+
+def test_assign_slots_unowned_pids_still_slotted():
+    """Unallocated capacity pids (owner −1 clipped to machine 0's home)
+    get slots too: zero qres/counts make pricing them exact and the
+    bank size independent of n_alloc."""
+    owner = np.array([-1, -1, 0, 7], np.int32)
+    home = machine_homes(M, 4)
+    slot_pid, pid_slot, s = assign_slots(owner, home, 4)
+    assert sorted(slot_pid[slot_pid >= 0].tolist()) == [0, 1, 2, 3]
+
+
+def test_collector_banks_unscatter():
+    """collector_banks returns partition-ordered (P, G+1) rows no matter
+    which device each partition's bank lives on."""
+    pl = sharded_plane()
+    d = pl.devices
+    p, g1 = 24, 5
+    owner = np.arange(p, dtype=np.int32) % M
+    home = machine_homes(M, d)
+    slot_pid, pid_slot, s = assign_slots(owner, home, d)
+    rows = np.zeros((d, s, g1), np.float32)
+    valid = slot_pid >= 0
+    rows[valid] = np.asarray(slot_pid[valid], np.float32)[:, None] + 1.0
+
+    class _State:
+        pass
+
+    st = _State()
+    st.slot_pid = slot_pid
+    st.cn_rows = rows
+    st.cn_cols = rows * 2.0
+    st.owner = owner
+    out_r, out_c = pl.collector_banks(st)
+    np.testing.assert_array_equal(out_r[:, 0], np.arange(p) + 1.0)
+    np.testing.assert_array_equal(out_c, out_r * 2.0)
+
+
+# ---------------------------------------------------------------------------
+# XLA_FLAGS helper
+# ---------------------------------------------------------------------------
+
+def test_force_host_device_count_merges(monkeypatch):
+    from repro.launch.mesh import force_host_device_count
+    monkeypatch.setenv("XLA_FLAGS",
+                       "--xla_cpu_enable_fast_math=true "
+                       "--xla_force_host_platform_device_count=2")
+    out = force_host_device_count(8)
+    assert "--xla_cpu_enable_fast_math=true" in out
+    assert out.count("--xla_force_host_platform_device_count") == 1
+    assert "--xla_force_host_platform_device_count=8" in out
+
+
+def test_force_host_device_count_env_override(monkeypatch):
+    from repro.launch.mesh import force_host_device_count
+    monkeypatch.setenv("DRYRUN_XLA_FLAGS", "--xla_custom=1")
+    monkeypatch.setenv("XLA_FLAGS", "--xla_other=2")
+    assert force_host_device_count(4, env="DRYRUN_XLA_FLAGS") \
+        == "--xla_custom=1"
+
+
+def test_force_host_device_count_fresh(monkeypatch):
+    from repro.launch.mesh import force_host_device_count
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    assert force_host_device_count(4) \
+        == "--xla_force_host_platform_device_count=4"
