@@ -1,0 +1,219 @@
+"""Geo-distributed robustness benchmark: two regions, chaotic links
+(BENCH_geo.json).
+
+Machines are split across two regions joined by 25 ms / 10 ms-jitter
+links at 10 ms ticks (``repro.ft.two_region``), with a seeded chaos
+schedule dropping/delaying heartbeats, interrupting mid-flight
+transfers, and — the geo signature fault — *correlated WAN flaps*:
+short partitions that cut the whole far region at once.  Three systems
+run the same skewed stream through ``run_suite`` on both data planes:
+
+  swarm_aware     link-aware planner + adaptive failure detector +
+                  cost-trend trigger (the full DESIGN.md §12 stack)
+  swarm_blind     the paper's SWARM with the fixed missed-beat counter
+                  and latency-blind pair matching — same links, same
+                  chaos, no geo awareness
+  swarm_static    history-balanced static grid (never rebalances)
+
+The score is *sustained throughput* — mean delivered tuples/tick after
+warm-up, with small per-machine buffers (``bp_high``) so overload
+throttles the source instead of hiding in unbounded queues.  Each WAN
+flap silences the far region for a few beats: the fixed detector
+declares all of it dead, evacuating four healthy machines onto the
+near region (overload → backpressure → lost input) and paying the cold
+checkpoint-restore rejoin when the flap heals; the adaptive detector's
+learned threshold rides the flap out.  The aware stack must beat both
+baselines with **zero** false suspicions across the whole chaos sweep.
+Same seed ⇒ identical fault schedule and bit-identical metrics (pinned
+here on the NumPy plane before anything is scored).
+
+A machine-count sweep saturates the same topology (capacity probe at
+high offered load) and records the scalability knee: the first machine
+count whose marginal sustained throughput per added machine drops
+below half the ideal linear slope.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.ft import ChaosSpec, two_region
+from repro.streaming import (EngineConfig, Experiment, RouterSpec,
+                             ScenarioSpec, run_suite, sweep)
+from repro.streaming import run as run_experiment
+from repro.telemetry import TelemetryConfig
+
+from .common import emit, trace_dir
+
+G, M = 64, 8
+TICK_MS = 10.0               # 25 ms inter-region ≈ 2.5 ticks one way
+INTER_MS, JITTER_MS = 25.0, 10.0
+LAMBDA = 1700                # ≈ 0.85 utilization when healthy
+WARMUP_FRAC = 0.25           # sustained = mean throughput after warm-up
+KNEE_MACHINES = (4, 8, 16)
+KNEE_LAMBDA = 6000           # saturating probe: delivered ≈ capacity(m)
+KNEE_FRAC = 0.5              # knee ⇒ marginal gain < 50 % of ideal
+OUT_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "BENCH_geo.json")
+
+
+def links(m: int):
+    return two_region(m, inter_ms=INTER_MS, jitter_ms=JITTER_MS,
+                      tick_ms=TICK_MS, seed=1)
+
+
+def chaos(ticks: int, m: int = M) -> ChaosSpec:
+    """Beat drops + delays over the scored window, transfer interrupts,
+    and correlated WAN flaps cutting the whole far region (the back
+    half of ``two_region``'s split).  Flap length 3 keeps the silence
+    inside the adaptive detector's learned threshold while the fixed
+    counter trips every time; the faults start after warm-up so every
+    evacuate/rejoin cycle lands in the scored window."""
+    start = max(8, ticks // 4 + 4)
+    flaps = max(2, (ticks - start) // 23)
+    return ChaosSpec(seed=4, ticks=ticks, start=start, drop_beats=0.02,
+                     delay_beats=0.04, max_delay=1, partitions=flaps,
+                     partition_len=3, interrupts=3,
+                     partition_machines=tuple(range(m // 2, m)),
+                     partition_correlated=True, partition_min_gap=16)
+
+
+def _spec(ticks: int, m: int = M) -> ScenarioSpec:
+    return ScenarioSpec("two_overlapping", ticks=ticks,
+                        preload_queries=2000, query_burst=0, peak=0.2,
+                        chaos=chaos(ticks, m))
+
+
+def _cfg(m: int, *, adaptive: bool, lam: float = LAMBDA,
+         fused: bool = True, traced: bool = True) -> EngineConfig:
+    tel = TelemetryConfig(trace_dir=trace_dir()) \
+        if traced and trace_dir() else None
+    return EngineConfig(num_machines=m, cap_units=1.5e4, lambda_max=lam,
+                        mem_queries=12_000, round_every=1, bp_high=0.5,
+                        heartbeat_timeout=3,
+                        fused_window=8 if fused else 0,
+                        links=links(m), adaptive_detector=adaptive,
+                        telemetry=tel)
+
+
+# system name -> (router spec, adaptive detector?)
+SYSTEMS = {
+    "swarm_aware": (RouterSpec("swarm", beta=4, max_pairs=2,
+                               link_aware=True, trend_window=6), True),
+    "swarm_blind": (RouterSpec("swarm", beta=4, max_pairs=2), False),
+    "static_history": (RouterSpec("static_history"), False),
+}
+
+
+def sustained(a: dict) -> float:
+    thr = np.asarray(a["throughput"], np.float64)
+    return float(thr[int(len(thr) * WARMUP_FRAC):].mean())
+
+
+def _summarize(a: dict) -> dict:
+    return {
+        "sustained_throughput": sustained(a),
+        "migration_bytes": int(np.asarray(a["migration_bytes"]).sum()),
+        "retried_transfers": int(np.asarray(a["retried_transfers"]).sum()),
+        "aborted_transfers": int(np.asarray(a["aborted_transfers"]).sum()),
+        "false_suspicions": int(np.asarray(a["false_suspicions"]).sum()),
+    }
+
+
+def _assert_deterministic(ticks: int) -> None:
+    """Same seed ⇒ identical fault schedule and identical metrics, down
+    to the last retried transfer (NumPy plane: bitwise)."""
+    exp = Experiment(router=SYSTEMS["swarm_aware"][0],
+                     scenario=_spec(ticks),
+                     engine=_cfg(M, adaptive=True), data_plane="numpy")
+    a = run_experiment(exp).metrics.asarrays()
+    b = run_experiment(exp).metrics.asarrays()
+    for name in a:
+        np.testing.assert_array_equal(a[name], b[name], err_msg=name)
+    emit("geo/deterministic", 0.0, "same-seed==bitwise")
+
+
+def knee_sweep(ticks: int, machines=KNEE_MACHINES) -> dict:
+    """Sustained throughput of the aware stack vs machine count on the
+    fixed two-region topology, probed at saturating offered load; the
+    knee is the first count whose marginal gain per added machine drops
+    below ``KNEE_FRAC`` of the ideal linear slope."""
+    spec, _ = SYSTEMS["swarm_aware"]
+    thr = {}
+    for m in machines:
+        # untraced: the knee probe runs saturated and is not part of
+        # the chaos trace gate (validate_trace --match link_aware)
+        exp = Experiment(router=spec, scenario=_spec(ticks, m),
+                         engine=_cfg(m, adaptive=True, lam=KNEE_LAMBDA,
+                                     traced=False),
+                         data_plane="numpy")
+        thr[m] = sustained(run_experiment(exp).metrics.asarrays())
+        emit(f"geo/knee/m{m}", 0.0, f"thr={thr[m]:.0f}")
+    knee = None
+    ms = list(machines)
+    ideal_slope = thr[ms[0]] / ms[0]
+    for prev, cur in zip(ms, ms[1:]):
+        marginal = (thr[cur] - thr[prev]) / (cur - prev)
+        if marginal < KNEE_FRAC * ideal_slope:
+            knee = cur
+            break
+    emit("geo/knee", 0.0, f"knee={knee}")
+    return {"machines": ms, "sustained": {str(m): thr[m] for m in ms},
+            "knee": knee}
+
+
+def run(smoke: bool = False) -> dict:
+    ticks = 48 if smoke else 160
+    _assert_deterministic(min(ticks, 48))
+    rows = []
+    for plane in ("numpy", "jax"):
+        row: dict = {"plane": plane, "ticks": ticks}
+        for name, (spec, adaptive) in SYSTEMS.items():
+            exps = sweep(routers=[spec], scenarios=[_spec(ticks)],
+                         engine=_cfg(M, adaptive=adaptive),
+                         data_planes=(plane,))
+            res = next(iter(run_suite(exps).values()))
+            row[name] = _summarize(res.asarrays())
+            emit(f"geo/{plane}/{name}", res.wall_s * 1e6,
+                 " ".join(f"{k}={v:.0f}" if isinstance(v, float)
+                          else f"{k}={v}" for k, v in row[name].items()))
+        aware, blind = row["swarm_aware"], row["swarm_blind"]
+        static = row["static_history"]
+        row["speedup_vs_blind"] = (aware["sustained_throughput"]
+                                   / max(blind["sustained_throughput"], 1e-9))
+        row["speedup_vs_static"] = (aware["sustained_throughput"]
+                                    / max(static["sustained_throughput"],
+                                          1e-9))
+        rows.append(row)
+        assert aware["false_suspicions"] == 0, (
+            f"adaptive detector false-suspected a live machine ({plane}): "
+            f"{aware['false_suspicions']}")
+        assert blind["false_suspicions"] > 0, (
+            f"chaos sweep did not bite: the fixed detector saw no false "
+            f"suspicion ({plane})")
+        if not smoke:
+            assert aware["sustained_throughput"] \
+                > blind["sustained_throughput"], (
+                    f"latency-aware SWARM did not beat latency-blind "
+                    f"({plane}): {aware['sustained_throughput']:.0f} vs "
+                    f"{blind['sustained_throughput']:.0f}")
+            assert aware["sustained_throughput"] \
+                > static["sustained_throughput"], (
+                    f"latency-aware SWARM did not beat static partitioning "
+                    f"({plane}): {aware['sustained_throughput']:.0f} vs "
+                    f"{static['sustained_throughput']:.0f}")
+    result = {"grid": G, "machines": M, "tick_ms": TICK_MS,
+              "inter_ms": INTER_MS, "jitter_ms": JITTER_MS,
+              "lambda": LAMBDA, "smoke": smoke,
+              "chaos": dataclasses.asdict(chaos(ticks)),
+              "results": rows,
+              "knee": knee_sweep(min(ticks, 96),
+                                 KNEE_MACHINES[:2] if smoke
+                                 else KNEE_MACHINES)}
+    if not smoke:
+        with open(OUT_JSON, "w") as f:
+            json.dump(result, f, indent=1)
+    return result

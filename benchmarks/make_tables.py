@@ -7,6 +7,7 @@ Usage: PYTHONPATH=src python -m benchmarks.make_tables [baseline_dir] [final_dir
        PYTHONPATH=src python -m benchmarks.make_tables --decisions TRACE_DIR
        PYTHONPATH=src python -m benchmarks.make_tables --pubsub [BENCH_pubsub.json]
        PYTHONPATH=src python -m benchmarks.make_tables --sharded [BENCH_engine.json]
+       PYTHONPATH=src python -m benchmarks.make_tables --geo [BENCH_geo.json]
 """
 import glob
 import json
@@ -149,6 +150,43 @@ def sharded_table(path="BENCH_engine.json"):
               f"| {rel / d:.0%} | {r['counts_equal']} |")
 
 
+def geo_table(path="BENCH_geo.json"):
+    """Two-region chaos comparison from benchmarks/geo.py: sustained
+    throughput of the geo-aware stack vs the latency-blind SWARM and
+    the static grid, plus the machine-count scalability knee."""
+    rec = json.load(open(path))
+    ch = rec["chaos"]
+    print(f"### Geo robustness — {rec['machines']} machines in two "
+          f"regions ({rec['inter_ms']:.0f} ms / {rec['jitter_ms']:.0f} ms "
+          f"jitter links, {rec['tick_ms']:.0f} ms ticks), "
+          f"λ={rec['lambda']}, chaos seed {ch['seed']} "
+          f"({ch['partitions']} correlated WAN flaps × "
+          f"{ch['partition_len']} ticks, drops {ch['drop_beats']:.0%}, "
+          f"delays {ch['delay_beats']:.0%}, {ch['interrupts']} "
+          f"interrupts)\n")
+    print("| plane | system | sustained thr (tuples/tick) | "
+          "false suspicions | retried | aborted | migration MB |")
+    print("|---" * 7 + "|")
+    for row in rec["results"]:
+        for system in ("swarm_aware", "swarm_blind", "static_history"):
+            r = row[system]
+            print(f"| {row['plane']} | {system} "
+                  f"| {r['sustained_throughput']:.0f} "
+                  f"| {r['false_suspicions']} | {r['retried_transfers']} "
+                  f"| {r['aborted_transfers']} "
+                  f"| {r['migration_bytes'] / 1e6:.2f} |")
+    print()
+    for row in rec["results"]:
+        print(f"* {row['plane']}: aware vs blind = "
+              f"{row['speedup_vs_blind']:.2f}x, aware vs static = "
+              f"{row['speedup_vs_static']:.2f}x sustained throughput")
+    knee = rec["knee"]
+    pts = ", ".join(f"{m}→{knee['sustained'][m]:.0f}"
+                    for m in map(str, knee["machines"]))
+    print(f"* scalability knee at {knee['knee']} machines "
+          f"(saturated sustained throughput: {pts})")
+
+
 def decisions_table(trace_dir):
     """Per-run planner decision timeline from the flight-recorder JSONL
     exports (``benchmarks.run --trace=DIR``): one row per round the
@@ -205,6 +243,10 @@ def main():
     if len(sys.argv) > 1 and sys.argv[1] == "--pubsub":
         pubsub_table(sys.argv[2] if len(sys.argv) > 2
                      else "BENCH_pubsub.json")
+        return
+    if len(sys.argv) > 1 and sys.argv[1] == "--geo":
+        geo_table(sys.argv[2] if len(sys.argv) > 2
+                  else "BENCH_geo.json")
         return
     base_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
     final_dir = sys.argv[2] if len(sys.argv) > 2 else "artifacts/dryrun_final"

@@ -15,6 +15,8 @@ Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
            sharded-plane devices axis
   elasticity kill/join/straggler recovery     (benchmarks/elasticity.py)
   pubsub   spatial-keyword matching at 1M subs (benchmarks/pubsub.py)
+  geo      two-region chaos: link-aware SWARM  (benchmarks/geo.py)
+           vs latency-blind vs static
 
 ``--data-plane`` selects the routing data plane for the experiment
 sections; a comma list (e.g. ``--data-plane=numpy,jax,sharded``)
@@ -32,7 +34,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: capability,hotspots,utilization,"
                          "overheads,stats_network,kernels,roofline,queries,"
-                         "dataplane,control,engine,elasticity,pubsub")
+                         "dataplane,control,engine,elasticity,pubsub,geo")
     ap.add_argument("--smoke", action="store_true",
                     help="short timelines (CI sanity run)")
     ap.add_argument("--data-plane", default="numpy",
@@ -42,8 +44,9 @@ def main() -> None:
                          "every experiment cell into DIR")
     args = ap.parse_args()
     from . import (capability, common, control_plane, dataplane, elasticity,
-                   engine_throughput, hotspots, kernels, overheads, pubsub,
-                   queries_mixed, roofline, stats_network, utilization)
+                   engine_throughput, geo, hotspots, kernels, overheads,
+                   pubsub, queries_mixed, roofline, stats_network,
+                   utilization)
     sections = {
         "capability": capability.run,
         "hotspots": hotspots.run,
@@ -62,6 +65,9 @@ def main() -> None:
         # runs both data planes internally; asserts hashed-matching
         # collision bound, plane parity and fused ≡ per-tick first
         "pubsub": pubsub.run,
+        # runs both data planes internally; pins same-seed fault-schedule
+        # determinism before scoring the two-region chaos comparison
+        "geo": geo.run,
     }
     # sections whose results depend on the routing data plane; the rest
     # run once regardless of how many planes were requested

@@ -5,11 +5,19 @@ Perfetto schema (``repro/telemetry/perfetto_schema.json``) and scans the
 paired ``*.jsonl`` files for planner DecisionRecords, requiring at least
 ``--min-rebalances`` records that actually moved partitions.
 
+The chaos gates ride the same JSONL scan: ``--min-retries`` requires at
+least that many ``transfer_retry`` instant events (proof the chaos
+schedule actually interrupted a transfer and the engine re-queued it),
+and ``--max-false-suspicions`` caps ``false_suspicion`` instants (an
+adaptive-detector run over jittery links must not suspect live
+machines — CI pins the cap at 0).
+
 Usage: PYTHONPATH=src python -m benchmarks.validate_trace DIR \
-           [--min-rebalances N]
+           [--min-rebalances N] [--min-retries N] \
+           [--max-false-suspicions N]
 
 Exit status is non-zero on any schema violation, unparseable file, or a
-rebalance count below the floor.
+count outside the configured bounds.
 """
 from __future__ import annotations
 
@@ -22,11 +30,21 @@ import sys
 from repro.telemetry import validate_trace_file
 
 
-def validate_dir(directory: str, min_rebalances: int = 0) -> tuple[int, int]:
+def validate_dir(directory: str, min_rebalances: int = 0,
+                 min_retries: int = 0,
+                 max_false_suspicions: int | None = None,
+                 match: str = "") -> tuple[int, int]:
     """Returns (num_errors, num_rebalance_records); prints per-file
-    summaries as it goes."""
-    traces = sorted(glob.glob(os.path.join(directory, "*.trace.json")))
-    jsonls = sorted(glob.glob(os.path.join(directory, "*.jsonl")))
+    summaries as it goes.  ``match`` restricts the scan to trace files
+    whose name contains the substring — the chaos gate validates the
+    adaptive-detector cells without tripping over the latency-blind
+    baseline's (expected) false suspicions in the same directory."""
+    traces = sorted(p for p in glob.glob(
+        os.path.join(directory, "*.trace.json"))
+        if match in os.path.basename(p))
+    jsonls = sorted(p for p in glob.glob(
+        os.path.join(directory, "*.jsonl"))
+        if match in os.path.basename(p))
     if not traces:
         print(f"validate_trace: no *.trace.json under {directory}")
         return 1, 0
@@ -40,6 +58,8 @@ def validate_dir(directory: str, min_rebalances: int = 0) -> tuple[int, int]:
         errors += len(errs)
     rebalances = 0
     decisions = 0
+    retries = 0
+    false_susp = 0
     for path in jsonls:
         with open(path) as f:
             for line in f:
@@ -49,16 +69,30 @@ def validate_dir(directory: str, min_rebalances: int = 0) -> tuple[int, int]:
                     print(f"{os.path.basename(path)}: unparseable line")
                     errors += 1
                     continue
+                if row.get("kind") == "instant":
+                    if row.get("name") == "transfer_retry":
+                        retries += 1
+                    elif row.get("name") == "false_suspicion":
+                        false_susp += 1
                 if row.get("kind") != "decision":
                     continue
                 decisions += 1
                 if row["record"].get("transfers"):
                     rebalances += 1
     print(f"validate_trace: {len(traces)} traces, {decisions} decision "
-          f"records, {rebalances} with transfers, {errors} errors")
+          f"records, {rebalances} with transfers, {retries} transfer "
+          f"retries, {false_susp} false suspicions, {errors} errors")
     if rebalances < min_rebalances:
         print(f"validate_trace: expected >= {min_rebalances} rebalance "
               f"records, found {rebalances}")
+        errors += 1
+    if retries < min_retries:
+        print(f"validate_trace: expected >= {min_retries} transfer_retry "
+              f"events, found {retries}")
+        errors += 1
+    if max_false_suspicions is not None and false_susp > max_false_suspicions:
+        print(f"validate_trace: expected <= {max_false_suspicions} "
+              f"false_suspicion events, found {false_susp}")
         errors += 1
     return errors, rebalances
 
@@ -69,8 +103,19 @@ def main() -> None:
     ap.add_argument("--min-rebalances", type=int, default=0,
                     help="fail unless this many DecisionRecords moved "
                          "partitions")
+    ap.add_argument("--min-retries", type=int, default=0,
+                    help="fail unless this many transfer_retry instants "
+                         "were traced (chaos smoke)")
+    ap.add_argument("--max-false-suspicions", type=int, default=None,
+                    help="fail if more false_suspicion instants were "
+                         "traced (adaptive-detector gate)")
+    ap.add_argument("--match", default="",
+                    help="only scan trace files whose name contains this "
+                         "substring (e.g. link_aware)")
     args = ap.parse_args()
-    errors, _ = validate_dir(args.directory, args.min_rebalances)
+    errors, _ = validate_dir(args.directory, args.min_rebalances,
+                             args.min_retries, args.max_false_suspicions,
+                             args.match)
     sys.exit(1 if errors else 0)
 
 

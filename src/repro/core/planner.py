@@ -314,11 +314,17 @@ def _plan_evacuation(agg: RoundAggregate, failed: int, dead,
     return RoundPlan(agg.costs, transfers, cands)
 
 
+# cost-units price of one link_cost unit (≈ one tick of one-way link
+# latency), as a fraction of the mean live-machine cost — see the
+# ``link_cost`` paragraph of plan_round
+_LINK_PRICE = 0.05
+
+
 def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
                dead=frozenset(), max_pairs: int = 1,
                use_binary_search: bool = False, cost_fn=product_cost,
                plane=None, evacuate: int | None = None,
-               cap_factor=None) -> RoundPlan:
+               cap_factor=None, link_cost=None) -> RoundPlan:
     """Greedy multi-pair matching (DESIGN.md §5).
 
     Machines are ranked by cost once; the scan walks overloaded
@@ -338,6 +344,21 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
     factor.  Without this a freshly-drained straggler (measured cost
     ≈ 0) looks like the cheapest m_L and the planner would pile work
     onto the slowest machine.
+
+    ``link_cost`` (optional (M, M)) extends the capacity factors from
+    per-machine to per-link: entry ``[h, l]`` is the *relative* cost of
+    shipping state ``h → l`` (e.g. expected link latency in ticks, from
+    ``ft.links.LinkModel.cost_matrix``).  Receivers are then chosen to
+    minimize ``C(m_L) + link_cost[m_H, m_L]·κ·C̄`` instead of blindly
+    taking the globally cheapest machine — a same-region receiver wins
+    unless the machine behind the 25 ms link is genuinely cheaper by
+    more than the latency price — and the viability/subset bound
+    prices the penalty in, so a pair whose cost gap is smaller than
+    its link penalty is skipped (``reason="link_cost"``).  κ
+    (``_LINK_PRICE``) keeps the penalty a *tiebreaker*: pricing a
+    latency tick at the full mean machine cost would ban cross-region
+    moves outright and trap hot-region load on hot-region machines.
+    ``None`` keeps the exact paper scan.
 
     ``evacuate`` switches the planner to the emergency recovery mode of
     §4.1.1: *every* live partition of the (crash-stopped or departing)
@@ -367,21 +388,43 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
     slots: list[Transfer | None] = []
     pending_split: list[tuple] = []  # m_h, m_l, pid, base, 1/f_h, 1/f_l
     cands: list[CandidateDecision] = []   # flight-recorder trail
+    # link penalties priced in cost units: relative latency × κ × the
+    # mean live-machine cost, so the tradeoff scales with the workload
+    # but stays a tiebreaker (a ~3-tick inter-region link costs ~15 %
+    # of the mean load, not 3× it)
+    lc_scale = 0.0
+    if link_cost is not None:
+        pos = costs[np.asarray(order)]
+        pos = pos[pos > 0]
+        lc_scale = _LINK_PRICE * float(pos.mean()) if len(pos) else 0.0
+    used_l: set[int] = set()
     lo_idx = len(order) - 1
     for hi_idx, m_h in enumerate(order):
         if len(slots) >= max_pairs:
             break
         if hi_idx >= lo_idx:
             break
-        m_l = order[lo_idx]
-        if costs[m_h] <= costs[m_l]:
+        if link_cost is None:
+            m_l = order[lo_idx]
+            penalty = 0.0
+        else:
+            pool = [m for m in order[hi_idx + 1:lo_idx + 1]
+                    if m not in used_l]
+            if not pool:
+                break
+            m_l = min(pool, key=lambda m: float(costs[m])
+                      + float(link_cost[m_h, m]) * lc_scale)
+            penalty = float(link_cost[m_h, m_l]) * lc_scale
+        if costs[m_h] <= costs[m_l] + penalty:
+            reason = ("link_cost" if costs[m_h] > costs[m_l]
+                      else "balanced")
             cands.append(CandidateDecision(
                 m_h, m_l, float(costs[m_h]), float(costs[m_l]),
-                "skip", reason="balanced"))
+                "skip", reason=reason))
             break
         sel = agg.owner == m_h
         ids, cst = agg.live[sel], part_cost[sel]
-        c_mh, c_ml = float(costs[m_h]), float(costs[m_l])
+        c_mh, c_ml = float(costs[m_h]), float(costs[m_l]) + penalty
         if len(ids) == 0:
             cands.append(CandidateDecision(m_h, m_l, c_mh, c_ml, "skip",
                                            reason="no_partitions"))
@@ -401,7 +444,10 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
                 m_h, m_l, c_mh, c_ml, "subset",
                 pids=tuple(int(p) for p in subset),
                 moved_cost=float(total)))
-            lo_idx -= 1
+            if link_cost is None:
+                lo_idx -= 1
+            else:
+                used_l.add(m_l)
             continue
         # no subset fits → split the largest-cost splittable partition
         cost_of = {int(p): float(c) for p, c in zip(ids, cst)}
@@ -431,7 +477,10 @@ def plan_round(stats: S.StatsState, agg: RoundAggregate, parts, *,
             placed = True
             break
         if placed:
-            lo_idx -= 1
+            if link_cost is None:
+                lo_idx -= 1
+            else:
+                used_l.add(m_l)
         else:
             # every candidate of m_H failed — try the next m_H against
             # the same m_L (paper behavior)

@@ -65,7 +65,9 @@ class Swarm:
                  decay: float = 0.5, window_rounds: int = 4,
                  use_binary_search: bool = False, smoothing: float = 0.0,
                  cost_fn=None, seed: int = 0, max_pairs: int = 1,
-                 data_plane=None, active_machines: int | None = None):
+                 data_plane=None, active_machines: int | None = None,
+                 link_cost=None, trend_window: int = 0,
+                 trend_threshold: float = 0.35):
         self.g = grid_size
         self.m = num_machines
         self.beta = beta
@@ -113,6 +115,19 @@ class Swarm:
         self.data_weight = 0.0
         self.bill_data_migration = False
         self._moved_tuples = 0
+        # Geo extension (DESIGN.md §12): an (M, M) relative link-cost
+        # matrix folds per-link latency into pair matching (None keeps
+        # the paper's latency-blind scan), and ``trend_window > 0``
+        # arms the cost-trend rebalance trigger — under jittery links
+        # R(S) flaps and backpressure lies, so a sustained high
+        # cost-imbalance (CoV of member costs averaged over the window
+        # exceeding ``trend_threshold``) forces a rebalance even when
+        # the Fig-9 FSM would sit still.
+        self.link_cost = (None if link_cost is None
+                          else np.asarray(link_cost, np.float64))
+        self.trend_window = int(trend_window)
+        self.trend_threshold = float(trend_threshold)
+        self._trend: deque[float] = deque(maxlen=max(self.trend_window, 1))
 
     def attach_store(self, store, *, data_weight: float = 0.0,
                      bill_migration: bool = False) -> None:
@@ -232,6 +247,16 @@ class Swarm:
                            stage_from=fsm_before.stage,
                            stage_to=fsm_after.stage,
                            decision=decision, r_s=agg.r_s)
+            if self.trend_window > 0 and decision != balancer.REBALANCE:
+                cov = self._cost_trend(agg)
+                if (len(self._trend) >= self.trend_window
+                        and sum(self._trend) / len(self._trend)
+                        > self.trend_threshold):
+                    decision = balancer.REBALANCE
+                    self._trend.clear()
+                    if tr.enabled:
+                        tr.instant("trend_trigger", round=self.round_no,
+                                   cov=cov)
             rep = RoundReport(self.round_no, decision, agg.r_s,
                               wire_bytes=wire)
             plan = None
@@ -242,7 +267,8 @@ class Swarm:
                         dead=self.excluded, max_pairs=self.max_pairs,
                         use_binary_search=self.use_binary_search,
                         cost_fn=self.cost_fn, plane=self.plane,
-                        cap_factor=self.cap_factor)
+                        cap_factor=self.cap_factor,
+                        link_cost=self.link_cost)
                 with tr.span("apply_plan", round=self.round_no,
                              transfers=len(plan.transfers)):
                     self._apply_plan(plan, rep)
@@ -283,6 +309,34 @@ class Swarm:
         folds in query-migration accounting after it reindexes)."""
         if self.decision_log:
             self.decision_log[-1] = rec
+
+    def _cost_trend(self, agg) -> float:
+        """Push this round's member-cost imbalance (coefficient of
+        variation) onto the trend window and return it."""
+        member = np.ones(self.m, bool)
+        for d in self.excluded:
+            if 0 <= d < self.m:
+                member[d] = False
+        c = agg.costs[member]
+        mu = float(c.mean()) if len(c) else 0.0
+        cov = float(c.std() / mu) if mu > 0 else 0.0
+        self._trend.append(cov)
+        return cov
+
+    def note_transfer_event(self, round_no: int, kind: str) -> None:
+        """Fold an asynchronous transfer outcome (geo links: a retry or
+        abort observed ticks after the plan was recorded) back into the
+        round's flight-recorder record."""
+        from dataclasses import replace as _replace
+        for i in range(len(self.decision_log) - 1, -1, -1):
+            rec = self.decision_log[i]
+            if rec.round_no == round_no:
+                if kind == "retry":
+                    rec = _replace(rec, retries=rec.retries + 1)
+                else:
+                    rec = _replace(rec, aborts=rec.aborts + 1)
+                self.decision_log[i] = rec
+                return
 
     def _close_stats(self) -> None:
         """Algorithm-2 round close, served by the data plane when one is

@@ -545,11 +545,14 @@ class SwarmRouter(_GridRouter):
 
     def __init__(self, grid_size: int, num_machines: int, *, beta: int = 20,
                  decay: float = 0.5, use_binary_search: bool = False,
-                 max_pairs: int = 1, **kw):
+                 max_pairs: int = 1, link_cost=None, trend_window: int = 0,
+                 trend_threshold: float = 0.35, **kw):
         active = num_machines - int(kw.get("standby", 0) or 0)
         self.swarm = Swarm(grid_size, num_machines, beta=beta, decay=decay,
                            use_binary_search=use_binary_search,
-                           max_pairs=max_pairs, active_machines=active)
+                           max_pairs=max_pairs, active_machines=active,
+                           link_cost=link_cost, trend_window=trend_window,
+                           trend_threshold=trend_threshold)
         super().__init__(self.swarm.index, num_machines, **kw)
         self.swarm.plane = self.plane
         if self.store is not None:
@@ -563,6 +566,11 @@ class SwarmRouter(_GridRouter):
                        terms: np.ndarray | None = None) -> None:
         super()._index_queries(rects, terms)
         self.swarm.ingest_queries(rects)
+
+    def note_transfer_event(self, round_no: int, kind: str) -> None:
+        """Geo links: the engine observed a transfer retry/abort after
+        dispatch — record it on the round's DecisionRecord."""
+        self.swarm.note_transfer_event(round_no, kind)
 
     def fused_host_state(self) -> FusedHostState:
         from dataclasses import replace

@@ -51,7 +51,7 @@ import numpy as np
 
 from ..core import geometry
 from ..core.cost_model import CostReport, delivery_wire_bytes
-from ..ft import CoordinatorGroup
+from ..ft import CoordinatorGroup, LinkModel, LinkSpec
 from ..telemetry import NOOP, TelemetryConfig, Tracer, activate
 from .api import (NO_ROUND, EventStream, MachineFailure, MachineJoin,
                   MachineSlow, MembershipChange, ProbeBatch, QueryBatch,
@@ -81,6 +81,24 @@ class EngineConfig:
     heartbeat_timeout: int = 3      # missed beats before a machine is dead
     standby_machines: int = 0       # trailing slots that start outside
     #                                 the cluster (elastic join targets)
+    # geo fault model (DESIGN.md §12).  ``links`` adds a per-pair
+    # latency/jitter matrix: heartbeats and transfer payloads ride the
+    # links and arrive late; None keeps the instantaneous network (the
+    # golden-pinned default).  ``adaptive_detector`` swaps the fixed
+    # missed-beat counter for a phi-accrual-style per-member threshold
+    # learned from observed beat gaps, so jittery links do not cause
+    # false suspicion.  Interrupted transfers retry with exponential
+    # backoff up to ``max_transfer_retries`` attempts.
+    links: LinkSpec | None = None
+    adaptive_detector: bool = False
+    max_transfer_retries: int = 8
+    # a falsely-failed-over machine rejoins *cold*: its state restores
+    # from the last checkpoint and it serves at ``revive_cold_factor``
+    # of its capability for ``revive_recovery_ticks`` ticks before it
+    # is warm again.  Only the revival path pays this — genuine crash
+    # recovery (standby joins) is priced by the membership timeline.
+    revive_cold_factor: float = 0.25
+    revive_recovery_ticks: int = 6
     # None (default) keeps the zero-overhead no-op tracer; a
     # TelemetryConfig turns on spans/counters and (via trace_dir) the
     # JSONL + Perfetto exporters — see repro.telemetry / DESIGN.md §9
@@ -98,6 +116,9 @@ class Metrics:
     migration_bytes: list = field(default_factory=list)
     moved_tuples: list = field(default_factory=list)
     transfers: list = field(default_factory=list)     # rebalance pairs/tick
+    retried_transfers: list = field(default_factory=list)   # geo retries/tick
+    aborted_transfers: list = field(default_factory=list)   # geo aborts/tick
+    false_suspicions: list = field(default_factory=list)    # revived/tick
     snapshots: list = field(default_factory=list)     # one-shot probes/tick
     deliveries: list = field(default_factory=list)    # pub/sub fan-out/tick
     resident_tuples: list = field(default_factory=list)  # max per machine
@@ -117,6 +138,23 @@ class Metrics:
     def asarrays(self) -> dict:
         return {k: np.asarray(v) for k, v in self.__dict__.items()
                 if isinstance(v, list)}
+
+
+@dataclass
+class _InFlight:
+    """One transfer payload riding a geo link (links mode only): the
+    round's migration bytes are split across its transfers and each
+    share completes — and is billed — when it arrives at ``m_l``."""
+
+    m_h: int
+    m_l: int
+    round_no: int        # DecisionRecord round (retries fold back there)
+    moved_queries: int
+    bytes: int
+    tuples: int
+    sent: int
+    arrive: int
+    attempts: int = 1
 
 
 class StreamingEngine:
@@ -146,17 +184,45 @@ class StreamingEngine:
         self.tracer = (Tracer(tcfg)
                        if tcfg is not None and tcfg.enabled else NOOP)
         self._fused = None   # device-resident state cache (run_fused)
+        # geo fault model (DESIGN.md §12): per-pair link latency/jitter
+        # and the compiled chaos schedule (carried by the source, like
+        # membership timelines).  ``_faults`` gates every new code path
+        # so the default run is bit-identical to the pre-geo engine.
+        self.links = (LinkModel(self.cfg.links, m)
+                      if self.cfg.links is not None else None)
+        cspec = getattr(source, "chaos", None)
+        self.chaos = cspec.compile(m) if cspec is not None else None
+        self._faults = self.links is not None or self.chaos is not None
+        # cold-start grace: a member that has never been heard from is
+        # not "silent" until its first beat has had time to cross the
+        # slowest link — without this every cross-region machine is
+        # suspected at boot, before a beat could possibly arrive
+        self._boot_grace = max(self.cfg.heartbeat_timeout, 1) + (
+            self.links.max_delay_ticks() if self.links is not None else 0)
         # heartbeat table (ft layer): every member beats once per tick;
         # the group detects silent machines and elects by rank order
         self.coord = CoordinatorGroup(
-            m, heartbeat_timeout=max(self.cfg.heartbeat_timeout, 1))
+            m, heartbeat_timeout=max(self.cfg.heartbeat_timeout, 1),
+            adaptive=self.cfg.adaptive_detector)
         for s in range(m - standby, m):
             self.coord.suspend(s)
         self._coordinator = self.coord.coordinator()
         self._pending_detect: dict[int, int] = {}  # machine → detect tick
+        self._pending_beats: dict[int, list[int]] = {}  # arrive tick → who
+        self._in_flight: list[_InFlight] = []      # transfer payloads
+        self._partitioned: dict[int, int] = {}     # machine → heal tick
+        self._suspected: set[int] = set()          # live but evacuated
+        self._chaos_drop: set[int] = set()         # staged for this tick
+        self._chaos_delay: dict[int, int] = {}
+        self._recover_at: dict[int, int] = {}      # machine → warm tick
+        self._recover_cap: dict[int, float] = {}   # machine → warm factor
+        self.transfer_stats = {
+            "dispatched": 0, "completed": 0, "retried": 0, "aborted": 0,
+            "dispatched_bytes": 0, "billed_bytes": 0, "aborted_bytes": 0}
         # control/migration traffic of membership changes, folded into
         # the metrics row of the tick that records next
-        self._acc = np.zeros(4, np.int64)  # wire, migration, tuples, pairs
+        # (wire, migration, tuples, pairs, retried, aborted, false_susp)
+        self._acc = np.zeros(7, np.int64)
 
     def _eff_alive(self) -> np.ndarray:
         """The (M,) effective per-machine capacity mask: the alive mask
@@ -184,8 +250,13 @@ class StreamingEngine:
 
     def _silence(self, m: int) -> None:
         """The machine stops working and heartbeating; queued work on a
-        crashed machine is lost (at-most-once spouts)."""
+        crashed machine is lost (at-most-once spouts).  Beats already in
+        flight on a geo link still arrive (they were sent while alive) —
+        detection is delayed accordingly, never un-done."""
         self.alive[m] = False
+        self._suspected.discard(m)   # a real crash ends any suspicion
+        self._recover_at.pop(m, None)
+        self._recover_cap.pop(m, None)
         self.queue_units[m] = 0.0
         self.queue_tuples[m] = 0.0
 
@@ -234,8 +305,15 @@ class StreamingEngine:
             m = ev.machine
             if self.alive[m]:
                 self._silence(m)
-                self._pending_detect[m] = \
-                    t + max(self.cfg.heartbeat_timeout, 1) - 1
+                # instantaneous network: the detect tick is closed-form
+                # (timeout beats of silence).  With links/chaos the gap
+                # depends on in-flight beats and the adaptive threshold,
+                # so the value is only a watch marker — the fused
+                # boundary probe (_next_fault_tick) simulates the real
+                # detection tick.
+                self._pending_detect[m] = (
+                    t if self._faults
+                    else t + max(self.cfg.heartbeat_timeout, 1) - 1)
         elif isinstance(ev, MachineJoin):
             m = ev.machine
             if not self.alive[m]:
@@ -245,6 +323,9 @@ class StreamingEngine:
             self.alive[m] = True
             self.cap_factor[m] = float(ev.capacity_factor)
             self._pending_detect.pop(m, None)
+            self._suspected.discard(m)
+            self._recover_at.pop(m, None)   # explicit join sets its own cap
+            self._recover_cap.pop(m, None)
             self.coord.beat(m)
             self._absorb_outcome(self.router.ingest(
                 MachineJoin(m, t, float(ev.capacity_factor))))
@@ -257,14 +338,17 @@ class StreamingEngine:
             raise TypeError(f"not a membership change: {ev!r}")
 
     def _membership_tick(self, t: int) -> None:
-        """Top-of-tick membership processing: scheduled events, one
-        heartbeat round, and heartbeat-timeout failure detection."""
+        """Top-of-tick membership processing: scheduled events, chaos
+        injection, one heartbeat round (link-delayed under a geo
+        topology), failure detection — timeout-based for silenced
+        machines, suspicion of live-but-unheard ones — and in-flight
+        transfer arrivals."""
         for ev in self.stream.membership(t):
             self.apply_membership(ev)
+        self._chaos_tick(t)
         with self.tracer.span("heartbeat_scan", tick=t):
-            self.coord.tick()
-            for m in np.nonzero(self.alive)[0]:
-                self.coord.beat(int(m))
+            self._beat_tick(t)
+            live = None
             if self._pending_detect:
                 live = set(self.coord.live_members())
                 for m in [m for m in self._pending_detect
@@ -272,6 +356,262 @@ class StreamingEngine:
                     del self._pending_detect[m]
                     self._fused_sync_collectors()
                     self._notify_failure(m)
+            if self._faults:
+                if live is None:
+                    live = set(self.coord.live_members())
+                for m in map(int, np.nonzero(self.alive)[0]):
+                    if m in live or m in self._suspected:
+                        continue
+                    if self.coord.last_beat.get(m, 0) == 0 \
+                            and t < self._boot_grace:
+                        continue   # first beat still riding the link
+                    self._suspect_live(m, t)
+        if self._recover_at:
+            for m in [m for m, tt in self._recover_at.items() if tt <= t]:
+                if m in self._suspected:
+                    continue   # suspected again mid-restore: wait for
+                #              the next revival to restart the clock
+                del self._recover_at[m]
+                warm = self._recover_cap.pop(m)
+                self.cap_factor[m] = warm
+                self._absorb_outcome(self.router.ingest(
+                    MachineSlow(m, warm, t)))
+        self._transfer_tick(t)
+
+    # -- geo fault model (links + chaos; DESIGN.md §12) -----------------
+
+    def _chaos_tick(self, t: int) -> None:
+        """Apply this tick's chaos events: drops/delays are staged for
+        ``_beat_tick`` (one-tick effects), partitions open a window
+        during which the machine's beats and transfers cannot cross,
+        interrupts sever every in-flight transfer (each retries)."""
+        if self.chaos is None:
+            return
+        for e in self.chaos.events_at(t):
+            if self.tracer.enabled:
+                self.tracer.instant(f"chaos:{e.kind}", tick=t,
+                                    machine=e.machine)
+            if e.kind == "drop_beat":
+                self._chaos_drop.add(e.machine)
+            elif e.kind == "delay_beat":
+                self._chaos_delay[e.machine] = max(
+                    self._chaos_delay.get(e.machine, 0), e.delay)
+            elif e.kind == "partition":
+                self._partitioned[e.machine] = max(
+                    self._partitioned.get(e.machine, 0), t + e.duration)
+            elif e.kind == "interrupt" and self._in_flight:
+                self._in_flight = [
+                    f for f in self._in_flight if self._retry_transfer(f, t)]
+
+    def _beat_tick(self, t: int) -> None:
+        """One heartbeat round.  Without links/chaos every live machine
+        beats instantly (the pre-geo engine, bit for bit).  With them,
+        each beat rides the machine→leader link: partitioned or chaos-
+        dropped beats are lost, delayed ones land ``d`` ticks later via
+        ``_pending_beats``; a beat arriving from a *suspected* machine
+        revives it (false-suspicion recovery)."""
+        self.coord.tick()
+        if not self._faults:
+            for m in np.nonzero(self.alive)[0]:
+                self.coord.beat(int(m))
+            return
+        leader = self._coordinator
+        for m in map(int, np.nonzero(self.alive)[0]):
+            if self._partitioned.get(m, 0) > t or m in self._chaos_drop:
+                continue
+            d = (self.links.delay_ticks(m, leader, t)
+                 if self.links is not None else 0)
+            d += self._chaos_delay.get(m, 0)
+            if d <= 0:
+                self._deliver_beat(m, t)
+            else:
+                self._pending_beats.setdefault(t + d, []).append(m)
+        self._chaos_drop.clear()
+        self._chaos_delay.clear()
+        for m in self._pending_beats.pop(t, ()):
+            # in-flight beats arrive even if the sender crashed after
+            # sending — they delay detection, which is the point
+            self._deliver_beat(m, t)
+
+    def _deliver_beat(self, m: int, t: int) -> None:
+        self.coord.beat(m)
+        if m in self._suspected:
+            self._revive(m, t)
+
+    def _suspect_live(self, m: int, t: int) -> None:
+        """The detector lost a machine that is actually alive (dropped
+        or delayed beats, or a partition).  The cluster cannot know the
+        difference and must act: the router evacuates its partitions
+        exactly as for a real crash.  Unlike a crash, the machine keeps
+        draining its queue — and if a beat gets through later it rejoins
+        (``_revive``) and the suspicion is recorded as false."""
+        self._suspected.add(m)
+        self._fused_sync_collectors()
+        if self.tracer.enabled:
+            self.tracer.instant("failure_detected", tick=t, machine=m,
+                                suspected=True)
+        self._absorb_outcome(self.router.ingest(MachineFailure(m, t)))
+        self._refresh_coordinator()
+
+    def _revive(self, m: int, t: int) -> None:
+        """A suspected machine's beat arrived: it was never dead.  It
+        rejoins through the ordinary join path (the planner re-homes
+        load back over rounds); the leader is sticky, so a revival
+        never re-bills a coordinator failover (the false suspicion is
+        counted instead).  The rejoin is *cold*: the failover already
+        re-homed its state, so the machine restores from its last
+        checkpoint and serves at ``revive_cold_factor`` capability
+        until the warm tick — a false failover costs real capacity,
+        not just migration bytes."""
+        self._suspected.discard(m)
+        self._acc[6] += 1
+        if self.tracer.enabled:
+            self.tracer.instant("false_suspicion", tick=t, machine=m)
+        if self.cfg.revive_recovery_ticks > 0 \
+                and self.cfg.revive_cold_factor < 1.0:
+            warm = self._recover_cap.get(m, float(self.cap_factor[m]))
+            self._recover_cap[m] = warm
+            self._recover_at[m] = t + self.cfg.revive_recovery_ticks
+            self.cap_factor[m] = warm * self.cfg.revive_cold_factor
+        self._absorb_outcome(self.router.ingest(
+            MachineJoin(m, t, float(self.cap_factor[m]))))
+        self._refresh_coordinator()
+
+    def _transfer_tick(self, t: int) -> None:
+        """Settle in-flight transfer payloads due at ``t``: a dead or
+        suspected receiver aborts the transfer (its bytes are never
+        billed — the failure evacuation re-homed the state), a
+        partitioned endpoint forces a retry with backoff, otherwise the
+        payload lands — install work queues on the receiver and the
+        bytes are billed exactly once."""
+        if not self._in_flight:
+            return
+        keep = []
+        for f in self._in_flight:
+            if f.arrive > t:
+                keep.append(f)
+            elif not self.alive[f.m_l] or f.m_l in self._suspected:
+                self._abort_transfer(f, t)
+            elif (self._partitioned.get(f.m_l, 0) > t
+                  or self._partitioned.get(f.m_h, 0) > t):
+                if self._retry_transfer(f, t):
+                    keep.append(f)
+            else:
+                self._complete_transfer(f, t)
+        self._in_flight = keep
+
+    def _retry_transfer(self, f: _InFlight, t: int) -> bool:
+        """Re-send an interrupted transfer with exponential backoff
+        against the same (surviving) receiver; gives up after
+        ``max_transfer_retries`` attempts.  Returns False when the
+        transfer was aborted instead of re-queued."""
+        if f.attempts >= self.cfg.max_transfer_retries:
+            self._abort_transfer(f, t)
+            return False
+        f.attempts += 1
+        backoff = min(1 << (f.attempts - 1), 16)
+        d = (self.links.delay_ticks(f.m_h, f.m_l, t + backoff)
+             if self.links is not None else 1)
+        f.arrive = t + backoff + max(d, 0)
+        self._acc[4] += 1
+        self.transfer_stats["retried"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant("transfer_retry", tick=t, machine=f.m_l,
+                                m_h=f.m_h, attempts=f.attempts,
+                                arrive=f.arrive)
+        note = getattr(self.router, "note_transfer_event", None)
+        if note is not None and f.round_no >= 0:
+            note(f.round_no, "retry")
+        return True
+
+    def _abort_transfer(self, f: _InFlight, t: int) -> None:
+        """Drop a transfer whose receiver died (or whose retries ran
+        out).  Nothing is billed and nothing is lost: the receiver's
+        crash evacuation re-homed the logical partitions onto survivors
+        (including the ones this payload carried), so the moved queries
+        are installed by *that* outcome's transfers — billing this one
+        too would double-count."""
+        self._acc[5] += 1
+        self.transfer_stats["aborted"] += 1
+        self.transfer_stats["aborted_bytes"] += f.bytes
+        if self.tracer.enabled:
+            self.tracer.instant("transfer_abort", tick=t, machine=f.m_l,
+                                m_h=f.m_h, attempts=f.attempts)
+        note = getattr(self.router, "note_transfer_event", None)
+        if note is not None and f.round_no >= 0:
+            note(f.round_no, "abort")
+
+    def _complete_transfer(self, f: _InFlight, t: int) -> None:
+        self.queue_units[f.m_l] += (f.moved_queries
+                                    * self.cfg.migration_unit_cost)
+        self._acc[1] += f.bytes
+        self._acc[2] += f.tuples
+        self.transfer_stats["completed"] += 1
+        self.transfer_stats["billed_bytes"] += f.bytes
+        if self.tracer.enabled:
+            self.tracer.instant("transfer_complete", tick=t,
+                                machine=f.m_l, m_h=f.m_h,
+                                bytes=f.bytes, attempts=f.attempts)
+
+    def _settle_outcome(self, outcome, t: int | None = None) -> tuple:
+        """Install/reshard a round or recovery outcome and return the
+        traffic to bill on the current row: ``(wire, migration, tuples,
+        pairs)``.  Without links everything settles instantly (the
+        paper's atomic transfers — identical to the pre-geo engine).
+        With links, control traffic bills now but each transfer's
+        payload is enqueued on its link and bills at completion; the
+        logical reshard still applies immediately (routing follows the
+        new plan while state is in flight)."""
+        if not isinstance(outcome, RoundOutcome):
+            return (0, 0, 0, 0)
+        detailed = (outcome.moved_by_transfer
+                    and len(outcome.moved_by_transfer)
+                    == len(outcome.transfers))
+        if self.links is None or not outcome.transfers or not detailed:
+            self._install_moved_queries(outcome)
+            self._reshard_outcome(outcome)
+            return (outcome.wire_bytes, outcome.migration_bytes,
+                    outcome.moved_tuples, len(outcome.transfers))
+        self._reshard_outcome(outcome)
+        self._dispatch_transfers(
+            outcome, self.tick_no if t is None else t)
+        return (outcome.wire_bytes, 0, 0, len(outcome.transfers))
+
+    def _dispatch_transfers(self, outcome: RoundOutcome, t: int) -> None:
+        """Put an outcome's transfers in flight on their links.  The
+        round's migration bytes/tuples are split across transfers
+        proportionally to moved queries (cumulative rounding, so the
+        shares sum exactly); each share bills on arrival.  A zero-delay
+        link (intra-region at coarse ticks) completes its share
+        immediately — bit-identical to the instantaneous network."""
+        n_tr = len(outcome.transfers)
+        moved = [int(n) for n in outcome.moved_by_transfer]
+        tot_mv = sum(moved)
+        rec = outcome.decision_record
+        rno = int(rec.round_no) if rec is not None else -1
+        mig = max(int(outcome.migration_bytes), 0)
+        tup = max(int(outcome.moved_tuples), 0)
+        acc_b = acc_t = 0
+        cum = 0.0
+        for i, trf in enumerate(outcome.transfers):
+            cum += (moved[i] / tot_mv) if tot_mv else 1.0 / n_tr
+            b_to, t_to = int(round(mig * cum)), int(round(tup * cum))
+            d = self.links.delay_ticks(int(trf.m_h), int(trf.m_l), t)
+            fl = _InFlight(m_h=int(trf.m_h), m_l=int(trf.m_l),
+                           round_no=rno, moved_queries=moved[i],
+                           bytes=b_to - acc_b, tuples=t_to - acc_t,
+                           sent=t, arrive=t + max(d, 0))
+            acc_b, acc_t = b_to, t_to
+            self.transfer_stats["dispatched"] += 1
+            self.transfer_stats["dispatched_bytes"] += fl.bytes
+            if self.tracer.enabled:
+                self.tracer.instant("transfer_dispatch", tick=t,
+                                    machine=fl.m_l, m_h=fl.m_h,
+                                    bytes=fl.bytes, arrive=fl.arrive)
+            if fl.arrive <= t:
+                self._complete_transfer(fl, t)
+            else:
+                self._in_flight.append(fl)
 
     def _absorb_outcome(self, out) -> None:
         """Fold a membership change's RoundOutcome (emergency re-homing)
@@ -282,13 +622,10 @@ class StreamingEngine:
         if self.tracer.enabled and out.decision_record is not None:
             self.tracer.record_decision(out.decision_record,
                                         tick=self.tick_no)
-        self._install_moved_queries(out)
-        self._reshard_outcome(out)
-        self._acc += (out.wire_bytes, out.migration_bytes,
-                      out.moved_tuples, len(out.transfers))
+        self._acc[:4] += self._settle_outcome(out)
 
     def _take_acc(self) -> np.ndarray:
-        acc, self._acc = self._acc, np.zeros(4, np.int64)
+        acc, self._acc = self._acc, np.zeros(7, np.int64)
         return acc
 
     def _install_moved_queries(self, outcome: RoundOutcome) -> None:
@@ -399,7 +736,7 @@ class StreamingEngine:
             cfg.bp_inc, cfg.lambda_max)
         # 7. load-balancing round — at the end of each full interval
         #    (never at tick 0, when no load has accumulated yet)
-        outcome = NO_ROUND
+        round_traffic = (0, 0, 0, 0)
         if t > 0 and t % cfg.round_every == 0:
             outcome = self.router.on_round(t)
             if tr.enabled and outcome.decision_record is not None:
@@ -409,9 +746,10 @@ class StreamingEngine:
                                transfers=len(outcome.transfers),
                                moved_queries=outcome.moved_queries,
                                migration_bytes=outcome.migration_bytes)
-            # installing moved queries costs work on their receivers
-            self._install_moved_queries(outcome)
-            self._reshard_outcome(outcome)
+            # installing moved queries costs work on their receivers;
+            # under geo links the payloads go in flight instead and
+            # bill on arrival (_settle_outcome)
+            round_traffic = self._settle_outcome(outcome)
         # 8. persistence upkeep (ephemeral probe-window decay)
         self.router.end_tick()
         # 9. record.  The units-of-work factor is the query load served:
@@ -428,11 +766,14 @@ class StreamingEngine:
         mtr.utilization.append(processed_units / np.maximum(cfg.cap_units, 1e-9))
         # pub/sub fan-out ships one notification per expected delivery
         mtr.wire_bytes.append(
-            outcome.wire_bytes + int(acc[0])
+            round_traffic[0] + int(acc[0])
             + delivery_wire_bytes(dsum, self.router.workload.delivery_bytes))
-        mtr.migration_bytes.append(outcome.migration_bytes + int(acc[1]))
-        mtr.moved_tuples.append(outcome.moved_tuples + int(acc[2]))
-        mtr.transfers.append(len(outcome.transfers) + int(acc[3]))
+        mtr.migration_bytes.append(round_traffic[1] + int(acc[1]))
+        mtr.moved_tuples.append(round_traffic[2] + int(acc[2]))
+        mtr.transfers.append(round_traffic[3] + int(acc[3]))
+        mtr.retried_transfers.append(int(acc[4]))
+        mtr.aborted_transfers.append(int(acc[5]))
+        mtr.false_suspicions.append(int(acc[6]))
         mtr.snapshots.append(n_snap)
         mtr.deliveries.append(dsum)
         mtr.resident_tuples.append(d_max)
@@ -626,6 +967,9 @@ class StreamingEngine:
                 mtr.migration_bytes.append(int(acc[1]) if i == 0 else 0)
                 mtr.moved_tuples.append(int(acc[2]) if i == 0 else 0)
                 mtr.transfers.append(int(acc[3]) if i == 0 else 0)
+                mtr.retried_transfers.append(int(acc[4]) if i == 0 else 0)
+                mtr.aborted_transfers.append(int(acc[5]) if i == 0 else 0)
+                mtr.false_suspicions.append(int(acc[6]) if i == 0 else 0)
                 mtr.snapshots.append(0)
                 mtr.deliveries.append(d_i)
                 mtr.resident_tuples.append(float(resid[i]))
@@ -648,12 +992,18 @@ class StreamingEngine:
                                    transfers=len(outcome.transfers),
                                    moved_queries=outcome.moved_queries,
                                    migration_bytes=outcome.migration_bytes)
-                self._install_moved_queries(outcome)
-                self._reshard_outcome(outcome)
-                mtr.wire_bytes[-1] += outcome.wire_bytes
-                mtr.migration_bytes[-1] += outcome.migration_bytes
-                mtr.moved_tuples[-1] += outcome.moved_tuples
-                mtr.transfers[-1] += len(outcome.transfers)
+                rw, rm, rt, rp = self._settle_outcome(outcome, t=last)
+                # zero-delay transfer shares completed inside the settle
+                # bill through the accumulator — they belong to this
+                # round's tick row, exactly as the per-tick loop records
+                extra = self._take_acc()
+                mtr.wire_bytes[-1] += rw + int(extra[0])
+                mtr.migration_bytes[-1] += rm + int(extra[1])
+                mtr.moved_tuples[-1] += rt + int(extra[2])
+                mtr.transfers[-1] += rp + int(extra[3])
+                mtr.retried_transfers[-1] += int(extra[4])
+                mtr.aborted_transfers[-1] += int(extra[5])
+                mtr.false_suspicions[-1] += int(extra[6])
         # leave no deltas stranded on device: a later per-tick run()
         # or direct protocol use must see complete host statistics
         self._fused_sync_collectors()
@@ -757,21 +1107,87 @@ class StreamingEngine:
     def _next_boundary(self, t: int) -> int | None:
         """First tick ≥ ``t`` that must run on the host: a query/probe
         arrival, a scheduled membership change, or the heartbeat
-        detection of a pending failure.  All three schedules are
-        deterministic, so fused windows cut exactly there."""
+        detection of a pending failure.  Under the geo fault model,
+        also: the next chaos event, the next in-flight transfer
+        arrival, and the next tick the failure detector would change
+        its view (``_next_fault_tick``, a cloned-state look-ahead).
+        All schedules are deterministic, so fused windows cut exactly
+        there."""
         cands = [self.stream.next_arrival(t), self.stream.next_membership(t)]
-        cands += list(self._pending_detect.values())
+        if not self._faults:
+            cands += list(self._pending_detect.values())
+        else:
+            if self.chaos is not None:
+                cands.append(self.chaos.next_event(t))
+            if self._in_flight:
+                cands.append(min(f.arrive for f in self._in_flight))
+            if self._recover_at:
+                # a postponed restore (machine re-suspected mid-ramp)
+                # can sit in the past — never cut behind ``t``
+                cands.append(max(min(self._recover_at.values()), t))
+            cands.append(self._next_fault_tick(t))
         cands = [c for c in cands if c is not None]
         return min(cands) if cands else None
 
+    def _next_fault_tick(self, t: int) -> int | None:
+        """Look-ahead for the fused path under links/chaos: the first
+        tick in ``[t, t + window]`` at which the failure detector would
+        change the cluster's view — a watched machine (live, or silenced
+        and pending detection) leaving the detector's live set, or a
+        suspected machine's beat arriving (revival).  Runs on a *clone*
+        of the detector state; link delays are hash-sampled by
+        ``(src, dst, tick)``, so the probe consumes no RNG and predicts
+        the per-tick path exactly.  Chaos effects are not simulated —
+        the window is already cut at the next chaos event, before the
+        simulation could diverge."""
+        horizon = t + max(self.cfg.fused_window, 1) + 1
+        g = self.coord.clone()
+        pending = {tt: list(ms) for tt, ms in self._pending_beats.items()}
+        senders = [int(m) for m in np.nonzero(self.alive)[0]]
+        watch = set(senders) | set(self._pending_detect)
+        leader = self._coordinator
+        for u in range(t, horizon):
+            g.tick()
+            for m in senders:
+                if self._partitioned.get(m, 0) > u:
+                    continue
+                d = (self.links.delay_ticks(m, leader, u)
+                     if self.links is not None else 0)
+                if d <= 0:
+                    if m in self._suspected:
+                        return u           # revival fires at u
+                    g.beat(m)
+                else:
+                    pending.setdefault(u + d, []).append(m)
+            for m in pending.pop(u, ()):
+                if m in self._suspected:
+                    return u               # delayed revival fires at u
+                g.beat(m)
+            live = set(g.live_members())
+            for m in watch:
+                if m not in live and m not in self._suspected:
+                    if g.last_beat.get(m, 0) == 0 \
+                            and u < self._boot_grace:
+                        continue           # boot grace (same as the scan)
+                    return u               # new suspicion / detection
+        return None
+
     def _advance_heartbeats(self, ticks: int) -> None:
-        """Fast-forward the heartbeat table across a fused window: the
-        membership is constant inside one, so beating once at the final
-        clock equals beating every tick."""
-        for _ in range(ticks):
-            self.coord.tick()
-        for m in np.nonzero(self.alive)[0]:
-            self.coord.beat(int(m))
+        """Fast-forward the heartbeat table across a fused window.
+        Without links membership is constant inside one, so beating
+        once at the final clock equals beating every tick.  With links
+        each window tick runs the real beat-delivery logic (sends,
+        link-delayed arrivals) — ``_next_fault_tick`` guarantees no
+        suspicion, detection or revival can fire inside the window."""
+        if not self._faults:
+            for _ in range(ticks):
+                self.coord.tick()
+            for m in np.nonzero(self.alive)[0]:
+                self.coord.beat(int(m))
+            return
+        t0 = self.tick_no
+        for i in range(ticks):
+            self._beat_tick(t0 + i)
 
     def _mem_infeasible(self) -> bool:
         mem = self.router.memory_usage()

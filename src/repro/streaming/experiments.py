@@ -27,12 +27,14 @@ fused sweeps cannot collide.
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 import re
 from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from ..ft import ChaosSpec
 from ..queries import QueryModel, WorkloadSpec
 from ..telemetry import Stopwatch, Tracer
 from .api import Router
@@ -81,11 +83,17 @@ class RouterSpec:
     history_queries: int = 2000
     history_rounds: int = 20
     history_seed: int | None = None  # default: experiment seed + 1
+    # geo extensions (swarm only): fold the engine topology's per-link
+    # cost matrix into pair matching, and/or arm the cost-trend
+    # rebalance trigger (DESIGN.md §12).  Defaults keep the paper scan.
+    link_aware: bool = False
+    trend_window: int = 0
+    trend_threshold: float = 0.35
 
     def build(self, *, num_machines: int,
               workload: WorkloadSpec | None = None,
               data_plane: str | None = None, seed: int = 0,
-              standby: int = 0) -> Router:
+              standby: int = 0, link_cost=None) -> Router:
         kw = {"workload": workload, "data_plane": data_plane,
               "standby": standby}
         if self.kind == "replicated":
@@ -107,6 +115,10 @@ class RouterSpec:
         if self.kind == "swarm":
             return SwarmRouter(self.grid_size, num_machines, beta=self.beta,
                                decay=self.decay, max_pairs=self.max_pairs,
+                               link_cost=(link_cost if self.link_aware
+                                          else None),
+                               trend_window=self.trend_window,
+                               trend_threshold=self.trend_threshold,
                                **kw)
         raise ValueError(f"unknown router kind {self.kind!r}; "
                          f"one of {ROUTER_KINDS}")
@@ -130,6 +142,10 @@ class ScenarioSpec:
     query_burst: int = 500
     peak: float = 0.4
     membership: tuple[MembershipEvent, ...] = ()
+    # seeded fault injection (ft.chaos.ChaosSpec | None): dropped and
+    # delayed heartbeats, transient partitions, interrupted transfers —
+    # a sweepable timeline dimension exactly like ``membership``
+    chaos: ChaosSpec | None = None
     snapshot_every: int = 1
     # spatial-keyword knobs: count of auto-generated trending HotTerm
     # timelines (scenario "hot_hashtags"), their peak redirected stream
@@ -151,11 +167,12 @@ class ScenarioSpec:
                 for e in self.membership)
         snap = ("" if self.snapshot_every == 1
                 else f",snap/{self.snapshot_every}")
+        ch = "" if self.chaos is None else f",{self.chaos}"
         ht = ("" if not self.hot_terms
               else f",ht={self.hot_terms}x{self.term_peak}")
         vb = "" if not self.vocab else f",vocab={self.vocab}"
         return (f"{self.name}[{self.ticks}t,{self.preload_queries}q,"
-                f"{self.query_burst}b{peak}{mb}{snap}{ht}{vb}]")
+                f"{self.query_burst}b{peak}{mb}{snap}{ch}{ht}{vb}]")
 
     def build(self, *, seed: int = 0,
               workload: WorkloadSpec | None = None) -> ScenarioSource:
@@ -181,7 +198,8 @@ class ScenarioSpec:
                         peak=self.peak, query_burst=self.query_burst,
                         query_side=workload_query_side(workload),
                         membership=self.membership,
-                        snapshot_every=self.snapshot_every, **kw)
+                        snapshot_every=self.snapshot_every,
+                        chaos=self.chaos, **kw)
 
 
 @dataclass(frozen=True)
@@ -231,8 +249,15 @@ class ExperimentResult:
 
 
 def safe_label(label: str) -> str:
-    """A label flattened to a filesystem-safe trace-file stem."""
-    return re.sub(r"[^A-Za-z0-9._-]+", "_", label).strip("_")
+    """A label flattened to a filesystem-safe trace-file stem.  Long
+    labels (geo engine specs fold in links + chaos) are truncated with
+    a digest suffix so the stem stays unique and under the 255-byte
+    filename limit once ``.trace.json`` is appended."""
+    stem = re.sub(r"[^A-Za-z0-9._-]+", "_", label).strip("_")
+    if len(stem) > 160:
+        digest = hashlib.blake2s(label.encode(), digest_size=4).hexdigest()
+        stem = f"{stem[:160].rstrip('_')}__{digest}"
+    return stem
 
 
 def run(exp: Experiment) -> ExperimentResult:
@@ -246,10 +271,16 @@ def run(exp: Experiment) -> ExperimentResult:
         # plane instance (and folds into the label via the engine spec)
         from .sharded import sharded_plane
         data_plane = sharded_plane(exp.engine.devices)
+    link_cost = None
+    if exp.engine.links is not None:
+        from ..ft import LinkModel
+        link_cost = LinkModel(exp.engine.links,
+                              exp.engine.num_machines).cost_matrix()
     router = exp.router.build(num_machines=exp.engine.num_machines,
                               workload=exp.workload,
                               data_plane=data_plane, seed=exp.seed,
-                              standby=exp.engine.standby_machines)
+                              standby=exp.engine.standby_machines,
+                              link_cost=link_cost)
     eng = StreamingEngine(router, source, exp.engine)
     with Stopwatch() as sw:
         preload = eng.stream.preload(exp.scenario.preload_queries)

