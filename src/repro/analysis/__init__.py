@@ -1,0 +1,25 @@
+"""swarmlint — repo-native static analysis + runtime protocol sanitizer.
+
+Three layers, one package (DESIGN.md §13):
+
+* :mod:`repro.analysis.engine` + :mod:`repro.analysis.rules` — an
+  AST-based lint pass with SWARM-specific rules (SWM001–SWM006) that
+  mechanize the conventions the system's correctness rests on: shape
+  bucketing before ``jax.jit``, pure traced bodies, threaded RNG,
+  frozen events, the shared-timer discipline and HIGHEST-precision
+  count matmuls.
+* :mod:`repro.analysis.kernels` — a static signature checker that runs
+  every Pallas kernel entrypoint and its ``ref.py`` twin under
+  ``jax.eval_shape`` across a shape/dtype grid and diffs the abstract
+  signatures (no device, no data).
+* :mod:`repro.analysis.sanitizer` — a wrapping ``DataPlane`` plus
+  engine hooks (``EngineConfig(sanitize=True)`` / ``REPRO_SANITIZE=1``)
+  asserting the paper's §5 conservation laws every round, ASAN-style.
+
+CLI: ``python -m repro.analysis [paths...] [--format=github]``.
+"""
+from .engine import LintEngine, Violation, lint_paths
+from .sanitizer import ProtocolSanitizer, SanitizerError, SanitizingPlane
+
+__all__ = ["LintEngine", "Violation", "lint_paths",
+           "ProtocolSanitizer", "SanitizerError", "SanitizingPlane"]

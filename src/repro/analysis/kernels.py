@@ -1,0 +1,168 @@
+"""Static kernel signature checker — ``jax.eval_shape`` twin-diffing.
+
+Every Pallas kernel package ships an ``ops.py`` entrypoint (pad →
+kernel → slice) and a pure-jnp ``ref.py`` oracle.  The interpret-mode
+parity tests compare *values* on small shapes; this checker compares
+**abstract signatures** — output pytree structure, shapes and dtypes —
+across a grid of input shapes (tile-aligned and ragged) without a
+device or any data, so a signature drift (a transposed output, a dtype
+regression, a shape-dependent branch that breaks padding) is caught on
+any host in milliseconds.
+
+Used by ``python -m repro.analysis`` (on by default; ``--no-kernels``
+skips) and the CI ``analyze`` job.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+
+@dataclass
+class KernelCase:
+    """One entry/ref pair checked across ``arg_grids``: each grid entry
+    is a tuple of ``jax.ShapeDtypeStruct`` positional args; ``note``
+    labels the sweep in reports."""
+    name: str
+    entry: Callable[..., Any]
+    ref: Callable[..., Any]
+    arg_grids: Sequence[tuple]
+    note: str = ""
+
+
+@dataclass
+class SignatureMismatch:
+    case: str
+    args: str
+    detail: str
+
+    def text(self) -> str:
+        return f"{self.case}({self.args}): {self.detail}"
+
+
+@dataclass
+class KernelReport:
+    checked: int = 0
+    mismatches: list = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.mismatches
+
+
+def default_cases() -> list[KernelCase]:
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as SDS
+
+    from ..kernels import (flash_attention, keyword_match, knn_match,
+                           moe_histogram, spatial_match, stats_update)
+    from ..kernels.stats_update.ops import OUT_CH
+
+    f32, i32, bf16 = jnp.float32, jnp.int32, jnp.bfloat16
+
+    def inputs_ref(bank6):
+        # rebuild the full 8-channel bank (R/PRESPANQ need no input),
+        # run the oracle, select the maintained output channels
+        z = jnp.zeros_like(bank6[0])
+        full = jnp.stack([bank6[0], bank6[1], z, bank6[2], z,
+                          bank6[3], bank6[4], bank6[5]])
+        out = stats_update.close_round_ref(full)
+        return jnp.stack([out[c] for c in OUT_CH])
+
+    cases = [
+        KernelCase(
+            "spatial_match", spatial_match.spatial_match,
+            spatial_match.spatial_match_ref,
+            [(SDS((n, 2), f32), SDS((q, 4), f32))
+             for n, q in [(7, 5), (128, 64), (130, 257)]],
+            note="per-point / per-rect hit counts, ragged + aligned N,Q"),
+        KernelCase(
+            "keyword_match", keyword_match.keyword_match,
+            keyword_match.keyword_match_ref,
+            [(SDS((n, 2), f32), SDS((n, t), f32),
+              SDS((q, 4), f32), SDS((q, t), f32))
+             for n, t, q in [(16, 8, 4), (130, 33, 57)]],
+            note="spatial ∧ keyword-subset counts"),
+        KernelCase(
+            "knn_match", functools.partial(knn_match.knn_match, k=8),
+            lambda p, f: knn_match.knn_match_ref(p, f, 8),
+            [(SDS((n, 2), f32), SDS((q, 2), f32))
+             for n, q in [(64, 16), (200, 33)]],
+            note="k=8 ascending squared distances"),
+        KernelCase(
+            "moe_histogram",
+            functools.partial(moe_histogram.moe_histogram, num_experts=8),
+            lambda i, g: moe_histogram.moe_histogram_ref(i, g, 8),
+            [(SDS((t, k), i32), SDS((t, k), f32))
+             for t, k in [(64, 4), (130, 2)]],
+            note="per-expert (count, gate-load) histograms"),
+        KernelCase(
+            "stats_update.close_round", stats_update.close_round,
+            stats_update.close_round_ref,
+            [(SDS((8, p, g1), f32),) for p, g1 in [(8, 65), (33, 513)]],
+            note="Pallas Algorithm-2 round close vs oracle"),
+        KernelCase(
+            "stats_update.close_round_xla", stats_update.close_round_xla,
+            stats_update.close_round_ref,
+            [(SDS((8, p, g1), f32),) for p, g1 in [(8, 65), (33, 513)]],
+            note="portable XLA round close vs oracle"),
+        KernelCase(
+            "stats_update.close_round_inputs",
+            stats_update.close_round_inputs, inputs_ref,
+            [(SDS((6, p, g1), f32),) for p, g1 in [(8, 65), (33, 513)]],
+            note="transfer-minimal 6-in/5-out fold vs derived oracle"),
+        KernelCase(
+            "flash_attention", flash_attention.flash_attention,
+            flash_attention.attention_ref,
+            [(SDS((b, h, s, d), dt), SDS((b, h, s, d), dt),
+              SDS((b, h, s, d), dt))
+             for b, h, s, d in [(1, 2, 16, 8), (2, 4, 100, 16)]
+             for dt in (f32, bf16)],
+            note="causal self-attention, f32 + bf16, ragged seq"),
+    ]
+    return cases
+
+
+def _signature(fn, args):
+    import jax
+    out = jax.eval_shape(fn, *args)
+    leaves, treedef = jax.tree_util.tree_flatten(out)
+    return treedef, [(tuple(leaf.shape), str(leaf.dtype))
+                     for leaf in leaves]
+
+
+def check_kernel_signatures(cases: Sequence[KernelCase] | None = None
+                            ) -> KernelReport:
+    """Diff every case's entry vs ref abstract signature across its
+    shape grid; returns a report with one mismatch per divergence."""
+    report = KernelReport()
+    for case in (default_cases() if cases is None else cases):
+        for args in case.arg_grids:
+            desc = ", ".join(f"{tuple(a.shape)}:{a.dtype}" for a in args)
+            report.checked += 1
+            try:
+                tree_e, sig_e = _signature(case.entry, args)
+            except Exception as e:
+                report.mismatches.append(SignatureMismatch(
+                    case.name, desc, f"entry failed to trace: "
+                    f"{type(e).__name__}: {e}"))
+                continue
+            try:
+                tree_r, sig_r = _signature(case.ref, args)
+            except Exception as e:
+                report.mismatches.append(SignatureMismatch(
+                    case.name, desc, f"ref failed to trace: "
+                    f"{type(e).__name__}: {e}"))
+                continue
+            if tree_e != tree_r:
+                report.mismatches.append(SignatureMismatch(
+                    case.name, desc,
+                    f"output pytree differs: entry {tree_e} vs ref "
+                    f"{tree_r}"))
+            elif sig_e != sig_r:
+                report.mismatches.append(SignatureMismatch(
+                    case.name, desc,
+                    f"abstract signature differs: entry {sig_e} vs "
+                    f"ref {sig_r}"))
+    return report

@@ -1,0 +1,16 @@
+"""swarmlint rule registry (DESIGN.md §13 catalogs each invariant)."""
+from .jit_rules import JitRecompileHazard, TracedSideEffects
+from .precision_rules import LowPrecisionCountMatmul
+from .purity_rules import (FrozenEventAssignment, GlobalStateRNG,
+                           WallClockOutsideTimers)
+
+
+def default_rules():
+    return [JitRecompileHazard(), TracedSideEffects(), GlobalStateRNG(),
+            FrozenEventAssignment(), WallClockOutsideTimers(),
+            LowPrecisionCountMatmul()]
+
+
+__all__ = ["default_rules", "JitRecompileHazard", "TracedSideEffects",
+           "GlobalStateRNG", "FrozenEventAssignment",
+           "WallClockOutsideTimers", "LowPrecisionCountMatmul"]

@@ -11,6 +11,7 @@ Hash-collision semantics: bucket masks are a *conservative* encoding
 of the term sets, so these counts upper-bound exact per-term matching —
 collisions can only overcount, never drop a true match.
 """
+import jax
 import jax.numpy as jnp
 
 from ..spatial_match.ref import match_matrix
@@ -18,8 +19,10 @@ from ..spatial_match.ref import match_matrix
 
 def keyword_hit_matrix(points, pt_masks, rects, sub_masks):
     """(N, Q) bool fused spatial ∧ keyword-conjunction matrix."""
-    # miss[n, q] = number of q's buckets that n does not carry
-    miss = (1.0 - pt_masks) @ sub_masks.T
+    # miss[n, q] = number of q's buckets that n does not carry; exact
+    # mask contraction (bf16 MXU inputs would round counts, SWM006)
+    miss = jnp.matmul(1.0 - pt_masks, sub_masks.T,
+                      precision=jax.lax.Precision.HIGHEST)
     return match_matrix(points, rects) & (miss < 0.5)
 
 

@@ -20,12 +20,12 @@ Usage:
 import argparse
 import json
 import os
-import time
 import traceback
 
 import jax
 
 from .. import configs
+from ..telemetry.timers import Stopwatch
 from . import roofline as RL
 from .mesh import make_mesh, make_production_mesh
 from .specs import build_cell, lower_cell
@@ -34,7 +34,7 @@ from .specs import build_cell, lower_cell
 def run_one(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
             mesh_override=None, remat: str = "nothing", zero1: bool = True,
             microbatches: int = 2, layout: str = "tp", tag: str = "") -> dict:
-    t0 = time.time()
+    sw = Stopwatch().start()
     mesh = mesh_override or make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
@@ -53,10 +53,10 @@ def run_one(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
         rec["microbatches"] = mb
         rec["layout"] = layout
         lowered = lower_cell(cell, mesh)
-        rec["lower_s"] = round(time.time() - t0, 1)
-        t1 = time.time()
+        rec["lower_s"] = round(sw.stop().s, 1)
+        sw_c = Stopwatch().start()
         compiled = lowered.compile()
-        rec["compile_s"] = round(time.time() - t1, 1)
+        rec["compile_s"] = round(sw_c.stop().s, 1)
         rec["memory"] = RL.memory_stats(compiled)
         from ..models.model import num_periods
         from .analytic import analytic_cost

@@ -12,7 +12,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +21,7 @@ from .. import configs
 from ..models import init_params
 from ..models.model import decode_step, prefill
 from ..serve import SwarmRequestRouter
+from ..telemetry.timers import Stopwatch
 
 
 def main() -> None:
@@ -56,13 +56,13 @@ def main() -> None:
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (len(local), args.prompt_len)),
         jnp.int32)
-    t0 = time.time()
-    logits, cache, _ = prefill(params, cfg, token_ids=prompts,
-                               max_seq=args.prompt_len + args.steps)
-    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-    print(f"[serve] prefill {prompts.shape} in {time.time() - t0:.2f}s")
+    with Stopwatch() as sw:
+        logits, cache, _ = prefill(params, cfg, token_ids=prompts,
+                                   max_seq=args.prompt_len + args.steps)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    print(f"[serve] prefill {prompts.shape} in {sw.s:.2f}s")
 
-    t0 = time.time()
+    sw = Stopwatch().start()
     out = [tok]
     for step in range(args.steps - 1):
         logits, cache, _ = decode_step(params, cfg, cache, tok)
@@ -74,7 +74,7 @@ def main() -> None:
             print(f"[serve]   round {step}: SWARM {rep.action} "
                   f"(m_H={rep.m_h} → m_L={rep.m_l})")
     toks = jnp.concatenate(out, axis=1)
-    dt = time.time() - t0
+    dt = sw.stop().s
     print(f"[serve] decoded {toks.shape[0]}×{toks.shape[1]} tokens in "
           f"{dt:.2f}s ({toks.size / dt:.0f} tok/s on this host)")
     loads = router.replica_loads()

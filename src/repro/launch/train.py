@@ -14,7 +14,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +26,7 @@ from ..distributed import ExpertBalancer
 from ..distributed import sharding as SH
 from ..ft import StragglerMitigator
 from ..models import abstract_params, init_params
+from ..telemetry.timers import Stopwatch
 from ..train import (AdamWConfig, abstract_opt_state, init_opt_state,
                      make_train_step, opt_state_shardings)
 from .mesh import make_mesh
@@ -98,7 +98,7 @@ def main() -> None:
     it = PrefetchIterator(make_batch_iterator(cfg, args.batch, args.seq,
                                               seed=args.seed))
 
-    t0, tokens = time.time(), 0
+    sw, tokens = Stopwatch().start(), 0
     ctx = mesh or _nullcontext()
     with ctx:
         for step in range(start, args.steps):
@@ -117,7 +117,7 @@ def main() -> None:
             if step % 10 == 0 or step == args.steps - 1:
                 print(f"[train] step {step:5d} loss={float(metrics['loss']):.4f} "
                       f"gnorm={float(metrics['grad_norm']):.2f} "
-                      f"tok/s={tokens / (time.time() - t0):.0f}"
+                      f"tok/s={tokens / sw.stop().s:.0f}"
                       + (f" EP-moves={balancer.moves}" if balancer else ""))
             if args.ckpt_dir and step and step % args.ckpt_every == 0:
                 CKPT.save(args.ckpt_dir, step, params=params, opt_state=opt,

@@ -45,6 +45,7 @@ dispatch to the fused mode, so the experiment suite can sweep it.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -103,6 +104,12 @@ class EngineConfig:
     # TelemetryConfig turns on spans/counters and (via trace_dir) the
     # JSONL + Perfetto exporters — see repro.telemetry / DESIGN.md §9
     telemetry: TelemetryConfig | None = None
+    # runtime protocol sanitizer (repro.analysis.sanitizer, DESIGN.md
+    # §13): assert the conservation laws — queue/tuple conservation,
+    # disjoint partition cover, collector deposits == drains, billed ==
+    # resharded bytes — every tick/round, ASAN-style.  REPRO_SANITIZE=1
+    # enables it without touching experiment labels.
+    sanitize: bool = False
 
 
 @dataclass
@@ -223,6 +230,15 @@ class StreamingEngine:
         # the metrics row of the tick that records next
         # (wire, migration, tuples, pairs, retried, aborted, false_susp)
         self._acc = np.zeros(7, np.int64)
+        # protocol sanitizer (opt-in): wraps the router's data plane so
+        # collector/reshard laws are checked at the plane boundary, and
+        # hooks the tick/round paths below for the engine-level laws
+        self.san = None
+        if self.cfg.sanitize or os.environ.get("REPRO_SANITIZE") == "1":
+            from ..analysis.sanitizer import ProtocolSanitizer
+            self.san = ProtocolSanitizer()
+            if getattr(router, "plane", None) is not None:
+                router.plane = self.san.wrap_plane(router.plane)
 
     def _eff_alive(self) -> np.ndarray:
         """The (M,) effective per-machine capacity mask: the alive mask
@@ -717,6 +733,7 @@ class StreamingEngine:
         if infeasible:
             mtr.was_infeasible = True
         # 3. inject tuples (backpressure-throttled)
+        qt_pre = self.queue_tuples.sum() if self.san is not None else 0.0
         lam = 0.0 if infeasible else min(cfg.lambda_max, self.lam_bp)
         n = int(lam)
         dsum = 0.0
@@ -734,6 +751,8 @@ class StreamingEngine:
             self.queue_units, self.queue_tuples, self.lam_bp,
             cfg.cap_units, self._eff_alive(), cfg.bp_high, cfg.bp_dec,
             cfg.bp_inc, cfg.lambda_max)
+        if self.san is not None:
+            self.san.check_tick(self, qt_pre, n, float(w))
         # 7. load-balancing round — at the end of each full interval
         #    (never at tick 0, when no load has accumulated yet)
         round_traffic = (0, 0, 0, 0)
@@ -750,6 +769,8 @@ class StreamingEngine:
             # under geo links the payloads go in flight instead and
             # bill on arrival (_settle_outcome)
             round_traffic = self._settle_outcome(outcome)
+            if self.san is not None:
+                self.san.check_round(self, outcome)
         # 8. persistence upkeep (ephemeral probe-window decay)
         self.router.end_tick()
         # 9. record.  The units-of-work factor is the query load served:
@@ -993,6 +1014,8 @@ class StreamingEngine:
                                    moved_queries=outcome.moved_queries,
                                    migration_bytes=outcome.migration_bytes)
                 rw, rm, rt, rp = self._settle_outcome(outcome, t=last)
+                if self.san is not None:
+                    self.san.check_round(self, outcome)
                 # zero-delay transfer shares completed inside the settle
                 # bill through the accumulator — they belong to this
                 # round's tick row, exactly as the per-tick loop records

@@ -239,6 +239,10 @@ class ExperimentResult:
     wall_s: float
     router: Router
     tracer: Tracer | None = None   # the engine's tracer (telemetry runs)
+    # law-check counters from the protocol sanitizer when the run was
+    # sanitized (EngineConfig(sanitize=True) / REPRO_SANITIZE=1): a
+    # clean run proves the laws were *exercised*, not skipped
+    sanitizer_stats: dict | None = None
 
     @property
     def label(self) -> str:
@@ -290,7 +294,9 @@ def run(exp: Experiment) -> ExperimentResult:
     tracer = eng.tracer if eng.tracer.enabled else None
     if tracer is not None and tracer.config.trace_dir:
         tracer.export(tracer.config.trace_dir, safe_label(exp.label))
-    return ExperimentResult(exp, metrics, sw.s, router, tracer)
+    san = dict(eng.san.stats) if eng.san is not None else None
+    return ExperimentResult(exp, metrics, sw.s, router, tracer,
+                            sanitizer_stats=san)
 
 
 def sweep(routers=(RouterSpec(),), scenarios=(ScenarioSpec(),),

@@ -1,0 +1,500 @@
+"""swarmlint + kernel signature checker + protocol sanitizer tests.
+
+Each SWM rule gets a positive fixture (the rule fires) and a negative
+one (the compliant idiom stays clean); the kernel checker must catch a
+seeded ops/ref signature mismatch; the sanitizer must trip on injected
+conservation violations and stay silent — while provably exercising
+every law — on golden runs of both reference planes."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro
+from repro.analysis.engine import LintEngine, lint_paths
+from repro.analysis.sanitizer import (ProtocolSanitizer, SanitizerError,
+                                      SanitizingPlane)
+from repro.streaming.engine import EngineConfig
+from repro.streaming.experiments import (RouterSpec, ScenarioSpec,
+                                         run_suite, sweep)
+
+ENGINE = LintEngine()
+PKG_DIR = os.path.abspath(list(repro.__path__)[0])         # .../src/repro
+SRC_DIR = os.path.dirname(PKG_DIR)                         # .../src
+REPO_ROOT = os.path.dirname(SRC_DIR)
+
+
+def lint_snippet(tmp_path, code, name="snippet.py"):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(code)
+    return [v.rule for v in ENGINE.lint_file(str(p))]
+
+
+# ---------------------------------------------------------------------------
+# SWM001 — jit recompile hazards
+# ---------------------------------------------------------------------------
+
+def test_swm001_jit_in_loop_fires(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import jax
+def run(fns, xs):
+    for f in fns:
+        g = jax.jit(f)
+        g(xs)
+""")
+    assert "SWM001" in rules
+
+
+def test_swm001_inline_jit_call_fires(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import jax
+def f(x):
+    return jax.jit(lambda y: y + 1)(x)
+""")
+    assert "SWM001" in rules
+
+
+def test_swm001_cached_jit_clean(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import jax
+class Plane:
+    def __init__(self):
+        self._jit_tuple = jax.jit(self._tuple_fn)
+    def _tuple_fn(self, x):
+        return x * 2
+    def run(self, xs):
+        for x in xs:               # calling a cached jit in a loop is fine
+            self._jit_tuple(x)
+""")
+    assert "SWM001" not in rules
+
+
+# ---------------------------------------------------------------------------
+# SWM002 — side effects inside traced bodies
+# ---------------------------------------------------------------------------
+
+def test_swm002_clock_in_jitted_body_fires(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import time
+import jax
+
+@jax.jit
+def step(x):
+    t = time.time()
+    return x + t
+""")
+    assert "SWM002" in rules
+
+
+def test_swm002_rng_in_scan_body_fires(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import numpy as np
+from jax import lax
+
+def window(xs):
+    def body(carry, x):
+        noise = np.random.rand()
+        return carry + x + noise, x
+    return lax.scan(body, 0.0, xs)
+""")
+    assert "SWM002" in rules
+
+
+def test_swm002_print_in_shard_map_ref_fires(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+from jax.experimental.shard_map import shard_map
+
+def build(mesh, specs):
+    def inner(x):
+        print("tracing", x.shape)
+        return x * 2
+    return shard_map(inner, mesh=mesh, in_specs=specs, out_specs=specs)
+""")
+    assert "SWM002" in rules
+
+
+def test_swm002_effects_outside_traced_body_clean(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import jax
+
+@jax.jit
+def step(x):
+    return x * 2
+
+def wrapper(x):
+    out = step(x)
+    print("done", out.shape)       # host side: fine
+    return out
+""")
+    assert "SWM002" not in rules
+
+
+# ---------------------------------------------------------------------------
+# SWM003 — global-state RNG
+# ---------------------------------------------------------------------------
+
+def test_swm003_global_rng_fires(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import numpy as np
+xs = np.random.rand(100)
+np.random.seed(0)
+""")
+    assert rules.count("SWM003") == 2
+
+
+def test_swm003_threaded_generator_clean(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import numpy as np
+rng = np.random.default_rng(42)
+xs = rng.random(100)
+""")
+    assert "SWM003" not in rules
+
+
+# ---------------------------------------------------------------------------
+# SWM004 — frozen event mutation (seed list comes from streaming/api.py)
+# ---------------------------------------------------------------------------
+
+def test_swm004_event_assignment_fires(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+from repro.streaming.api import TupleBatch
+
+def resend(xy):
+    b = TupleBatch(xy)
+    b.tick = 1                     # frozen!
+    return b
+""")
+    assert "SWM004" in rules
+
+
+def test_swm004_setattr_bypass_and_annotation_fire(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+from repro.streaming.api import MachineFailure
+
+def patch(ev: MachineFailure):
+    ev.machine = 3
+    object.__setattr__(ev, "machine", 7)
+""")
+    assert rules.count("SWM004") == 2
+
+
+def test_swm004_replace_clean(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+from dataclasses import replace
+from repro.streaming.api import TupleBatch
+
+def rebase(b: TupleBatch, t):
+    other = {"tick": t}
+    other["tick"] = t + 1          # plain dict/subscript writes stay legal
+    return replace(b, xy=b.xy)
+""")
+    assert "SWM004" not in rules
+
+
+def test_swm004_local_frozen_dataclass(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+from dataclasses import dataclass
+
+@dataclass(frozen=True)
+class Snapshot:
+    tick: int
+
+def bump():
+    s = Snapshot(0)
+    s.tick = 1
+""")
+    assert "SWM004" in rules
+
+
+# ---------------------------------------------------------------------------
+# SWM005 — wall clock outside telemetry/timers.py
+# ---------------------------------------------------------------------------
+
+def test_swm005_raw_clock_fires(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import time
+t0 = time.time()
+t1 = time.perf_counter()
+""")
+    assert rules.count("SWM005") == 2
+
+
+def test_swm005_allowlisted_timers_module_clean():
+    assert lint_paths([os.path.join(PKG_DIR, "telemetry", "timers.py"),
+                       os.path.join(PKG_DIR, "telemetry", "tracer.py")]) == []
+
+
+def test_swm005_suppression_pragma(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import time
+t0 = time.time()  # swarmlint: disable=SWM005
+""")
+    assert "SWM005" not in rules
+
+
+# ---------------------------------------------------------------------------
+# SWM006 — low-precision count matmuls in kernels
+# ---------------------------------------------------------------------------
+
+def test_swm006_bare_matmul_on_counts_fires(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import jax.numpy as jnp
+
+def contract(hist, onehot):
+    return hist @ onehot.T
+""", name="kernels/histo/ops.py")
+    assert "SWM006" in rules
+
+
+def test_swm006_highest_precision_clean(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import jax
+import jax.numpy as jnp
+
+def contract(hist, onehot):
+    return jnp.matmul(hist, onehot.T,
+                      precision=jax.lax.Precision.HIGHEST)
+""", name="kernels/histo/ops.py")
+    assert "SWM006" not in rules
+
+
+def test_swm006_ignores_noncount_operands(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import jax.numpy as jnp
+
+def attn(q, k):
+    return q @ k.T                 # weights/activations: bf16 is fine
+""", name="kernels/attn/ops.py")
+    assert "SWM006" not in rules
+
+
+def test_swm006_host_numpy_outside_kernels_clean(tmp_path):
+    rules = lint_snippet(tmp_path, """\
+import numpy as np
+
+def host_side(hist, onehot):
+    return hist @ onehot.T         # host numpy: exact, exempt
+""")
+    assert "SWM006" not in rules
+
+
+# ---------------------------------------------------------------------------
+# repo self-check + CLI
+# ---------------------------------------------------------------------------
+
+def test_src_tree_is_clean():
+    assert lint_paths([SRC_DIR]) == []
+
+
+def _cli_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_DIR + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def test_cli_exits_clean_on_src():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src", "--no-kernels"],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=_cli_env())
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_flags_violations(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import time\nt = time.time()\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(bad), "--no-kernels",
+         "--format=github"],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=_cli_env())
+    assert proc.returncode == 1
+    assert "::error" in proc.stdout and "SWM005" in proc.stdout
+
+
+def test_discovery_skips_pycache_and_nonsource(tmp_path):
+    (tmp_path / "__pycache__").mkdir()
+    (tmp_path / "__pycache__" / "mod.py").write_text(
+        "import time\ntime.time()\n")
+    (tmp_path / "data.json").write_text("{}")
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    assert lint_paths([str(tmp_path)]) == []
+
+
+# ---------------------------------------------------------------------------
+# kernel signature checker
+# ---------------------------------------------------------------------------
+
+def test_kernel_signatures_match():
+    from repro.analysis.kernels import check_kernel_signatures
+    report = check_kernel_signatures()
+    assert report.checked >= 15
+    assert report.ok, "\n".join(m.text() for m in report.mismatches)
+
+
+def test_kernel_checker_catches_seeded_mismatch():
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as SDS
+
+    from repro.analysis.kernels import KernelCase, check_kernel_signatures
+
+    def entry(x):
+        return jnp.zeros(x.shape[0], jnp.int32)
+
+    def ref_transposed(x):                 # wrong shape
+        return jnp.zeros(x.shape[1], jnp.int32)
+
+    def ref_dtype(x):                      # wrong dtype
+        return jnp.zeros(x.shape[0], jnp.float32)
+
+    report = check_kernel_signatures([
+        KernelCase("seeded.shape", entry, ref_transposed,
+                   [(SDS((8, 3), jnp.float32),)]),
+        KernelCase("seeded.dtype", entry, ref_dtype,
+                   [(SDS((8, 3), jnp.float32),)]),
+    ])
+    assert len(report.mismatches) == 2
+    assert {m.case for m in report.mismatches} == {"seeded.shape",
+                                                   "seeded.dtype"}
+
+
+# ---------------------------------------------------------------------------
+# protocol sanitizer — golden runs stay silent, every law exercised
+# ---------------------------------------------------------------------------
+
+def _smoke(plane, *, fused=0, ticks=30, sanitize=True):
+    eng = EngineConfig(num_machines=6, lambda_max=500, cap_units=2e4,
+                       round_every=4, fused_window=fused,
+                       sanitize=sanitize)
+    sc = (ScenarioSpec("two_overlapping", ticks=ticks,
+                       preload_queries=200),)
+    return run_suite(sweep(routers=(RouterSpec("swarm"),), scenarios=sc,
+                           engine=eng, data_planes=(plane,)))
+
+
+@pytest.mark.parametrize("plane", ["numpy", "jax"])
+def test_sanitizer_silent_on_golden_run(plane):
+    fused = 8 if plane == "jax" else 0
+    (result,) = _smoke(plane, fused=fused).values()
+    stats = result.sanitizer_stats
+    assert stats is not None and stats["rounds"] > 0
+    assert stats["covers"] > 0
+    if fused:
+        assert stats["collector_drains"] > 0
+    else:
+        assert stats["ticks"] > 0
+
+
+def test_sanitizer_fused_numpy_golden_run():
+    (result,) = _smoke("numpy", fused=8).values()
+    stats = result.sanitizer_stats
+    assert stats["collector_drains"] > 0 and stats["rounds"] > 0
+
+
+def test_sanitizer_does_not_change_metrics():
+    (ra,) = _smoke("numpy", sanitize=True).values()
+    (rb,) = _smoke("numpy", sanitize=False).values()
+    assert rb.sanitizer_stats is None
+    np.testing.assert_array_equal(ra.asarrays()["throughput"],
+                                  rb.asarrays()["throughput"])
+
+
+# ---------------------------------------------------------------------------
+# protocol sanitizer — injected violations trip the matching law
+# ---------------------------------------------------------------------------
+
+def _host_state(g=8, p=4, m=2):
+    from repro.streaming.fused import FusedHostState
+    grid = np.repeat(np.arange(p, dtype=np.int32),
+                     g * g // p).reshape(g, g)
+    return FusedHostState(grid=grid,
+                          owner=np.array([0, 0, 1, 1], np.int32),
+                          qres=np.zeros(p), area_frac=np.full(p, 1 / p),
+                          q_machine=np.zeros(m), track_stats=True,
+                          n_alloc=p)
+
+
+def _cost_params():
+    from repro.streaming.planes import CostParams
+    return CostParams(c0=1.0, kappa_probe=0.1, kappa_match=0.1,
+                      q_cache=1.0, query_area=0.01, match_factor=1.0,
+                      tuple_driven=True, store_cost=0.0)
+
+
+def test_sanitizer_trips_on_collector_tamper():
+    from repro.streaming.planes import get_plane
+
+    san = ProtocolSanitizer()
+    wrapped = san.wrap_plane(get_plane("numpy"))
+    assert isinstance(wrapped, SanitizingPlane)
+    assert san.wrap_plane(wrapped) is wrapped      # idempotent
+
+    state = wrapped.make_state(_host_state())
+    rng = np.random.default_rng(0)
+    state, _ = wrapped.step(state, _cost_params(),
+                            rng.random((32, 2)), track_stats=True)
+    wrapped.collector_banks(state)                 # honest drain: silent
+    state.cn_rows[0, 0] += 5.0                     # a duplicated deposit
+    with pytest.raises(SanitizerError, match="collector-drain"):
+        wrapped.collector_banks(state)
+
+
+def test_sanitizer_trips_on_queue_leak(monkeypatch):
+    from repro.streaming import engine as engine_mod
+    from repro.streaming.baselines import SwarmRouter
+    from repro.streaming.sources import scenario
+
+    eng = engine_mod.StreamingEngine(
+        SwarmRouter(64, 4, beta=8),
+        scenario("two_overlapping", seed=0, horizon=12),
+        EngineConfig(num_machines=4, lambda_max=200, cap_units=1e4,
+                     sanitize=True))
+    eng.step()                                     # honest tick: silent
+
+    real = engine_mod.host_process_tick
+
+    def leaky(queue_units, queue_tuples, *a, **kw):
+        out = real(queue_units, queue_tuples, *a, **kw)
+        queue_tuples[0] += 123.0                   # tuples from nowhere
+        return out
+
+    monkeypatch.setattr(engine_mod, "host_process_tick", leaky)
+    with pytest.raises(SanitizerError, match="tuple-conservation"):
+        eng.step()
+
+
+def test_sanitizer_trips_on_broken_cover():
+    from repro.core.global_index import GlobalIndex
+
+    index = GlobalIndex.initialize(grid_size=16, num_machines=4)
+    san = ProtocolSanitizer()
+    san.check_cover(index, num_machines=4, tick=0)   # honest: silent
+    pid = int(index.parts.live_ids()[0])
+    index.cell_to_partition[index.parts.r0[pid],
+                            index.parts.c0[pid]] = -1   # punch a hole
+    with pytest.raises(SanitizerError, match="disjoint-cover"):
+        san.check_cover(index, num_machines=4, tick=1)
+
+
+def test_sanitizer_trips_on_aggregation_drift():
+    san = ProtocolSanitizer()
+    host = _host_state()
+    host.qres[:] = [10.0, 5.0, 3.0, 2.0]
+    host.q_machine[:] = [15.0, 5.0]
+    san.check_aggregation(host, tick=0)              # honest: silent
+    host.q_machine[1] += 2.0                         # phantom queries
+    with pytest.raises(SanitizerError, match="aggregation"):
+        san.check_aggregation(host, tick=1)
+
+
+def test_sanitizer_trips_on_reshard_mismatch():
+    class FakeOutcome:
+        migration_bytes = 1000
+
+    san = ProtocolSanitizer()
+    san.check_reshard(1000, FakeOutcome(), sharded=True)     # silent
+    with pytest.raises(SanitizerError, match="reshard-billing"):
+        san.check_reshard(960, FakeOutcome(), sharded=True)
+    with pytest.raises(SanitizerError, match="reshard-billing"):
+        san.check_reshard(8, FakeOutcome(), sharded=False)
